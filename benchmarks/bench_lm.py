@@ -1,0 +1,71 @@
+"""LM substrate micro-benchmarks on CPU (smoke configs, compiled).
+
+Wall-times here are CPU numbers for the reduced configs — they demonstrate
+the step functions compile+run end to end and give per-arch relative cost;
+the TPU performance story lives in the roofline table (§Roofline), which is
+derived from the dry-run's compiled artifacts, not from this machine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.data.tokens import TokenPipeline
+from repro.models import model
+from repro.train import TrainHParams, init_state, make_train_step
+
+from .common import emit, timeit
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.key(0)
+    B, S = 2, 64
+    for name in sorted(ARCHS):
+        cfg = get_config(name, smoke=True)
+        hp = TrainHParams(total_steps=10, warmup_steps=0)
+        state = init_state(key, cfg, hp)
+        step = jax.jit(make_train_step(cfg, hp))
+        pipe = TokenPipeline(
+            cfg.vocab, cfg.text_len(S), B, seed=0,
+            n_frames=cfg.n_frames, n_patches=cfg.n_patches,
+            d_model=cfg.d_model,
+        )
+        batch = pipe.batch_at(0)
+        t_train = timeit(
+            lambda: jax.block_until_ready(step(state, batch)[1]["loss"]),
+            repeats=3,
+        )
+        params = state.params
+        cache = model.init_cache(cfg, B, max_len=128)
+        dec = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos, cfg)
+        )
+        tok = jnp.zeros((B, 1), jnp.int32)
+        t_dec = timeit(
+            lambda: jax.block_until_ready(
+                dec(params, tok, cache, jnp.asarray(0, jnp.int32))[0]
+            ),
+            repeats=5,
+        )
+        rows.append(
+            {
+                "arch": name,
+                "train_step_s": t_train,
+                "decode_step_s": t_dec,
+                "tok_s_train": B * cfg.text_len(S) / t_train,
+                "tok_s_decode": B / t_dec,
+            }
+        )
+    emit("lm_smoke_steps", rows)
+    return rows
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Union-commutativity as the distribution rule (paper Prop. 4.1).
+
+Measures the core scaling property the multi-pod design leans on: cofactor
+computation over P partitions = P local Grams + one tiny [p, p] reduction.
+On one host this shows the work-partitioning is exact and the combine cost
+is O(p²) regardless of rows — the psum payload measured in the dry-run's
+collective table is this same matrix.
+
+Also benchmarks feature scaling (paper §4.2): single fused pass per
+feature over the union of relations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import compute_scale_factors, design_matrix
+from repro.core.distributed import partitioned_cofactors_host
+from repro.data.synthetic import favorita_like
+
+from .common import emit, timeit
+
+
+def run() -> list:
+    bundle = favorita_like(96, 24, 48)
+    cols = bundle.features + [bundle.label]
+    joined = bundle.store.materialize_join()
+    z = design_matrix(joined, cols)
+    rows = []
+    base = None
+    for parts in (1, 2, 4, 8, 16):
+        t = timeit(
+            lambda: partitioned_cofactors_host(z, cols, parts), repeats=3
+        )
+        full = partitioned_cofactors_host(z, cols, parts).matrix()
+        ref = partitioned_cofactors_host(z, cols, 1).matrix()
+        np.testing.assert_allclose(full, ref, rtol=1e-9)
+        base = base or t
+        rows.append(
+            {
+                "partitions": parts,
+                "rows": z.shape[0],
+                "sec": t,
+                "combine_payload_B": full.nbytes,
+            }
+        )
+    t_scale = timeit(
+        lambda: compute_scale_factors(
+            bundle.store, bundle.features, bundle.label
+        ),
+        repeats=3,
+    )
+    rows.append(
+        {"partitions": "feature_scaling", "rows": bundle.store.total_rows(),
+         "sec": t_scale, "combine_payload_B": 0}
+    )
+    emit("union_commutativity_scaling", rows)
+    return rows
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

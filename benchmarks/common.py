@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, CSV emission, result directory."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over ``repeats`` calls."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    """Print a small CSV block and persist JSON under results/."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    if not rows:
+        print(f"[{name}] (no rows)")
+        return
+    cols = list(rows[0])
+    print(f"== {name} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

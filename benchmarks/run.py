@@ -1,0 +1,57 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (+ substrate benches):
+
+  table2_factorized_versions   — Table 2 (v1–v6, fact vs noPre)
+  figure9_engines              — Fig. 9 (in-memory vs row-engine proxy)
+  figure23_aggregates          — Figs. 2–3 (COUNT / SUM over factorization)
+  union_commutativity_scaling  — Prop. 4.1 as the distribution rule
+  polynomial_extension         — §6 outlook (beyond-paper degree-d)
+  kernel_hotspots              — hot-aggregate arithmetic intensity
+  lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
+
+JSON mirrors land in benchmarks/results/.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from . import (
+        bench_aggregates,
+        bench_engines,
+        bench_factorized,
+        bench_kernels,
+        bench_lm,
+        bench_polynomial,
+        bench_scaling,
+    )
+
+    suites = [
+        ("table2 (factorized versions)", bench_factorized.main),
+        ("figure9 (engine comparison)", bench_engines.main),
+        ("figures2-3 (aggregates)", bench_aggregates.main),
+        ("union commutativity scaling", bench_scaling.main),
+        ("polynomial extension", bench_polynomial.main),
+        ("kernel hotspots", bench_kernels.main),
+        ("lm smoke steps", bench_lm.main),
+    ]
+    failures = 0
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        print(f"\n#### {name}")
+        try:
+            fn()
+            print(f"#### {name}: ok ({time.perf_counter() - t0:.1f}s)")
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"#### {name}: FAILED — {e!r}")
+    print(f"\n[benchmarks] {len(suites) - failures}/{len(suites)} suites ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

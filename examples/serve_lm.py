@@ -1,0 +1,67 @@
+"""Batched serving example (deliverable b): continuous batching engine.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+
+Boots the engine on a smoke config, drives a mixed trace of requests
+through slot-based continuous batching, and verifies one request against
+the full-forward greedy oracle.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model
+from repro.serve import Engine, Request, ServeConfig
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mixtral-8x7b")
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--slots", type=int, default=3)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = model.init_params(jax.random.key(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(slots=args.slots, prefill_len=16,
+                                          max_len=96))
+    rng = np.random.RandomState(0)
+    lens = {}
+    for uid in range(args.requests):
+        plen = int(rng.randint(4, 14))
+        toks = [int(t) for t in rng.randint(1, cfg.vocab, plen)]
+        n_new = int(rng.randint(4, 12))
+        eng.submit(Request(uid=uid, tokens=toks, max_new_tokens=n_new))
+        lens[uid] = (plen, n_new, toks)
+
+    results = eng.run()
+    total = 0
+    for r in sorted(results, key=lambda r: r.uid):
+        total += len(r.tokens)
+        print(f"req {r.uid}: prompt {r.prompt_len:2d} -> "
+              f"{len(r.tokens):2d} new tokens in {r.latency_s * 1e3:6.1f} ms "
+              f"| {r.tokens}")
+
+    # verify one request against the full-forward greedy oracle
+    uid = 0
+    plen, n_new, toks = lens[uid]
+    serve_cfg = dataclasses.replace(cfg, moe_capacity=cfg.moe_capacity_serve)
+    ref = list(toks)
+    for _ in range(n_new):
+        lg, _ = model.forward(
+            params, {"tokens": jnp.asarray([ref], jnp.int32)}, serve_cfg
+        )
+        ref.append(int(jnp.argmax(lg[0, -1, : cfg.vocab])))
+    got = next(r for r in results if r.uid == uid).tokens
+    assert got == ref[plen:], (got, ref[plen:])
+    print(f"\n[serve_lm] {total} tokens generated; "
+          f"request {uid} verified against full-forward greedy — exact match")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end LM training driver (deliverable b): ~100M params, a few
+hundred steps, full production stack — config -> token pipeline -> jit'd
+train step -> fault-tolerant loop with checkpoints.
+
+    # laptop-scale sanity run (~2 min on CPU):
+    PYTHONPATH=src python examples/train_lm.py
+
+    # the full ~100M / 300-step run (sized for one accelerator host):
+    PYTHONPATH=src python examples/train_lm.py --preset paper
+
+    # any assigned architecture's smoke config trains with the same driver:
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b
+
+Demonstrates: resume (rerun the same command — it continues from the last
+checkpoint), preemption (Ctrl-C writes an emergency checkpoint), watchdog
+metrics, and the paper-faithful loss curve on the Markov token stream.
+"""
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config, paper_arch
+from repro.data.tokens import TokenPipeline
+from repro.train import (
+    LoopConfig,
+    TrainHParams,
+    init_state,
+    make_train_step,
+    run_loop,
+)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--preset", choices=["cpu", "paper"], default="cpu")
+    p.add_argument("--arch", default=None,
+                   help="train an assigned arch's smoke config instead")
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = p.parse_args()
+
+    if args.arch:
+        cfg = get_config(args.arch, smoke=True)
+        steps = args.steps or 60
+        batch, seq = 8, 64
+    elif args.preset == "paper":
+        cfg = paper_arch()  # ~100M llama-family decoder
+        steps = args.steps or 300
+        batch, seq = 16, 512
+    else:
+        cfg = get_config("smollm-135m", smoke=True)
+        steps = args.steps or 120
+        batch, seq = 16, 128
+
+    hp = TrainHParams(peak_lr=3e-3, total_steps=steps,
+                      warmup_steps=max(steps // 20, 1))
+    state = init_state(jax.random.key(0), cfg, hp)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{steps} steps @ {batch}x{seq}")
+
+    pipe = TokenPipeline(
+        vocab=cfg.vocab, seq_len=cfg.text_len(seq), global_batch=batch,
+        seed=0, n_frames=cfg.n_frames, n_patches=cfg.n_patches,
+        d_model=cfg.d_model,
+    )
+    step = jax.jit(make_train_step(cfg, hp))
+    lc = LoopConfig(
+        total_steps=steps,
+        checkpoint_dir=os.path.join(args.ckpt, cfg.name),
+        checkpoint_every=max(steps // 4, 10),
+        log_every=max(steps // 15, 1),
+        handle_signals=True,
+    )
+    result = run_loop(state, step, pipe.batches(), lc)
+    if result.history:
+        first, last = result.history[0], result.history[-1]
+        import math
+        print(f"[train_lm] loss {first['loss']:.4f} -> {last['loss']:.4f} "
+              f"(uniform floor ln V = {math.log(cfg.vocab):.2f}); "
+              f"steps/s = {1.0 / max(last['sec'], 1e-9):.2f}, "
+              f"stragglers = {result.straggler_steps}")
+    print(f"[train_lm] checkpoints in {lc.checkpoint_dir} — rerun to resume")
+
+
+if __name__ == "__main__":
+    main()

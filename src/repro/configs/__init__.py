@@ -1,0 +1,135 @@
+"""Architecture registry: the 10 assigned architectures × 4 input shapes.
+
+``get_config("mixtral-8x7b")`` returns the full published config;
+``get_config("mixtral-8x7b", smoke=True)`` the reduced same-family variant
+used by CPU smoke tests.  ``input_specs(cfg, shape)`` builds the
+ShapeDtypeStruct stand-ins for every model input of a (arch × shape) cell —
+weak-type-correct, shardable, never allocating — which is what the multi-pod
+dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, Block, ModelConfig, ShapeConfig
+from . import (
+    deepseek_67b,
+    granite_20b,
+    jamba_1_5_large_398b,
+    llava_next_mistral_7b,
+    mixtral_8x7b,
+    olmo_1b,
+    qwen2_moe_a2_7b,
+    smollm_135m,
+    whisper_medium,
+    xlstm_1_3b,
+)
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "Block",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "input_specs",
+    "paper_arch",
+]
+
+_MODULES = {
+    "whisper-medium": whisper_medium,
+    "smollm-135m": smollm_135m,
+    "deepseek-67b": deepseek_67b,
+    "olmo-1b": olmo_1b,
+    "granite-20b": granite_20b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+}
+
+ARCHS: Dict[str, ModelConfig] = {
+    name: mod.CONFIG for name, mod in _MODULES.items()
+}
+
+SMOKE_ARCHS: Dict[str, ModelConfig] = {
+    name: mod.SMOKE for name, mod in _MODULES.items()
+}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKE_ARCHS if smoke else ARCHS
+    if name not in table:
+        raise KeyError(
+            f"unknown architecture {name!r}; available: {sorted(table)}"
+        )
+    return table[name]
+
+
+def paper_arch() -> ModelConfig:
+    """The ~100M decoder used by the end-to-end training example — llama
+    family, sized so a few hundred steps run on CPU/laptop scale."""
+    return ModelConfig(
+        name="repro-100m",
+        family="dense",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_ff=2048,
+        vocab=32768,
+        pattern=(Block("attn", "mlp"),),
+        tie_embeddings=True,
+        dtype_name="float32",
+        param_dtype_name="float32",
+        remat=False,
+        skip_shapes=("long_500k",),
+    )
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, batch_override: Optional[int] = None
+):
+    """ShapeDtypeStructs for every input of one (arch × shape) cell.
+
+    * train:    {tokens, labels} (+ frames / patches stubs)
+    * prefill:  {tokens} (+ frames / patches)
+    * decode:   {token, cur_pos}; the KV/state cache ShapeDtypeStructs come
+      from ``jax.eval_shape(model.init_cache, ...)`` in the dry-run driver.
+    """
+    b = batch_override or shape.global_batch
+    i32 = jnp.int32
+    act = cfg.dtype
+
+    def tok(s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "cur_pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    s_text = cfg.text_len(shape.seq_len)
+    if s_text <= 0:
+        raise ValueError(
+            f"{cfg.name}: modality prefix {cfg.n_patches} exceeds "
+            f"seq_len {shape.seq_len}"
+        )
+    specs = {"tokens": tok(s_text)}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frames, cfg.d_model), act
+        )
+    if cfg.n_patches:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), act
+        )
+    if shape.kind == "train":
+        specs["labels"] = tok(s_text)
+    return specs

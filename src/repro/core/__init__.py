@@ -1,0 +1,75 @@
+"""Core factorized-learning engine — the paper's primary contribution.
+
+Layering (paper section in parentheses):
+
+* ``relation`` / ``store``      — columnar in-memory database (§4, HyPer role)
+* ``variable_order``            — extended variable orders (§2.2, §4.1)
+* ``factorize``                 — degree-≤2 aggregate pushdown (§2.3, §4.3)
+* ``cofactor``                  — factorized vs materialized cofactors (§3.4)
+* ``gd``                        — BGD on cofactor matrices (§4.4)
+* ``scaling``                   — feature scaling + θ rescale (§3.3, §4.2)
+* ``regression``                — the full pipeline + Table-2 versions (§4.5)
+* ``polynomial``                — beyond-paper degree-d extension (§6 outlook)
+* ``distributed``               — union-commutativity as data parallelism
+"""
+
+from .cofactor import (
+    Cofactors,
+    cofactors_factorized,
+    cofactors_from_matrix,
+    cofactors_materialized,
+    cofactors_row_engine,
+    design_matrix,
+)
+from .factorize import FactorizedEngine
+from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
+from .regression import (
+    VERSIONS,
+    RegressionConfig,
+    RegressionResult,
+    linear_regression,
+)
+from .relation import Dictionary, Relation
+from .scaling import (
+    ScaleFactors,
+    compute_scale_factors,
+    predict,
+    rescale_theta,
+)
+from .store import Store
+from .variable_order import (
+    INTERCEPT,
+    VariableOrder,
+    validate,
+    variable_order_from_store,
+)
+
+__all__ = [
+    "Cofactors",
+    "Dictionary",
+    "FactorizedEngine",
+    "GDConfig",
+    "GDResult",
+    "INTERCEPT",
+    "Relation",
+    "RegressionConfig",
+    "RegressionResult",
+    "ScaleFactors",
+    "Store",
+    "VariableOrder",
+    "VERSIONS",
+    "bgd_cofactor",
+    "bgd_data",
+    "cofactors_factorized",
+    "cofactors_from_matrix",
+    "cofactors_materialized",
+    "cofactors_row_engine",
+    "compute_scale_factors",
+    "design_matrix",
+    "linear_regression",
+    "predict",
+    "rescale_theta",
+    "solve_cofactor",
+    "validate",
+    "variable_order_from_store",
+]

@@ -1,0 +1,124 @@
+"""Cofactor matrices: factorized vs. materialized ("noPre") paths (paper §3.4).
+
+Three engines, mirroring the paper's evaluation matrix:
+
+* ``cofactors_factorized`` (re-exported)  — one pass over the factorized join
+  (the paper's ``fact`` versions), O(factorization size).
+* ``cofactors_materialized``              — flat join then Gram matrix
+  X^T X (the ``noPre`` baseline), O(|D|^rho*); accelerated by the Pallas
+  ``gram`` kernel when ``use_kernel=True``.
+* ``cofactors_row_engine``                — row-at-a-time interpreted loop,
+  the *disk-row-engine proxy* standing in for PostgreSQL in the
+  engine-comparison benchmark (Fig. 9 analogue).  Never used for training.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .factorize import Cofactors, cofactors_factorized
+from .relation import Relation
+from .store import Store
+
+__all__ = [
+    "Cofactors",
+    "cofactors_factorized",
+    "cofactors_materialized",
+    "cofactors_from_matrix",
+    "cofactors_row_engine",
+    "design_matrix",
+]
+
+
+def design_matrix(
+    joined: Relation, features: Sequence[str], scale=None
+) -> np.ndarray:
+    """Extract the [m, k] feature matrix from a materialized join, applying
+    lazy view rescaling (paper §4.2) when ``scale`` is given."""
+    cols = []
+    for f in features:
+        c = joined.column(f).astype(np.float64)
+        if scale is not None:
+            c = scale.transform(f, c)
+        cols.append(c)
+    if not cols:
+        return np.zeros((joined.num_rows, 0))
+    return np.stack(cols, axis=1)
+
+
+@jax.jit
+def _gram_jnp(x):
+    ones = jnp.ones((x.shape[0],), dtype=x.dtype)
+    return x.T @ x, x.T @ ones
+
+
+def cofactors_from_matrix(
+    x: np.ndarray, features: Sequence[str], use_kernel: bool = False
+) -> Cofactors:
+    """Gram-matrix cofactors of an already-materialized design matrix."""
+    m = x.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        quad = np.asarray(kops.gram(jnp.asarray(x, dtype=jnp.float32)))
+        lin = np.asarray(jnp.asarray(x, dtype=jnp.float32).sum(axis=0))
+    else:
+        quad, lin = _gram_jnp(jnp.asarray(x, dtype=jnp.float32))
+        quad, lin = np.asarray(quad), np.asarray(lin)
+    return Cofactors(
+        count=float(m),
+        lin=lin.astype(np.float64),
+        quad=quad.astype(np.float64),
+        features=list(features),
+    )
+
+
+def cofactors_materialized(
+    store: Store,
+    features: Sequence[str],
+    relations: Optional[Sequence[str]] = None,
+    use_kernel: bool = False,
+    scale=None,
+) -> Cofactors:
+    """The non-factorized ("noPre") path: flat join, then X^T X."""
+    joined = store.materialize_join(relations)
+    x = design_matrix(joined, features, scale=scale)
+    return cofactors_from_matrix(x, features, use_kernel=use_kernel)
+
+
+def cofactors_row_engine(
+    store: Store,
+    features: Sequence[str],
+    relations: Optional[Sequence[str]] = None,
+    scale=None,
+) -> Cofactors:
+    """Row-at-a-time interpreted engine (disk-row-engine proxy for Fig. 9).
+
+    Deliberately tuple-oriented: iterates Python-level rows and accumulates
+    scalar products, the way a Volcano-style executor touches data.
+    """
+    joined = store.materialize_join(relations)
+    x = design_matrix(joined, features, scale=scale)
+    k = len(features)
+    quad = [[0.0] * k for _ in range(k)]
+    lin = [0.0] * k
+    m = 0
+    for row in x:  # noqa: B007 — intentionally interpreted
+        m += 1
+        for i in range(k):
+            xi = float(row[i])
+            lin[i] += xi
+            for j in range(i, k):
+                quad[i][j] += xi * float(row[j])
+    quad_np = np.asarray(quad)
+    quad_np = quad_np + np.triu(quad_np, 1).T  # symmetry (paper: half computed)
+    return Cofactors(
+        count=float(m),
+        lin=np.asarray(lin),
+        quad=quad_np,
+        features=list(features),
+    )

@@ -1,0 +1,137 @@
+"""Feature scaling on a variable order (paper §3.3, §4.2) and θ rescaling.
+
+``compute_scale_factors`` mirrors the paper's ``scaleFeatures(...)``:
+
+* For every feature column, the average and max-absolute value are computed
+  over the **union of all relations containing that column** (not over the
+  join!) so every occurrence is scaled by the same factors and equi-joins
+  survive rescaling (x = y  ⇔  (x−a)/b = (y−a)/b).
+* The paper creates rescaled SQL *views* over the base tables; the exact
+  analogue here is **lazy transformation**: base columns (and dictionary-
+  encoded key ids) are never rewritten — consumers apply
+  ``ScaleFactors.transform`` at value-access time (the factorized engine at
+  feature extension, the materialized path at design-matrix extraction).
+* The paper runs one SQL query per feature in parallel via OpenMP; here each
+  union reduction is a vectorized pass (optionally the fused Pallas
+  ``moments`` kernel), and cross-chip the same reduction is a ``psum``.
+
+Label convention (reconstructed from the paper's Table 2 — documented in
+DESIGN.md): the label is **mean-centered but not max-scaled**.  This makes
+the paper's version-1 rescaling (θ_j = θ_j,conv / max_j and
+θ₀ = avg_label − Σ θ_j·avg_j) agree with the exact closed-form inversion of
+§3.3, and makes versions 5/6 (which replace avg_label with θ₀,conv) produce
+the "huge error" the paper reports — θ₀ is then off by roughly the label
+mean.
+
+θ ordering everywhere: [intercept, features..., label].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from .store import Store
+
+__all__ = ["ScaleFactors", "compute_scale_factors", "rescale_theta", "predict"]
+
+
+@dataclasses.dataclass
+class ScaleFactors:
+    """Per-column (avg, max|·|) — the paper's ``scaleFactors`` struct."""
+
+    avg: Dict[str, float]
+    max: Dict[str, float]
+    features: List[str]
+    label: str
+
+    def __contains__(self, attr: str) -> bool:
+        return attr in self.avg
+
+    def transform(self, attr: str, x: np.ndarray):
+        """Apply (x − avg)/max — the paper's x_conv (lazy view semantics)."""
+        if attr not in self.avg:
+            return x
+        return (x - self.avg[attr]) / self.max[attr]
+
+
+def _union_moments(store: Store, col: str, use_kernel: bool = False):
+    """avg and max|x| of ``col`` over the union of relations containing it.
+
+    Key attributes participate through their dense numeric encoding (the
+    paper numerically encodes categorical-ish columns like ``date``)."""
+    chunks = [
+        rel.column(col).astype(np.float64)
+        for rel in store.relations()
+        if col in rel.values or col in rel.keys
+    ]
+    if not chunks:
+        raise ValueError(f"column {col} not found in any relation")
+    allv = np.concatenate(chunks)
+    if use_kernel:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        s, mx, cnt = kops.moments(jnp.asarray(allv, dtype=jnp.float32))
+        return float(s) / float(cnt), float(mx)
+    return float(allv.mean()), float(np.abs(allv).max())
+
+
+def compute_scale_factors(
+    store: Store,
+    features: Sequence[str],
+    label: str,
+    use_kernel: bool = False,
+) -> ScaleFactors:
+    """Compute per-feature scale factors (paper §4.2).  One union-reduction
+    per column; the intercept is never rescaled; the label is centered only."""
+    avg: Dict[str, float] = {}
+    mx: Dict[str, float] = {}
+    for col in list(features) + [label]:
+        a, m = _union_moments(store, col, use_kernel=use_kernel)
+        avg[col] = a
+        mx[col] = m if (m > 0 and col != label) else 1.0
+    return ScaleFactors(avg=avg, max=mx, features=list(features), label=label)
+
+
+def rescale_theta(
+    theta_conv: np.ndarray, factors: ScaleFactors, mode: str = "exact"
+) -> np.ndarray:
+    """Invert feature scaling on converged θ (paper §3.3 / §4.5).
+
+    Modes:
+      * ``exact``       — closed-form inversion of §3.3 (beyond-paper check):
+                          θ_j = θ_j,conv / max_j;
+                          θ₀ = avg_y + θ₀,conv − Σ θ_j·avg_j.
+      * ``avg_label``   — paper versions 1–4: θ₀ = avg_y − Σ θ_j·avg_j
+                          (drops θ₀,conv, which is ≈0 at convergence).
+      * ``theta0_conv`` — paper versions 5/6: θ₀ = θ₀,conv − Σ θ_j·avg_j
+                          (drops avg_y → the "huge error" variant).
+    """
+    theta_conv = np.asarray(theta_conv, dtype=np.float64)
+    feats = factors.features
+    theta = theta_conv.copy()
+    for j, f in enumerate(feats):
+        theta[1 + j] = theta_conv[1 + j] / factors.max[f]
+    correction = sum(
+        theta[1 + j] * factors.avg[f] for j, f in enumerate(feats)
+    )
+    avg_y = factors.avg[factors.label]
+    if mode == "exact":
+        theta[0] = avg_y + theta_conv[0] - correction
+    elif mode == "avg_label":
+        theta[0] = avg_y - correction
+    elif mode == "theta0_conv":
+        theta[0] = theta_conv[0] - correction
+    else:
+        raise ValueError(f"unknown rescale mode {mode}")
+    return theta
+
+
+def predict(x: np.ndarray, theta: np.ndarray) -> np.ndarray:
+    """h_θ(x) for a [m, n] feature matrix and θ = [intercept, feats..., label]."""
+    n = x.shape[1]
+    return theta[0] + x @ theta[1 : 1 + n]

@@ -1,0 +1,100 @@
+"""The in-memory database: a catalog of relations plus a natural-join planner.
+
+Plays the role HyPer plays in the paper — it *holds* the training data and
+executes the factorized aggregate plan close to the data.  ``materialize_join``
+is the non-factorized ("noPre") path: it computes the flat natural join whose
+size is O(|D|^rho*) and against which factorization is benchmarked.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .relation import Relation, composite_key, sort_merge_join
+
+__all__ = ["Store"]
+
+
+class Store:
+    """Catalog of named relations with natural-join materialization."""
+
+    def __init__(self, relations: Optional[Sequence[Relation]] = None) -> None:
+        self._relations: Dict[str, Relation] = {}
+        for rel in relations or ():
+            self.put(rel)
+
+    # -- catalog -------------------------------------------------------------
+    def put(self, rel: Relation) -> None:
+        self._relations[rel.name] = rel
+
+    def get(self, name: str) -> Relation:
+        return self._relations[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._relations
+
+    def names(self) -> List[str]:
+        return list(self._relations)
+
+    def relations(self) -> List[Relation]:
+        return list(self._relations.values())
+
+    def total_rows(self) -> int:
+        return sum(r.num_rows for r in self._relations.values())
+
+    # -- natural join (the noPre path) ----------------------------------------
+    def materialize_join(
+        self, names: Optional[Sequence[str]] = None
+    ) -> Relation:
+        """Materialize the natural join of ``names`` (default: all relations).
+
+        Joins pairwise on shared key attributes, greedily preferring joins
+        with at least one shared attribute (avoids accidental cross products
+        when a connected join order exists).
+        """
+        todo = [self._relations[n] for n in (names or self.names())]
+        if not todo:
+            raise ValueError("no relations to join")
+        acc = todo.pop(0)
+        while todo:
+            pick = None
+            for i, rel in enumerate(todo):
+                if set(acc.keys) & set(rel.keys):
+                    pick = i
+                    break
+            if pick is None:  # genuine cross product required
+                pick = 0
+            acc = _join_pair(acc, todo.pop(pick))
+        return acc
+
+
+def _join_pair(left: Relation, right: Relation) -> Relation:
+    shared = sorted(set(left.keys) & set(right.keys))
+    if shared:
+        doms = [max(left.domains[a], right.domains[a]) for a in shared]
+        lk = composite_key([left.keys[a] for a in shared], doms)
+        rk = composite_key([right.keys[a] for a in shared], doms)
+        il, ir = sort_merge_join(lk, rk)
+    else:  # cross product
+        nl, nr = left.num_rows, right.num_rows
+        il = np.repeat(np.arange(nl, dtype=np.int64), nr)
+        ir = np.tile(np.arange(nr, dtype=np.int64), nl)
+
+    keys = {a: c[il] for a, c in left.keys.items()}
+    for a, c in right.keys.items():
+        if a not in keys:
+            keys[a] = c[ir]
+    values = {a: c[il] for a, c in left.values.items()}
+    for a, c in right.values.items():
+        if a not in values:
+            values[a] = c[ir]
+    domains = dict(right.domains)
+    domains.update(left.domains)
+    return Relation(
+        name=f"({left.name}⋈{right.name})",
+        keys=keys,
+        values=values,
+        domains=domains,
+    )

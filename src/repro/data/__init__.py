@@ -1,0 +1,6 @@
+"""Data substrate: synthetic relational datasets (paper's evaluation data)
+and the LM token pipeline for the assigned architecture pool."""
+
+from .synthetic import figure1_schema, favorita_like, random_acyclic_schema
+
+__all__ = ["figure1_schema", "favorita_like", "random_acyclic_schema"]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (cofactor/aggregate
+computation).  Each kernel module documents its BlockSpec/VMEM design;
+``ops`` holds the jit'd public wrappers and ``ref`` the pure-jnp oracles."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,149 @@
+"""Flash attention (online softmax) as a Pallas TPU kernel.
+
+The chunked-attention path in ``repro.models.attention`` implements the
+online-softmax recurrence in pure jnp (lax.scan) — portable, but each
+chunk's scores round-trip through HBM.  This kernel fuses the whole
+recurrence: one (head, q-block) output tile stays resident in VMEM while
+K/V tiles stream past, so the O(S²) score matrix never touches HBM — the
+standard TPU adaptation of FlashAttention (block-tiled for the MXU rather
+than warp-tiled as on GPU).
+
+Tiling:
+
+  grid = (BH, NQ, NK)   — kv blocks innermost so the (m, l, acc) running
+                          state lives in VMEM scratch across the NK sweep
+  q    : [1, bq, D]  tile, revisited for every j
+  k, v : [1, bk, D]  tiles, streamed
+  out  : [1, bq, D]  tile, written once at j == NK-1
+  scratch: m [bq, 1], l [bq, 1], acc [bq, D]  — fp32
+
+``bq``/``bk`` default to 512/512 and D is the head dim (usually 64/128):
+VMEM per step = (bq + 2·bk)·D·2B + bq·D·4B + scores bq·bk·4B ≈ 1.6 MiB at
+defaults — room for double buffering in the ~16 MiB budget.  All matmuls
+hit the MXU with fp32 accumulation.
+
+Masking supports causal and sliding-window (mixtral) via absolute q/k
+positions derived from block ids, plus a kv-length bound for padding.
+GQA: the wrapper broadcasts KV heads to query heads before the call (the
+score matrix is per-q-head regardless; only HBM traffic for K/V grows, and
+the wrapper notes this trade-off).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_kernel_call", "DEFAULT_BQ", "DEFAULT_BK"]
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: Optional[int], kv_len: int,
+    bq: int, bk: int,
+):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [bq, D]
+    k = k_ref[0]  # [bk, D]
+    s = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        * scale
+    )  # [bq, bk]
+
+    i = pl.program_id(1)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len  # padding bound
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # exp(NEG_INF - NEG_INF) would poison fully-masked rows: re-mask p.
+    p = jnp.exp(s - m_new) * mask
+    corr = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "kv_len", "bq", "bk", "interpret"),
+)
+def flash_kernel_call(
+    q: jnp.ndarray,  # [BH, Sq, D]  (Sq % bq == 0)
+    k: jnp.ndarray,  # [BH, Sk, D]  (Sk % bk == 0)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_len: Optional[int] = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    kv_len = sk if kv_len is None else kv_len
+    scale = d**-0.5
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        kv_len=kv_len,
+        bq=bq,
+        bk=bk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            # fp32 running state, persistent across the kv sweep
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

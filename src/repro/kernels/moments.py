@@ -1,0 +1,62 @@
+"""Fused feature-scaling moments kernel: one pass → (Σx, max|x|).
+
+Paper §4.2 runs two SQL aggregates (AVG, MAX(ABS)) per feature over the
+union of relations containing it.  A memory-bound op like this should touch
+HBM exactly once, so the kernel fuses both reductions into a single stream:
+each [bm, 1] block is reduced on the VPU and folded into two scalar
+accumulators held in VMEM across the 1-D grid.
+
+Padding: the wrapper zero-pads to a block multiple — zeros do not change the
+sum, and max(|x|, 0) = max|x| since |·| ≥ 0.  The true element count is
+returned by the wrapper (it is static), completing the AVG.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["moments_kernel_call"]
+
+DEFAULT_BM = 1024
+
+
+def _moments_kernel(x_ref, sum_ref, max_ref):
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        max_ref[...] = jnp.zeros_like(max_ref)
+
+    x = x_ref[...]  # [bm, 1]
+    sum_ref[0, 0] += jnp.sum(x)
+    max_ref[0, 0] = jnp.maximum(max_ref[0, 0], jnp.max(jnp.abs(x)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def moments_kernel_call(
+    x: jnp.ndarray, bm: int = DEFAULT_BM, interpret: bool = True
+):
+    """Raw pallas_call on a padded [M, 1] column (M % bm == 0).
+    Returns (sum [1,1], maxabs [1,1]) fp32.  Use ``ops.moments``."""
+    m, one = x.shape
+    assert one == 1 and m % bm == 0, x.shape
+    nm = m // bm
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=(nm,),
+        in_specs=[pl.BlockSpec((bm, 1), lambda mm: (mm, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda mm: (0, 0)),
+            pl.BlockSpec((1, 1), lambda mm: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

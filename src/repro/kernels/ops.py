@@ -1,0 +1,152 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding/blocking so callers pass arbitrary shapes; select interpret
+mode automatically off-TPU (the kernels TARGET TPU; interpret=True executes
+the kernel body in Python for CPU validation, per the repo's dry-run-first
+methodology).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash import DEFAULT_BK as FL_BK, DEFAULT_BQ as FL_BQ, flash_kernel_call
+from .gram import DEFAULT_BK, DEFAULT_BM, gram_kernel_call
+from .moments import DEFAULT_BM as MOM_BM, moments_kernel_call
+from .segment_gram import (
+    DEFAULT_BM as SEG_BM,
+    VMEM_ACC_BYTES,
+    segment_gram_kernel_call,
+)
+
+__all__ = ["gram", "segment_gram", "moments", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def gram(
+    x: jnp.ndarray,
+    bm: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """X^T X for any [M, K]; fp32 result. Pads to block multiples with zeros
+    (zero rows/cols are Gram-neutral) and slices the result back."""
+    if interpret is None:
+        interpret = not on_tpu()
+    m, k = x.shape
+    bm = bm or min(DEFAULT_BM, _round_up(max(m, 1), 8))
+    bk = bk or min(DEFAULT_BK, _round_up(max(k, 1), 128))
+    mp, kp = _round_up(max(m, 1), bm), _round_up(max(k, 1), bk)
+    xp = jnp.zeros((mp, kp), dtype=x.dtype).at[:m, :k].set(x)
+    out = gram_kernel_call(xp, bm=bm, bk=bk, interpret=interpret)
+    return out[:k, :k]
+
+
+def segment_gram(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    bm: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-group Gram for any [M, K] + int seg [M]; fp32 [G, K, K].
+
+    Pads rows with out-of-range segment id (one-hot row of zeros ⇒ no
+    contribution).  If the [G, K, K] accumulator would exceed the VMEM
+    budget, groups are processed in chunks with ids rebased per chunk.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    m, k = x.shape
+    bm = bm or min(SEG_BM, _round_up(max(m, 1), 8))
+    mp = _round_up(max(m, 1), bm)
+    xp = jnp.zeros((mp, k), dtype=x.dtype).at[:m, :].set(x)
+
+    # -1 leaves room for the +1 out-of-chunk pad group in the chunked path
+    g_chunk = max(1, min(num_groups, VMEM_ACC_BYTES // max(k * k * 4, 1) - 1))
+    if g_chunk >= num_groups:
+        segp = jnp.full((mp, 1), num_groups, dtype=jnp.int32)
+        segp = segp.at[:m, 0].set(seg.astype(jnp.int32))
+        return segment_gram_kernel_call(
+            xp, segp, num_groups, bm=bm, interpret=interpret
+        )
+    outs = []
+    for g0 in range(0, num_groups, g_chunk):
+        gn = min(g_chunk, num_groups - g0)
+        rebased = seg.astype(jnp.int32) - g0
+        rebased = jnp.where((rebased >= 0) & (rebased < gn), rebased, gn)
+        segp = jnp.full((mp, 1), gn, dtype=jnp.int32)
+        segp = segp.at[:m, 0].set(rebased)
+        # kernel with gn+? : out-of-chunk rows map to id gn -> pad group;
+        # allocate gn+1 groups and drop the last.
+        out = segment_gram_kernel_call(
+            xp, segp, gn + 1, bm=bm, interpret=interpret
+        )
+        outs.append(out[:gn])
+    return jnp.concatenate(outs, axis=0)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, H, D]
+    k: jnp.ndarray,  # [B, Sk, KH, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int | None = None,
+    bk: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused online-softmax attention for arbitrary shapes; returns
+    [B, Sq, H, D].  Pads Sq/Sk to block multiples (padding keys are masked
+    via ``kv_len``; padding queries are sliced off).  GQA KV heads are
+    broadcast to query heads before the call — the kernel streams the
+    (repeated) K/V tiles from HBM, trading the GQA bandwidth saving for a
+    single uniform kernel (measured trade-off documented in
+    EXPERIMENTS.md §Perf)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    bq = bq or min(FL_BQ, _round_up(max(sq, 1), 8))
+    bk = bk or min(FL_BK, _round_up(max(sk, 1), 8))
+    sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
+    qp = jnp.zeros((b * h, sqp, d), qf.dtype).at[:, :sq].set(qf)
+    kp = jnp.zeros((b * h, skp, d), kf.dtype).at[:, :sk].set(kf)
+    vp = jnp.zeros((b * h, skp, d), vf.dtype).at[:, :sk].set(vf)
+    out = flash_kernel_call(
+        qp, kp, vp, causal=causal, window=window, kv_len=sk,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+    out = out[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    return out
+
+
+def moments(x: jnp.ndarray, bm: int | None = None, interpret: bool | None = None):
+    """(Σx, max|x|, count) for a 1-D column in one fused pass."""
+    if interpret is None:
+        interpret = not on_tpu()
+    (m,) = x.shape
+    bm = bm or min(MOM_BM, _round_up(max(m, 1), 8))
+    mp = _round_up(max(m, 1), bm)
+    xp = jnp.zeros((mp, 1), dtype=x.dtype).at[:m, 0].set(x)
+    s, mx = moments_kernel_call(xp, bm=bm, interpret=interpret)
+    return s[0, 0], mx[0, 0], m

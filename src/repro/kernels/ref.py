@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Tests sweep shapes and dtypes and assert the kernels (interpret mode on CPU,
+compiled on TPU) match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gram_ref", "segment_gram_ref", "moments_ref", "flash_ref"]
+
+
+def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """out = X^T X in fp32."""
+    x32 = x.astype(jnp.float32)
+    return x32.T @ x32
+
+
+def segment_gram_ref(
+    x: jnp.ndarray, seg: jnp.ndarray, num_groups: int
+) -> jnp.ndarray:
+    """out[g] = Σ_{m: seg[m]=g} x_m x_m^T in fp32 (scatter-add formulation)."""
+    x32 = x.astype(jnp.float32)
+    outer = x32[:, :, None] * x32[:, None, :]
+    out = jnp.zeros((num_groups,) + outer.shape[1:], dtype=jnp.float32)
+    return out.at[seg].add(outer, mode="drop")
+
+
+def moments_ref(x: jnp.ndarray):
+    """(Σx, max|x|, count) in fp32 / int."""
+    x32 = x.astype(jnp.float32)
+    return jnp.sum(x32), jnp.max(jnp.abs(x32)), x.shape[0]
+
+
+def flash_ref(q, k, v, *, causal=True, window=None, kv_len=None):
+    """Dense softmax attention oracle: q [BH, Sq, D], k/v [BH, Sk, D]."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    kv_len = sk if kv_len is None else kv_len
+    s = jnp.einsum(
+        "hqd,hkd->hqk", q, k, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask[None], -1, keepdims=True), p, 0.0)
+    return jnp.einsum(
+        "hqk,hkd->hqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)

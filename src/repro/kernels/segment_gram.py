@@ -1,0 +1,96 @@
+"""Segmented Gram kernel: per-group cofactors out[g] = Σ_{seg(m)=g} x_m x_m^T.
+
+This is the factorized engine's leaf-level hot op: a relation sorted by its
+group key contributes, per distinct key, the [K, K] monomial block
+(count / linear / quadratic in one shot when the wrapper appends an
+all-ones column — u = [1, x] makes u·u^T carry c, l and q together).
+
+TPU adaptation of the SQL ``GROUP BY``: scatter-add is hostile to the MXU,
+so the kernel uses the canonical **one-hot matmul** formulation —
+
+    onehot[m, g] = (seg[m] == g)
+    out         += onehot^T @ flatten(x_m x_m^T)
+
+which turns the grouped reduction into two dense ops: a [bm, K]×[bm, K]
+row-wise outer product (VPU) and a [G, bm]@[bm, K²] matmul (MXU).  Rows are
+streamed in [bm] blocks along a 1-D grid; the [G, K, K] accumulator stays
+resident in VMEM across grid steps (requires G·K²·4 bytes ≤ VMEM — the
+wrapper asserts ≤ 8 MiB and falls back to chunking groups otherwise).
+
+Padding trick: the wrapper pads rows with ``seg = G`` (out of range), whose
+one-hot row is all zeros, so padded rows contribute nothing — no masking
+branch in the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_gram_kernel_call"]
+
+DEFAULT_BM = 256
+VMEM_ACC_BYTES = 8 * 1024 * 1024
+
+
+def _segment_gram_kernel(x_ref, seg_ref, out_ref, *, num_groups: int):
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # [bm, k]
+    seg = seg_ref[...]  # [bm, 1] int32
+    bm, k = x.shape
+    onehot = (
+        seg == jax.lax.broadcasted_iota(jnp.int32, (bm, num_groups), 1)
+    ).astype(jnp.float32)
+    cross = (x[:, :, None] * x[:, None, :]).reshape(bm, k * k)
+    acc = jax.lax.dot_general(
+        onehot,
+        cross,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc.reshape(num_groups, k, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "bm", "interpret")
+)
+def segment_gram_kernel_call(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call on padded inputs: x [M, K] (M % bm == 0), seg [M, 1]
+    int32 sorted ascending with padding rows set to ``num_groups``.
+    Returns fp32 [num_groups, K, K].  Use ``ops.segment_gram`` generally."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    assert seg.shape == (m, 1), seg.shape
+    assert num_groups * k * k * 4 <= VMEM_ACC_BYTES, (
+        f"accumulator {num_groups}x{k}x{k} exceeds VMEM budget — "
+        "chunk groups in the wrapper"
+    )
+    nm = m // bm
+    kernel = functools.partial(_segment_gram_kernel, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_groups, k, k), lambda mm: (0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_groups, k, k), jnp.float32),
+        interpret=interpret,
+    )(x, seg)

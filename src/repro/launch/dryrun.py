@@ -1,0 +1,493 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``): the
+first two lines below pin 512 placeholder host devices BEFORE any other
+import so ``jax.make_mesh`` can build the production meshes.  Nothing here
+ever allocates a full-scale array — parameters, optimizer state, batches and
+caches are ShapeDtypeStructs end to end.
+
+Per cell it records (EXPERIMENTS.md §Dry-run / §Roofline inputs):
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline
+* collective bytes parsed from the optimized HLO (``compiled.as_text()``)
+* lower/compile wall times
+
+Cost-analysis semantics on this backend are *calibrated*, not assumed:
+``--calibrate`` compiles a known matmul on 1 vs N devices and reports
+whether FLOPs come back global or per-shard; the roofline reader consumes
+the recorded ``flops_scope`` field.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (env var must precede any jax-importing module)
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs import ARCHS, SHAPES, get_config, input_specs
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.roofline import RooflineTerms, collective_bytes, model_flops, total_collective_bytes
+from repro.models import model as model_lib
+from repro.train.train_step import TrainHParams, init_state, make_train_step
+
+__all__ = ["run_cell", "main"]
+
+#: CPU-backend artifact: XLA CPU cannot run bf16 dots natively, so it hoists
+#: ``convert(param: bf16 -> f32)`` out of loops, materializing fp32 copies
+#: of (stacked) weights.  TPU executes bf16 natively — these buffers do not
+#: exist on the target.  We measure them from the optimized HLO so the
+#: memory record can report the TPU-relevant adjusted figure.
+_UPCAST_RE = re.compile(
+    r"=\s*f32\[([\d,]*)\]\S*\s+(?:fusion|convert|copy)\(%?param"
+)
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+#: per-cell production policy choices (rule overrides applied on top of the
+#: kind's base rules).  These ARE the production config — the largest train
+#: cells turn on sequence-parallel activation saving (act_seq -> model) so
+#: stored remat carries fit per-device HBM; every choice is re-derivable
+#: from the §Perf hillclimb log.
+PROD_OVERRIDES: Dict = {
+    ("deepseek-67b", "train_4k"): {"act_seq": "model"},
+    # jamba: §Perf hc1 showed act_seq SP loses to plain microbatching here
+    # (boundary gathers outweigh the ~5 GB/dev of stored carries).
+    ("granite-20b", "train_4k"): {"act_seq": "model"},
+    ("mixtral-8x7b", "train_4k"): {"act_seq": "model"},
+    ("llava-next-mistral-7b", "train_4k"): {"act_seq": "model"},
+}
+
+
+def _policy(mesh, kind: str, overrides: Optional[Dict] = None):
+    rules = shd.TRAIN_RULES if kind == "train" else shd.SERVE_RULES
+    ar = shd.AxisRules(rules)
+    if overrides:
+        ar = ar.override(**{k: tuple(v) if isinstance(v, list) else v
+                            for k, v in overrides.items()})
+    return shd.ShardingPolicy(mesh, ar)
+
+
+def _build_cell(cfg, shape, policy):
+    """Returns (fn, args_abs, in_shardings) for one cell."""
+    kind = shape.kind
+    if kind == "train":
+        hp = TrainHParams()
+        state_abs = jax.eval_shape(
+            lambda: init_state(jax.random.key(0), cfg, hp)
+        )
+        batch_abs = input_specs(cfg, shape)
+        fn = make_train_step(cfg, hp)
+        in_sh = (
+            shd.state_specs(state_abs, policy),
+            shd.batch_specs(batch_abs, policy),
+        )
+        return fn, (state_abs, batch_abs), in_sh
+
+    if kind == "prefill":
+        params_abs = model_lib.abstract_params(cfg)
+        batch_abs = input_specs(cfg, shape)
+
+        def fn(params, batch):
+            return model_lib.prefill(params, batch, cfg, shape.seq_len)
+
+        in_sh = (
+            shd.param_specs(params_abs, policy),
+            shd.batch_specs(batch_abs, policy),
+        )
+        return fn, (params_abs, batch_abs), in_sh
+
+    # decode: one new token against a seq_len cache
+    params_abs = model_lib.abstract_params(cfg)
+    cache_abs = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    toks = input_specs(cfg, shape)
+
+    def fn(params, token, cache, cur_pos):
+        return model_lib.decode_step(params, token, cache, cur_pos, cfg)
+
+    in_sh = (
+        shd.param_specs(params_abs, policy),
+        shd.batch_specs({"token": toks["token"]}, policy)["token"],
+        shd.cache_specs(cache_abs, policy),
+        shd.batch_specs({"cur_pos": toks["cur_pos"]}, policy)["cur_pos"],
+    )
+    args = (params_abs, toks["token"], cache_abs, toks["cur_pos"])
+    return fn, args, in_sh
+
+
+def _compile_cell(cfg, shape, policy):
+    """Lower+compile one variant; returns (compiled, lower_s, compile_s)."""
+    fn, args_abs, in_sh = _build_cell(cfg, shape, policy)
+    t0 = time.perf_counter()
+    lowered = jax.jit(fn, in_shardings=in_sh).lower(*args_abs)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return compiled, t1 - t0, t2 - t1
+
+
+def _extract_cost(compiled) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_by_kind": collective_bytes(hlo),
+    }
+
+
+def _upcast_bytes(hlo: str) -> float:
+    """Bytes of fp32 copies of bf16 params hoisted by the CPU emitter.
+
+    Only the ENTRY computation is scanned: fusion *bodies* also name their
+    operands ``%param_N`` and would double-count.
+    """
+    idx = hlo.rfind("\nENTRY ")
+    region = hlo[idx:] if idx >= 0 else hlo
+    total = 0.0
+    for m in _UPCAST_RE.finditer(region):
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        total += 4.0 * n
+    return total
+
+
+def _depth_variant(cfg, periods: int):
+    """Same architecture at ``periods`` pattern-periods, scans unrolled —
+    the cost-extrapolation point (never executed, only lowered)."""
+    plen = len(cfg.pattern)
+    enc = 0
+    if cfg.enc_layers:
+        assert cfg.enc_layers % cfg.n_periods == 0, (
+            cfg.enc_layers, cfg.n_periods,
+        )
+        enc = cfg.enc_layers // cfg.n_periods * periods
+    return dataclasses.replace(
+        cfg,
+        n_layers=periods * plen,
+        enc_layers=enc,
+        microbatches=1,
+        scan_unroll=True,  # unrolls the period / encoder scans only
+    )
+
+
+def _combine_costs(c1: Dict, c2: Dict, periods: int) -> Dict:
+    """total = c1 + (P-1)·(c2-c1): identical scan bodies extrapolate
+    exactly (the whole point of the two-point protocol)."""
+    out = {"flops": 0.0, "bytes": 0.0, "coll_by_kind": {}}
+    for k in ("flops", "bytes"):
+        body = c2[k] - c1[k]
+        out[k] = c1[k] + (periods - 1) * body
+    kinds = set(c1["coll_by_kind"]) | set(c2["coll_by_kind"])
+    for kind in kinds:
+        a = c1["coll_by_kind"].get(kind, 0)
+        b = c2["coll_by_kind"].get(kind, 0)
+        out["coll_by_kind"][kind] = max(a + (periods - 1) * (b - a), 0)
+    return out
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _add_inner_scan_corrections(
+    cfg, shape, policy, c1: Dict, cost: Dict
+) -> Dict:
+    """Inner while loops (sLSTM per-token, mLSTM/mamba per-chunk, chunked
+    attention q/kv sweeps) are counted ONCE by cost analysis.  Each knob is
+    compiled at unroll=2; the delta is exactly one loop body across all
+    instances in one period, so
+
+        total += P · Σ_scans (iterations − 1) · body
+
+    Attention nests (kv scan inside q scan):
+        total_attn = (nq−1)·Δq + nq·(nk−1)·Δkv
+    where Δq carries one q body (incl. one kv body) and Δkv one kv body.
+    Cross attention keeps its whole KV in a single chunk (length-1 kv scan,
+    see models/attention.py), so Δkv touches only self-attention bodies and
+    the algebra stays exact for the enc-dec arch.
+    """
+    if shape.kind == "decode":
+        return cost  # decode paths are O(1): no inner scans
+    s = cfg.text_len(shape.seq_len)
+    corrections = []  # (cfg override, multiplier)
+    if any(b.mixer == "slstm" for b in cfg.pattern):
+        corrections.append(({"slstm_unroll": 2}, s - 1))
+    if any(b.mixer == "mlstm" for b in cfg.pattern):
+        nc = max(s // min(cfg.xlstm_chunk, s), 1)
+        if nc > 1:
+            corrections.append(({"mlstm_unroll": 2}, nc - 1))
+    if any(b.mixer == "mamba" for b in cfg.pattern):
+        nc = max(s // min(cfg.mamba_chunk, s), 1)
+        if nc > 1:
+            corrections.append(({"mamba_unroll": 2}, nc - 1))
+    from repro.models.attention import (
+        CHUNKED_THRESHOLD, DEFAULT_K_CHUNK, DEFAULT_Q_CHUNK,
+    )
+    s_total = shape.seq_len if cfg.n_patches else s  # vlm: prefix + text
+    if (
+        any(b.mixer == "attn" for b in cfg.pattern)
+        and s_total > CHUNKED_THRESHOLD
+    ):
+        nq = s_total // _pick_chunk(s_total, DEFAULT_Q_CHUNK)
+        nk = s_total // _pick_chunk(s_total, DEFAULT_K_CHUNK)
+        corrections.append(({"attn_q_unroll": 2}, nq - 1))
+        if nk > 1:
+            corrections.append(({"attn_kv_unroll": 2}, nq * (nk - 1)))
+    p = cfg.n_periods
+    cost.setdefault("corrections", {})
+    for overrides, factor in corrections:
+        v = dataclasses.replace(_depth_variant(cfg, 1), **overrides)
+        compiled, _, _ = _compile_cell(v, shape, policy)
+        cu2 = _extract_cost(compiled)
+        knob = next(iter(overrides))
+        contrib = {}
+        for k in ("flops", "bytes"):
+            body = max(cu2[k] - c1[k], 0.0)
+            contrib[k] = p * factor * body
+            cost[k] += contrib[k]
+        cost["corrections"][knob] = contrib
+        for kind, b2 in cu2["coll_by_kind"].items():
+            body = max(b2 - c1["coll_by_kind"].get(kind, 0), 0)
+            if body:
+                cost["coll_by_kind"][kind] = (
+                    cost["coll_by_kind"].get(kind, 0) + p * factor * body
+                )
+    return cost
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    overrides: Optional[Dict] = None,
+    verbose: bool = True,
+    cost_pass: bool = True,
+    cfg_overrides: Optional[Dict] = None,
+) -> Dict:
+    """Lower + compile one cell; returns the JSON-able record.
+
+    Pass A (contract): the production form — depth/microbatch scans intact —
+    must lower+compile; ``memory_analysis`` proves per-device fit.
+    Pass B (roofline): two small unrolled depth-variants (1 and 2 periods)
+    whose cost delta is one period body; totals extrapolate exactly since
+    scan bodies are identical.  (XLA cost analysis counts a while body once,
+    so pass-A cost numbers undercount depth — documented in EXPERIMENTS.md.)
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if shape_name in cfg.skip_shapes:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+            "status": "skipped",
+            "reason": "full-attention arch; long-context decode excluded "
+                      "per assignment (DESIGN.md §Shape-applicability)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    merged = dict(PROD_OVERRIDES.get((arch, shape_name), {}))
+    merged.update(overrides or {})
+    policy = _policy(mesh, shape.kind, merged or None)
+
+    rec: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": _mesh_name(multi_pod),
+        "chips": int(chips),
+        "kind": shape.kind,
+        "rule_overrides": merged,
+        "cfg_overrides": cfg_overrides or {},
+        "status": "ok",
+    }
+    try:
+        with shd.use_policy(policy), mesh:
+            # ---- pass A: the contract compile (production form) ----------
+            compiled, rec["lower_s"], rec["compile_s"] = _compile_cell(
+                cfg, shape, policy
+            )
+            try:
+                mem = compiled.memory_analysis()
+                if mem is not None:
+                    rec["memory"] = {
+                        k: float(getattr(mem, k))
+                        for k in (
+                            "argument_size_in_bytes",
+                            "output_size_in_bytes",
+                            "temp_size_in_bytes",
+                            "generated_code_size_in_bytes",
+                        )
+                        if hasattr(mem, k)
+                    }
+            except Exception as e:  # pragma: no cover
+                rec["memory_error"] = repr(e)
+            hlo_a = compiled.as_text()
+            rec["hlo_len"] = len(hlo_a)
+            if "memory" in rec:
+                up = _upcast_bytes(hlo_a)
+                rec["memory"]["cpu_bf16_upcast_bytes"] = up
+                rec["memory"]["temp_adjusted_bytes"] = (
+                    rec["memory"].get("temp_size_in_bytes", 0.0) - up
+                )
+            rec["cost_raw"] = _extract_cost(compiled)
+
+            # ---- pass B: two-point depth extrapolation -------------------
+            if cost_pass:
+                c1c, _, t1 = _compile_cell(_depth_variant(cfg, 1), shape, policy)
+                c2c, _, t2 = _compile_cell(_depth_variant(cfg, 2), shape, policy)
+                rec["cost_pass_compile_s"] = t1 + t2
+                c1 = _extract_cost(c1c)
+                c2 = _extract_cost(c2c)
+                cost = _combine_costs(c1, c2, cfg.n_periods)
+                cost = _add_inner_scan_corrections(
+                    cfg, shape, policy, c1, cost
+                )
+            else:
+                cost = rec["cost_raw"]
+        rec["cost"] = cost
+
+        terms = RooflineTerms(
+            arch=cfg.name,
+            shape=shape.name,
+            mesh=rec["mesh"],
+            chips=int(chips),
+            hlo_flops=cost["flops"],
+            hlo_bytes=cost["bytes"],
+            coll_bytes=total_collective_bytes(cost["coll_by_kind"]),
+            coll_by_kind=cost["coll_by_kind"],
+            model_flops=model_flops(cfg, shape),
+            per_device_hbm_peak=rec.get("memory", {}).get(
+                "temp_adjusted_bytes"
+            ),
+        )
+        rec["roofline"] = terms.to_json()
+        if verbose:
+            mem_pd = rec.get("memory", {})
+            tot_mem = (
+                mem_pd.get("argument_size_in_bytes", 0.0)
+                + mem_pd.get("temp_adjusted_bytes",
+                             mem_pd.get("temp_size_in_bytes", 0.0))
+            )
+            print(
+                f"[dryrun] {arch:24s} {shape_name:12s} {rec['mesh']:11s} "
+                f"lower {rec['lower_s']:5.1f}s compile {rec['compile_s']:5.1f}s "
+                f"flops/dev {terms.flops_per_device:.3e} "
+                f"coll {terms.coll_bytes:.3e}B "
+                f"mem/dev {tot_mem/1e9:.2f}GB "
+                f"bottleneck={terms.bottleneck}"
+            )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()
+        if verbose:
+            print(f"[dryrun] {arch} {shape_name} {rec['mesh']} FAILED: {e!r}")
+    return rec
+
+
+def calibrate() -> Dict:
+    """Determine whether cost_analysis FLOPs are global or per-shard."""
+    mesh = make_production_mesh(multi_pod=False)
+    n = 1024
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    flops_expected = 2.0 * n**3
+
+    c1 = jax.jit(lambda a, b: a @ b).lower(x, x).compile()
+    f1 = float(c1.cost_analysis()["flops"])
+
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    with mesh:
+        c2 = (
+            jax.jit(lambda a, b: a @ b, in_shardings=(sh, sh))
+            .lower(x, x)
+            .compile()
+        )
+    f2 = float(c2.cost_analysis()["flops"])
+    scope = "per_shard" if f2 < 0.6 * f1 else "global"
+    return {
+        "unsharded_flops": f1,
+        "sharded_flops": f2,
+        "expected": flops_expected,
+        "flops_scope": scope,
+    }
+
+
+def all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            yield arch, shape.name
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None, help="architecture id (default: all)")
+    p.add_argument("--shape", default=None, help="shape name (default: all)")
+    p.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    p.add_argument("--out", default="benchmarks/results/dryrun")
+    p.add_argument("--rules", default=None,
+                   help="JSON dict of logical-axis rule overrides (hillclimb)")
+    p.add_argument("--cfg", default=None,
+                   help="JSON dict of ModelConfig field overrides (hillclimb)")
+    p.add_argument("--tag", default=None, help="suffix for the output file")
+    p.add_argument("--calibrate", action="store_true")
+    args = p.parse_args()
+
+    if args.calibrate:
+        print(json.dumps(calibrate(), indent=2))
+        return 0
+
+    overrides = json.loads(args.rules) if args.rules else None
+    cfg_overrides = json.loads(args.cfg) if args.cfg else None
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+    cells = [
+        (a, s)
+        for a, s in all_cells()
+        if (args.arch is None or a == args.arch)
+        and (args.shape is None or s == args.shape)
+    ]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            # the §Roofline table is single-pod only (assignment): the
+            # multi-pod pass proves the pod axis shards (pass A) without
+            # paying for the cost-extrapolation compiles.
+            rec = run_cell(arch, shape, multi_pod=mp, overrides=overrides,
+                           cfg_overrides=cfg_overrides, cost_pass=not mp)
+            tag = f"_{args.tag}" if args.tag else ""
+            fname = f"{arch}_{shape}_{_mesh_name(mp)}{tag}.json"
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(rec, f, indent=2)
+            if rec["status"] == "error":
+                failures += 1
+    print(f"[dryrun] done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

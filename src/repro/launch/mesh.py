@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests must keep seeing 1 device.
+
+Mesh shapes per the assignment:
+
+* single-pod:  (16, 16)      axes ("data", "model")   — 256 chips
+* multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+TPU v5e hardware constants for the roofline live in ``HW`` here so every
+consumer (roofline, benchmarks, docs) quotes one source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _Hardware:
+    name: str = "TPU v5e"
+    peak_flops_bf16: float = 197e12  # per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+    hbm_bytes: float = 16e9  # per chip
+
+
+HW = _Hardware()
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,219 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds (assignment formulas):
+
+    compute    = HLO_FLOPs      / (chips × peak_FLOP/s)
+    memory     = HLO_bytes      / (chips × HBM_bw)
+    collective = collective_B   / (chips × link_bw)
+
+``compiled.cost_analysis()`` provides FLOPs and bytes accessed.  Collective
+bytes are NOT in cost_analysis: :func:`collective_bytes` parses the
+optimized HLO (``compiled.as_text()``) and sums operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+cost_analysis on the CPU backend reports totals for the *whole program*
+(all shards execute on the 512 host "devices", so FLOPs are global); the
+per-chip terms divide by the chip count, matching the assignment formulas.
+
+MODEL_FLOPS uses the classic 6·N·D (dense) / 6·N_active·D (MoE) estimate
+per training step, or 2·N·D per generated token for decode — the
+"useful compute" yardstick the §Roofline table compares HLO_FLOPs against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from .mesh import HW
+
+__all__ = [
+    "RooflineTerms",
+    "collective_bytes",
+    "roofline_terms",
+    "model_flops",
+]
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+#: one HLO op result, e.g. ``f32[8,128]{1,0}`` or a tuple of them.
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    Parses the *optimized* HLO (post-SPMD-partitioning), where shapes are
+    already per-shard; an op's result size ~= bytes moved per chip (the
+    standard approximation for ring all-gather / reduce-scatter; all-reduce
+    moves ~2× its payload — accounted with a factor below).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        # skip the paired ``-done`` ops (zero-size start tokens parse as 0)
+        if b == 0:
+            continue
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def total_collective_bytes(per_kind: Dict[str, int]) -> float:
+    """Weighted wire bytes: ring all-reduce = reduce-scatter + all-gather
+    (2× payload); the others move ~1× their result."""
+    tot = 0.0
+    for kind, b in per_kind.items():
+        tot += 2.0 * b if kind == "all-reduce" else float(b)
+    return tot
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # as reported by cost_analysis (see flops_scope)
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    model_flops: float
+    per_device_hbm_peak: Optional[float] = None
+    #: calibrated semantics of cost_analysis on this backend (dryrun
+    #: --calibrate): "per_shard" = numbers are already per device.
+    flops_scope: str = "per_shard"
+
+    @property
+    def _div(self) -> float:
+        return float(self.chips) if self.flops_scope == "global" else 1.0
+
+    @property
+    def flops_per_device(self) -> float:
+        return self.hlo_flops / self._div
+
+    @property
+    def bytes_per_device(self) -> float:
+        return self.hlo_bytes / self._div
+
+    @property
+    def global_flops(self) -> float:
+        return self.flops_per_device * self.chips
+
+    @property
+    def t_compute(self) -> float:
+        # == HLO_FLOPs_global / (chips × peak): evaluated per device
+        return self.flops_per_device / HW.peak_flops_bf16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HW.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes are already per-shard (post-SPMD shapes)
+        return self.coll_bytes / HW.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.global_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term share of the bound: T_comp / max(all terms)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t else 0.0
+
+    def to_json(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "flops_scope": self.flops_scope,
+            "flops_per_device": self.flops_per_device,
+            "global_flops": self.global_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_hbm_peak": self.per_device_hbm_peak,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful FLOPs' for one step of this cell."""
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens  # fwd + bwd
+    return 2.0 * n_active * tokens  # inference fwd only
+
+
+def roofline_terms(
+    cfg,
+    shape,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    memory_stats: Optional[Dict] = None,
+) -> RooflineTerms:
+    per_kind = collective_bytes(hlo_text)
+    return RooflineTerms(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=total_collective_bytes(per_kind),
+        coll_by_kind=per_kind,
+        model_flops=model_flops(cfg, shape),
+        per_device_hbm_peak=(memory_stats or {}).get("peak_bytes"),
+    )

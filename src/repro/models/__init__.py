@@ -1,0 +1,40 @@
+"""Model definitions for the assigned architecture pool.
+
+``model`` assembles the blocks below according to a declarative
+``ModelConfig`` (see ``repro.configs``):
+
+* ``attention`` — GQA / MQA / sliding-window / cross attention + KV caches
+* ``mamba``     — selective state space (jamba's mixer)
+* ``xlstm``     — mLSTM / sLSTM blocks
+* ``moe``       — top-k capacity-dispatch mixture of experts
+* ``layers``    — norms, MLPs, positions, initializers
+"""
+
+from . import attention, layers, mamba, model, moe, xlstm
+from .model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    padded_vocab,
+    prefill,
+)
+
+__all__ = [
+    "attention",
+    "layers",
+    "mamba",
+    "model",
+    "moe",
+    "xlstm",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "padded_vocab",
+    "prefill",
+]

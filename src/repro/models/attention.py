@@ -1,0 +1,404 @@
+"""Grouped-query attention with KV caching (full, sliding-window, cross).
+
+One attention implementation serves all assigned architectures:
+
+* GQA / MQA: queries are reshaped to [B, S, KH, G, D] so keys/values are
+  never materialized per query head (G = n_heads / n_kv_heads).
+* Sliding-window attention (mixtral): banded mask in prefill; a **ring-buffer
+  KV cache of size window** in decode, so `long_500k` decode holds a 4096-slot
+  cache instead of a 524288-slot one.  Absolute positions are stored next to
+  the ring so masking needs no modular arithmetic at lookup time.
+* Cross attention (whisper decoder): keys/values from encoder states, no
+  causal mask, KV computed once and cached at prefill.
+* **Chunked online-softmax path** (flash-attention recurrence in pure jnp,
+  ``lax.map`` over query chunks × ``lax.scan`` over KV chunks): O(S·chunk)
+  memory instead of O(S²) — selected automatically above
+  ``CHUNKED_THRESHOLD`` so 32k-token prefill and 4k-token training fit HBM.
+  The Pallas flash kernel in ``repro.kernels.flash`` implements the same
+  recurrence as a fused VMEM-tiled kernel for the TPU target.
+
+Softmax runs in fp32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rotary, dense_init, rotary_embedding
+
+__all__ = ["attention_init", "attention_apply", "attention_decode", "init_kv_cache"]
+
+NEG_INF = -1e30
+
+#: Above this many score entries per (q, kv) pair the chunked path kicks in.
+CHUNKED_THRESHOLD = 2048
+DEFAULT_Q_CHUNK = 512
+DEFAULT_K_CHUNK = 1024
+
+
+def attention_init(key, cfg, cross: bool = False):
+    """Projection params.  Shapes keep head axes explicit for sharding rules:
+    wq [d, H, hd], wk/wv [d, KH, hd], wo [H, hd, d]."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (h, hd), cfg.param_dtype),
+        "wk": dense_init(ks[1], d, (kh, hd), cfg.param_dtype),
+        "wv": dense_init(ks[2], d, (kh, hd), cfg.param_dtype),
+        "wo": dense_init(ks[3], h * hd, d, cfg.param_dtype).reshape(h, hd, d),
+    }
+
+
+def _gqa_scores(q, k, scale):
+    """q [B,Sq,H,D], k [B,Sk,KH,D] -> fp32 scores [B,KH,G,Sq,Sk]."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d)
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+
+
+def _gqa_out(probs, v, out_dtype):
+    """probs [B,KH,G,Sq,Sk], v [B,Sk,KH,D] -> [B,Sq,H,D]."""
+    b, kh, g, sq, _ = probs.shape
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, kh * g, v.shape[-1]).astype(out_dtype)
+
+
+def _masked_softmax(scores, mask):
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no visible key (fully masked) produce uniform garbage; zero them
+    any_visible = jnp.any(mask, axis=-1, keepdims=True)
+    return jnp.where(any_visible, probs, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (flash recurrence in jnp)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is ≤ target (shapes here are powers of
+    two, so this is just min(s, target) in practice — guarded anyway)."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    qpos,
+    kpos,
+    *,
+    causal: bool,
+    window: Optional[int],
+    out_dtype,
+    q_chunk: int = DEFAULT_Q_CHUNK,
+    k_chunk: int = DEFAULT_K_CHUNK,
+    q_unroll: int = 1,
+    kv_unroll: int = 1,
+):
+    """Online-softmax attention: q [B,Sq,H,D], k/v [B,Sk,KH,D],
+    qpos [B,Sq], kpos [B,Sk] absolute positions (−1 = empty slot).
+
+    Memory O(Sq·k_chunk) instead of O(Sq·Sk).  Returns [B,Sq,H,D].
+    """
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qc = _pick_chunk(sq, q_chunk)
+    kc = _pick_chunk(sk, k_chunk)
+    nq, nk = sq // qc, sk // kc
+    scale = d**-0.5
+
+    # [NQ, B, qc, KH, G, D] query-major so lax.map sweeps the leading axis
+    qg = (
+        q.reshape(b, nq, qc, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    )
+    qp = qpos.reshape(b, nq, qc).transpose(1, 0, 2)  # [NQ, B, qc]
+    kb = k.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)  # [NK,B,kc,KH,D]
+    vb = v.reshape(b, nk, kc, kh, d).transpose(1, 0, 2, 3, 4)
+    kp = kpos.reshape(b, nk, kc).transpose(1, 0, 2)  # [NK, B, kc]
+
+    def q_block(args):
+        q_blk, qp_blk = args  # [B,qc,KH,G,D], [B,qc]
+        m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, d), jnp.float32)
+
+        # checkpointed: without this the backward pass would stash the
+        # [B,KH,G,qc,kc] probabilities for EVERY (q,kv) chunk pair — the
+        # exact O(S²) materialization the online-softmax recurrence exists
+        # to avoid.  Recomputing one kv block per backward step keeps the
+        # residual set at O(qc·kc) transients.
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kp_blk = inp  # [B,kc,KH,D], [B,kc]
+            s = (
+                jnp.einsum(
+                    "bqkgd,bskd->bkgqs",
+                    q_blk,
+                    k_blk,
+                    preferred_element_type=jnp.float32,
+                )
+                * scale
+            )  # [B,KH,G,qc,kc]
+            qpx = qp_blk[:, None, None, :, None]
+            kpx = kp_blk[:, None, None, None, :]
+            mask = kpx >= 0  # skip empty slots
+            if causal:
+                mask = mask & (kpx <= qpx)
+            if window is not None:
+                mask = mask & (kpx > qpx - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # exp(NEG_INF - NEG_INF) = 1 would corrupt fully-masked rows;
+            # re-apply the mask to the probabilities instead of clamping m.
+            p = jnp.exp(s - m_new[..., None]) * mask
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd",
+                p.astype(v_blk.dtype),
+                v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, kp), unroll=min(kv_unroll, nk)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KH,G,qc,D]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, d)
+
+    def q_step(carry, args):
+        return carry, jax.checkpoint(q_block)(args)
+
+    _, out = jax.lax.scan(
+        q_step, (), (qg, qp), unroll=min(q_unroll, nq)
+    )  # [NQ, B, qc, H, D]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d).astype(out_dtype)
+
+
+def attention_apply(
+    params,
+    x,
+    cfg,
+    *,
+    positions=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_states=None,
+) -> jnp.ndarray:
+    """Self (or cross, via ``kv_states``) attention over full sequences.
+
+    x [B, S, d]; positions [B, S] absolute positions for RoPE/masking
+    (defaults to arange).  Returns [B, S, d].
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    kv_src = x if kv_states is None else kv_states
+    k = jnp.einsum("bsd,dke->bske", kv_src, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", kv_src, params["wv"])
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos == "rope" and kv_states is None:
+        cos, sin = rotary_embedding(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+
+    sk = k.shape[1]
+    chunked = max(s, sk) > CHUNKED_THRESHOLD and not cfg.dense_attention
+    if chunked:  # O(S·chunk) memory path
+        kpos = (
+            positions
+            if kv_states is None
+            else jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+        )
+        out = chunked_attention(
+            q,
+            k,
+            v,
+            positions,
+            kpos,
+            causal=causal and kv_states is None,
+            window=window,
+            out_dtype=x.dtype,
+            # cross attention keeps the whole (short) KV in one chunk: the
+            # kv scan then has length 1, which keeps the dry-run's
+            # delta-correction algebra exact (see launch/dryrun.py)
+            k_chunk=sk if kv_states is not None else DEFAULT_K_CHUNK,
+            q_unroll=max(cfg.attn_q_unroll, 1),
+            kv_unroll=max(cfg.attn_kv_unroll, 1),
+        )
+        return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+    scores = _gqa_scores(q, k, cfg.head_dim**-0.5)
+    if kv_states is None:
+        qpos = positions[:, None, None, :, None]
+        kpos = positions[:, None, None, None, :]
+        mask = kpos <= qpos if causal else jnp.ones_like(scores, dtype=bool)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+    else:  # cross attention: everything visible
+        mask = jnp.ones((b, 1, 1, s, sk), dtype=bool)
+    probs = _masked_softmax(scores, mask)
+    out = _gqa_out(probs, v, x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+
+def attention_prefill(
+    params,
+    x,
+    cfg,
+    max_len: int,
+    *,
+    positions=None,
+    window: Optional[int] = None,
+):
+    """Full causal self-attention that also emits the decode cache.
+
+    Full attention: K/V land in slots [0, S) of a ``max_len`` cache.
+    Sliding window: only the last ``window`` positions are retained, rolled
+    so that slot p%W holds position p — exactly the decode ring layout.
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos == "rope":
+        cos, sin = rotary_embedding(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+
+    if s > CHUNKED_THRESHOLD and not cfg.dense_attention:
+        out = chunked_attention(
+            q, k, v, positions, positions,
+            causal=True, window=window, out_dtype=x.dtype,
+            q_unroll=max(cfg.attn_q_unroll, 1),
+            kv_unroll=max(cfg.attn_kv_unroll, 1),
+        )
+    else:
+        scores = _gqa_scores(q, k, cfg.head_dim**-0.5)
+        qpos = positions[:, None, None, :, None]
+        kpos = positions[:, None, None, None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        probs = _masked_softmax(scores, mask)
+        out = _gqa_out(probs, v, x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+
+    slots = max_len if window is None else min(window, max_len)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    if slots >= s:  # write positions [0, s) directly
+        ck = jnp.zeros((b, slots, kh, hd), cfg.dtype).at[:, :s].set(
+            k.astype(cfg.dtype)
+        )
+        cv = jnp.zeros((b, slots, kh, hd), cfg.dtype).at[:, :s].set(
+            v.astype(cfg.dtype)
+        )
+        cpos = jnp.full((b, slots), -1, jnp.int32).at[:, :s].set(positions)
+    else:  # keep the last ``slots`` positions, ring-rolled to slot p%slots
+        shift = (s - slots) % slots
+        ck = jnp.roll(k[:, s - slots :].astype(cfg.dtype), shift, axis=1)
+        cv = jnp.roll(v[:, s - slots :].astype(cfg.dtype), shift, axis=1)
+        cpos = jnp.roll(positions[:, s - slots :], shift, axis=1)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode path)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None):
+    """Cache pytree for one attention layer.
+
+    Full attention: slots = max_len.  Sliding window: ring of ``window``
+    slots.  ``pos`` stores each slot's absolute position (-1 = empty).
+    """
+    slots = max_len if window is None else min(window, max_len)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, slots, kh, hd), cfg.dtype),
+        "v": jnp.zeros((batch, slots, kh, hd), cfg.dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def attention_decode(
+    params,
+    x,
+    cache,
+    cur_pos,
+    cfg,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """One decode step: x [B, 1, d], cur_pos scalar int32 (same for all rows).
+
+    Writes the new KV at slot ``cur_pos % slots`` and attends over every
+    non-empty slot whose absolute position is visible.  Returns (out, cache).
+    """
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k_new = jnp.einsum("bsd,dke->bske", x, params["wk"])
+    v_new = jnp.einsum("bsd,dke->bske", x, params["wv"])
+
+    pos_b = jnp.broadcast_to(cur_pos[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.pos == "rope":
+        cos, sin = rotary_embedding(pos_b, cfg.head_dim, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k_new = apply_rotary(k_new, cos, sin)
+
+    slots = cache["k"].shape[1]
+    slot = (cur_pos % slots).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache["pos"], pos_b, (0, slot))
+
+    scores = _gqa_scores(q, k, cfg.head_dim**-0.5)  # [B,KH,G,1,slots]
+    kpos = pos[:, None, None, None, :]
+    mask = (kpos >= 0) & (kpos <= cur_pos)
+    if window is not None:
+        mask = mask & (kpos > cur_pos - window)
+    probs = _masked_softmax(scores, mask)
+    out = _gqa_out(probs, v, x.dtype)
+    out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    return out, {"k": k, "v": v, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decode against a precomputed (cached) encoder KV
+# ---------------------------------------------------------------------------
+
+def cross_kv(params, enc_states):
+    """Precompute encoder K/V once (whisper prefill)."""
+    k = jnp.einsum("bsd,dke->bske", enc_states, params["wk"])
+    v = jnp.einsum("bsd,dke->bske", enc_states, params["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_attention_decode(params, x, ckv, cfg):
+    """x [B, 1, d] attends over cached encoder KV (no mask)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    scores = _gqa_scores(q, ckv["k"], cfg.head_dim**-0.5)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, ckv["v"], x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"])

@@ -1,0 +1,161 @@
+"""Shared neural layers for the assigned LM architectures.
+
+Everything is a pure function over explicit parameter pytrees (no flax/haiku
+dependency): ``init_*`` builds params, the forward functions consume them.
+Parameter leaves carry no metadata — sharding is derived from the leaf *path*
+by ``repro.launch.policy`` (logical-axis rules, MaxText-style), so model code
+stays sharding-agnostic and the same definition serves CPU smoke tests and
+the 512-chip dry-run.
+
+Dtype policy: parameters are created in ``cfg.param_dtype`` (bf16 at
+production scale, fp32 for CPU smoke), matmuls run in ``cfg.dtype`` with
+fp32 accumulation where it matters (norms, softmax, losses, gates).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "embed_init",
+    "norm_init",
+    "rms_norm",
+    "layer_norm",
+    "apply_norm",
+    "mlp_init",
+    "mlp_apply",
+    "rotary_embedding",
+    "apply_rotary",
+    "sinusoidal_positions",
+]
+
+
+def truncated_normal(key, shape, dtype, stddev: float):
+    # 2-sigma truncation like flax's default initializers.
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_shape, dtype, scale: Optional[float] = None):
+    """Weight [in_dim, *out_shape]; fan-in scaled init."""
+    if isinstance(out_shape, int):
+        out_shape = (out_shape,)
+    stddev = scale if scale is not None else in_dim**-0.5
+    return truncated_normal(key, (in_dim, *out_shape), dtype, stddev)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return truncated_normal(key, (vocab, dim), dtype, 0.02)
+
+
+def norm_init(dim: int, kind: str):
+    """``rms`` / ``ln`` carry scale (+bias); ``np_ln`` (OLMo) is parameter-free."""
+    if kind == "rms":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "ln":
+        return {
+            "scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32),
+        }
+    if kind == "np_ln":
+        return {}
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale).astype(x.dtype)
+
+
+def layer_norm(x, scale=None, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * scale
+    if bias is not None:
+        out = out + bias
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    if kind == "ln":
+        return layer_norm(x, params["scale"], params["bias"])
+    if kind == "np_ln":
+        return layer_norm(x)  # OLMo's non-parametric LayerNorm
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU (llama family) or GELU (whisper / gpt-bigcode family)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+def mlp_apply(params, x, kind: str):
+    if kind == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+        h = jax.nn.silu(gate) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w_up"]))
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Positions: RoPE and sinusoidal
+# ---------------------------------------------------------------------------
+
+def rotary_embedding(positions, head_dim: int, theta: float = 10000.0):
+    """cos/sin tables [*, head_dim/2] for integer ``positions``."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rotary(x, cos, sin):
+    """x [B, S, H, D]; cos/sin [B, S, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(num: int, dim: int) -> np.ndarray:
+    """Classic transformer sinusoids [num, dim] (whisper-style stub)."""
+    pos = np.arange(num)[:, None]
+    div = np.exp(-np.log(10000.0) * np.arange(0, dim, 2) / dim)
+    table = np.zeros((num, dim), dtype=np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return table

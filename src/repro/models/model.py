@@ -1,0 +1,472 @@
+"""Architecture assembly: ``ModelConfig`` -> params / forward / prefill / decode.
+
+One assembly interprets every assigned architecture declaratively:
+
+* depth is a **block pattern** (one period of (mixer, ffn) pairs) scanned
+  ``n_periods`` times — compiled HLO stays O(pattern), not O(depth), which is
+  what lets the 95-layer deepseek-67b lower in seconds;
+* mixers: GQA attention (full / sliding-window / cross), Mamba, mLSTM, sLSTM;
+* ffns: dense MLP (SwiGLU / GELU), MoE (top-k capacity dispatch), or none;
+* modality frontends are stubs per the assignment: whisper consumes
+  precomputed frame embeddings (``frames``), llava precomputed patch
+  embeddings (``patches``) — the backbone is the deliverable;
+* remat: each period is ``jax.checkpoint``-ed under ``cfg.remat`` so training
+  activations scale with O(periods · layer-input), not O(depth · hidden).
+
+Params are a plain pytree; sharding comes from ``repro.sharding`` leaf-path
+rules, so this file contains no mesh-axis names.
+
+Public entry points::
+
+    init_params(key, cfg)                     -> params
+    forward(params, batch, cfg)               -> (logits, aux_loss)
+    loss_fn(params, batch, cfg)               -> (scalar, metrics)
+    prefill(params, batch, cfg, max_len)      -> (last_logits, cache)
+    init_cache(cfg, batch, max_len)           -> cache pytree (decode state)
+    decode_step(params, token, cache, pos, cfg) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from . import attention as attn
+from . import mamba as mb
+from . import moe as moe_mod
+from . import xlstm as xl
+from .layers import (
+    apply_norm,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    sinusoidal_positions,
+    truncated_normal,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "init_cache",
+    "decode_step",
+    "padded_vocab",
+    "num_moe_layers",
+]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab padded to a 256 multiple: keeps the vocab-sharded lm-head and
+    embedding MXU/lane aligned (51865 -> 52096 etc.)."""
+    return _round_up(cfg.vocab, 256)
+
+
+def num_moe_layers(cfg) -> int:
+    return cfg.n_periods * sum(1 for b in cfg.pattern if b.ffn == "moe")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, blk) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"mixer_norm": norm_init(cfg.d_model, cfg.norm)}
+    if blk.mixer == "attn":
+        p["mixer"] = attn.attention_init(ks[0], cfg)
+    elif blk.mixer == "mamba":
+        p["mixer"] = mb.mamba_init(ks[0], cfg)
+    elif blk.mixer == "mlstm":
+        p["mixer"] = xl.mlstm_init(ks[0], cfg)
+    elif blk.mixer == "slstm":
+        p["mixer"] = xl.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown mixer {blk.mixer}")
+    if cfg.is_encoder_decoder:
+        p["cross_norm"] = norm_init(cfg.d_model, cfg.norm)
+        p["cross"] = attn.attention_init(ks[1], cfg, cross=True)
+    if blk.ffn == "mlp":
+        p["ffn_norm"] = norm_init(cfg.d_model, cfg.norm)
+        p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, cfg.param_dtype)
+    elif blk.ffn == "moe":
+        p["ffn_norm"] = norm_init(cfg.d_model, cfg.norm)
+        p["ffn"] = moe_mod.moe_init(ks[2], cfg)
+    elif blk.ffn != "none":
+        raise ValueError(f"unknown ffn {blk.ffn}")
+    return p
+
+
+def _init_period(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"b{bi}": _init_block(ks[bi], cfg, blk)
+        for bi, blk in enumerate(cfg.pattern)
+    }
+
+
+def _init_enc_layer(key, cfg) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_init(cfg.d_model, "ln"),
+        "attn": attn.attention_init(k1, cfg),
+        "mlp_norm": norm_init(cfg.d_model, "ln"),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", cfg.param_dtype),
+    }
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_periods + max(cfg.enc_layers, 1) + 4)
+    periods = [_init_period(ks[i], cfg) for i in range(cfg.n_periods)]
+    k_extra = ks[cfg.n_periods :]
+    pv = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_extra[0], pv, cfg.d_model, cfg.param_dtype),
+        "periods": _stack(periods),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            k_extra[1], cfg.d_model, pv, cfg.param_dtype
+        )
+    if cfg.pos == "learned":
+        params["pos_embed"] = truncated_normal(
+            k_extra[2], (cfg.max_pos, cfg.d_model), cfg.param_dtype, 0.02
+        )
+    if cfg.is_encoder_decoder:
+        enc_ks = k_extra[4 : 4 + cfg.enc_layers]
+        params["encoder"] = {
+            "layers": _stack([_init_enc_layer(k, cfg) for k in enc_ks]),
+            "final_norm": norm_init(cfg.d_model, "ln"),
+        }
+    if cfg.n_patches:
+        params["mm_proj"] = dense_init(
+            k_extra[3], cfg.d_model, cfg.d_model, cfg.param_dtype
+        )
+    return params
+
+
+def abstract_params(cfg, seed: int = 0):
+    """ShapeDtypeStruct pytree of the params — never allocates (dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(seed), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper backbone; conv frontend stubbed to frame embeddings)
+# ---------------------------------------------------------------------------
+
+def encode(params, frames, cfg):
+    """frames [B, n_frames, d_model] (precomputed stub embeddings)."""
+    x = frames.astype(cfg.dtype)
+    pos = jnp.asarray(
+        sinusoidal_positions(frames.shape[1], cfg.d_model), cfg.dtype
+    )
+    x = x + pos[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def enc_layer(h, lp):
+        y = apply_norm(h, lp["attn_norm"], "ln")
+        y = attn.attention_apply(lp["attn"], y, cfg, causal=False)
+        h = h + y
+        y = apply_norm(h, lp["mlp_norm"], "ln")
+        h = h + mlp_apply(lp["mlp"], y, "gelu")
+        h = constrain(h, ("batch", "seq", "embed"))
+        return h, None
+
+    fn = jax.checkpoint(enc_layer) if cfg.remat else enc_layer
+    x, _ = jax.lax.scan(
+        fn, x, params["encoder"]["layers"],
+        unroll=cfg.enc_layers if cfg.scan_unroll else 1,
+    )
+    return apply_norm(x, params["encoder"]["final_norm"], "ln")
+
+
+# ---------------------------------------------------------------------------
+# Decoder-side full-sequence pass
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, blk, x, cfg, positions, enc_states, aux):
+    h = apply_norm(x, p["mixer_norm"], cfg.norm)
+    if blk.mixer == "attn":
+        h = attn.attention_apply(
+            p["mixer"], h, cfg, positions=positions, causal=True,
+            window=cfg.window,
+        )
+    elif blk.mixer == "mamba":
+        h = mb.mamba_apply(p["mixer"], h, cfg)
+    elif blk.mixer == "mlstm":
+        h = xl.mlstm_apply(p["mixer"], h, cfg)
+    elif blk.mixer == "slstm":
+        h = xl.slstm_apply(p["mixer"], h, cfg)
+    x = x + h
+    if cfg.is_encoder_decoder:
+        h = apply_norm(x, p["cross_norm"], cfg.norm)
+        h = attn.attention_apply(
+            p["cross"], h, cfg, causal=False, kv_states=enc_states
+        )
+        x = x + h
+    if blk.ffn != "none":
+        h = apply_norm(x, p["ffn_norm"], cfg.norm)
+        if blk.ffn == "mlp":
+            x = x + mlp_apply(p["ffn"], h, cfg.mlp)
+        else:
+            moe_fn = (moe_mod.moe_apply_row_local if cfg.moe_row_local
+                      else moe_mod.moe_apply)
+            mo, a = moe_fn(p["ffn"], h, cfg)
+            x = x + mo
+            aux = aux + a
+    # act_seq: the block-boundary tensor is what the remat'd period scan
+    # SAVES — sharding its sequence dim (SP) divides stored-activation HBM
+    # by the model-axis size at the price of boundary all-gathers.
+    x = constrain(x, ("batch", "act_seq", "embed"))
+    return x, aux
+
+
+def _embed_inputs(params, batch, cfg):
+    """Token (+ modality prefix) embedding.  Returns (x, positions)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_patches:
+        patches = batch["patches"].astype(cfg.dtype)
+        patches = jnp.einsum("bpd,de->bpe", patches, params["mm_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], positions[0], axis=0)[None]
+    return constrain(x.astype(cfg.dtype), ("batch", "seq", "embed")), positions
+
+
+def _head(params, x, cfg):
+    """Final logits in fp32 (never materializes an fp32 weight copy)."""
+    if cfg.tie_embeddings:
+        return jnp.einsum(
+            "bsd,vd->bsv", x, params["embed"],
+            preferred_element_type=jnp.float32,
+        )
+    return jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def forward(params, batch, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence logits [B, S_total, padded_vocab] + MoE aux loss."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    enc_states = (
+        encode(params, batch["frames"], cfg) if cfg.is_encoder_decoder else None
+    )
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def period_fn(carry, pp):
+        h, aux = carry
+        for bi, blk in enumerate(cfg.pattern):
+            h, aux = _apply_block(
+                pp[f"b{bi}"], blk, h, cfg, positions, enc_states, aux
+            )
+        return (h, aux), None
+
+    fn = jax.checkpoint(period_fn) if cfg.remat else period_fn
+    (x, aux), _ = jax.lax.scan(
+        fn, (x, aux0), params["periods"],
+        unroll=cfg.n_periods if cfg.scan_unroll else 1,
+    )
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _head(params, x, cfg)
+    return constrain(logits, ("batch", "seq", "vocab")), aux
+
+
+def loss_fn(params, batch, cfg):
+    """Mean next-token cross entropy (+ router aux).  ``labels`` are already
+    aligned to predict-next; positions with label < 0 are masked out."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.n_patches:  # image-prefix positions carry no labels
+        logits = logits[:, cfg.n_patches :]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt) * mask
+    ntok = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll) / ntok
+    nm = num_moe_layers(cfg)
+    total = ce + (cfg.router_aux * aux / nm if nm else 0.0)
+    metrics = {"loss": total, "ce": ce, "aux": aux, "ntok": ntok}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence pass that also emits the decode cache
+# ---------------------------------------------------------------------------
+
+def _prefill_block(p, blk, x, cfg, positions, enc_states, max_len):
+    h = apply_norm(x, p["mixer_norm"], cfg.norm)
+    if blk.mixer == "attn":
+        h, c = attn.attention_prefill(
+            p["mixer"], h, cfg, max_len, positions=positions, window=cfg.window
+        )
+    elif blk.mixer == "mamba":
+        h, c = mb.mamba_apply(p["mixer"], h, cfg, return_state=True)
+    elif blk.mixer == "mlstm":
+        h, c = xl.mlstm_apply(p["mixer"], h, cfg, return_state=True)
+    elif blk.mixer == "slstm":
+        h, c = xl.slstm_apply(p["mixer"], h, cfg, return_state=True)
+    x = x + h
+    cache = {"mixer": c}
+    if cfg.is_encoder_decoder:
+        ckv = attn.cross_kv(p["cross"], enc_states)
+        h = apply_norm(x, p["cross_norm"], cfg.norm)
+        h = attn.attention_apply(
+            p["cross"], h, cfg, causal=False, kv_states=enc_states
+        )
+        x = x + h
+        cache["cross"] = ckv
+    if blk.ffn != "none":
+        h = apply_norm(x, p["ffn_norm"], cfg.norm)
+        if blk.ffn == "mlp":
+            x = x + mlp_apply(p["ffn"], h, cfg.mlp)
+        else:
+            moe_fn = (moe_mod.moe_apply_row_local if cfg.moe_row_local
+                      else moe_mod.moe_apply)
+            mo, _ = moe_fn(
+                p["ffn"], h, cfg, capacity_factor=cfg.moe_capacity_serve
+            )
+            x = x + mo
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, cache
+
+
+def prefill(params, batch, cfg, max_len: int):
+    """Returns (last-position logits [B, pv], decode cache)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    enc_states = (
+        encode(params, batch["frames"], cfg) if cfg.is_encoder_decoder else None
+    )
+
+    def period_fn(h, pp):
+        cache = {}
+        for bi, blk in enumerate(cfg.pattern):
+            h, c = _prefill_block(
+                pp[f"b{bi}"], blk, h, cfg, positions, enc_states, max_len
+            )
+            cache[f"b{bi}"] = c
+        return h, cache
+
+    x, caches = jax.lax.scan(
+        period_fn, x, params["periods"],
+        unroll=cfg.n_periods if cfg.scan_unroll else 1,
+    )
+    x = apply_norm(x[:, -1:], params["final_norm"], cfg.norm)
+    logits = _head(params, x, cfg)[:, 0]
+    return logits, {"periods": caches}
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the cache
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(cfg, blk, batch: int, max_len: int):
+    if blk.mixer == "attn":
+        c = attn.init_kv_cache(cfg, batch, max_len, window=cfg.window)
+    elif blk.mixer == "mamba":
+        c = mb.init_mamba_cache(cfg, batch)
+    elif blk.mixer == "mlstm":
+        c = xl.init_mlstm_cache(cfg, batch)
+    elif blk.mixer == "slstm":
+        c = xl.init_slstm_cache(cfg, batch)
+    out = {"mixer": c}
+    if cfg.is_encoder_decoder:
+        out["cross"] = {
+            "k": jnp.zeros(
+                (batch, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim), cfg.dtype
+            ),
+            "v": jnp.zeros(
+                (batch, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim), cfg.dtype
+            ),
+        }
+    return out
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Fresh (empty) decode cache — the dry-run's serve-state stand-in."""
+    period = {
+        f"b{bi}": _init_block_cache(cfg, blk, batch, max_len)
+        for bi, blk in enumerate(cfg.pattern)
+    }
+    periods = jax.tree.map(
+        lambda x: jnp.tile(x[None], (cfg.n_periods,) + (1,) * x.ndim), period
+    )
+    return {"periods": periods}
+
+
+def decode_step(params, token, cache, cur_pos, cfg):
+    """token [B, 1] int32, cur_pos scalar int32 -> (logits [B, pv], cache)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], cur_pos, 1, axis=0
+        )[None]
+    x = constrain(x, ("batch", None, "embed"))
+
+    def period_fn(h, inp):
+        pp, pc = inp
+        new_pc = {}
+        for bi, blk in enumerate(cfg.pattern):
+            p, c = pp[f"b{bi}"], pc[f"b{bi}"]
+            y = apply_norm(h, p["mixer_norm"], cfg.norm)
+            if blk.mixer == "attn":
+                y, nc = attn.attention_decode(
+                    p["mixer"], y, c["mixer"], cur_pos, cfg, window=cfg.window
+                )
+            elif blk.mixer == "mamba":
+                y, nc = mb.mamba_decode(p["mixer"], y, c["mixer"], cfg)
+            elif blk.mixer == "mlstm":
+                y, nc = xl.mlstm_decode(p["mixer"], y, c["mixer"], cfg)
+            elif blk.mixer == "slstm":
+                y, nc = xl.slstm_decode(p["mixer"], y, c["mixer"], cfg)
+            h = h + y
+            ncache = {"mixer": nc}
+            if cfg.is_encoder_decoder:
+                y = apply_norm(h, p["cross_norm"], cfg.norm)
+                y = attn.cross_attention_decode(p["cross"], y, c["cross"], cfg)
+                h = h + y
+                ncache["cross"] = c["cross"]
+            if blk.ffn != "none":
+                y = apply_norm(h, p["ffn_norm"], cfg.norm)
+                if blk.ffn == "mlp":
+                    h = h + mlp_apply(p["ffn"], y, cfg.mlp)
+                else:
+                    moe_fn = (moe_mod.moe_apply_row_local
+                              if cfg.moe_row_local else moe_mod.moe_apply)
+                    mo, _ = moe_fn(
+                        p["ffn"], y, cfg,
+                        capacity_factor=cfg.moe_capacity_serve,
+                    )
+                    h = h + mo
+            new_pc[f"b{bi}"] = ncache
+        h = constrain(h, ("batch", None, "embed"))
+        return h, new_pc
+
+    x, new_periods = jax.lax.scan(
+        period_fn, x, (params["periods"], cache["periods"]),
+        unroll=cfg.n_periods if cfg.scan_unroll else 1,
+    )
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = _head(params, x, cfg)[:, 0]
+    return logits, {"periods": new_periods}

@@ -1,0 +1,300 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential) — arch ``xlstm-1.3b`` interleaves them 7:1.
+
+mLSTM is linear attention with per-step scalar gates:
+
+    C_t = f_t·C_{t-1} + i_t·(k_t v_tᵀ)      C ∈ [hd, hd]   (matrix memory)
+    n_t = f_t·n_{t-1} + i_t·k_t
+    h_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, 1)
+
+Training uses the **chunkwise form** (GLA-style): intra-chunk quadratic
+attention with log-space decay ratios + an inter-chunk recurrent state carried
+by ``lax.scan`` — O(S·C) work, O(S/C) sequential depth, never materializing a
+per-step [hd, hd] memory.  Decode is the O(1) recurrence.
+
+sLSTM keeps exponential gating but a scalar memory per unit; its recurrence
+(block-diagonal per head) is inherently sequential -> ``lax.scan`` over time.
+
+Simplification vs the paper (documented in DESIGN.md): the max-tracking
+stabilizer m_t is replaced by capping the input gate at exp(min(ĩ, 0)) and
+sigmoid forget gates — stable in bf16 and identical in structure.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode",
+    "init_mlstm_cache",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode",
+    "init_slstm_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    di = cfg.xlstm_d_inner
+    h, hd = cfg.n_heads, cfg.xlstm_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, di, cfg.param_dtype),
+        "w_z": dense_init(ks[1], d, di, cfg.param_dtype),
+        "conv_w": dense_init(ks[2], 4, di, jnp.float32).T,  # [di, 4]
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[3], di, (h, hd), cfg.param_dtype),
+        "wk": dense_init(ks[4], di, (h, hd), cfg.param_dtype),
+        "wv": dense_init(ks[5], di, (h, hd), cfg.param_dtype),
+        "w_gates": dense_init(ks[6], di, 2 * h, jnp.float32),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 * jnp.ones((h,), jnp.float32)]
+        ),  # forget gates biased open, the usual LSTM trick
+        "h_scale": jnp.ones((h, hd), jnp.float32),
+        "w_down": dense_init(ks[7], di, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + pad[:, i : i + s].astype(jnp.float32) * w[:, i]
+    return (out + b).astype(x.dtype)
+
+
+def _mlstm_qkvg(params, xn, cfg):
+    xu = jnp.einsum("bsd,de->bse", xn, params["w_up"])
+    z = jnp.einsum("bsd,de->bse", xn, params["w_z"])
+    xc = jax.nn.silu(_causal_conv(xu, params["conv_w"], params["conv_b"]))
+    q = jnp.einsum("bse,ehd->bshd", xc, params["wq"])
+    k = jnp.einsum("bse,ehd->bshd", xc, params["wk"]) * cfg.xlstm_head_dim**-0.5
+    v = jnp.einsum("bse,ehd->bshd", xu, params["wv"])
+    gates = (
+        jnp.einsum("bse,eg->bsg", xc.astype(jnp.float32), params["w_gates"])
+        + params["gate_bias"]
+    )
+    h = cfg.n_heads
+    i_gate = jnp.exp(jnp.minimum(gates[..., :h], 0.0))  # (0, 1]
+    log_f = jax.nn.log_sigmoid(gates[..., h:])  # log decay, < 0
+    return xu, z, q, k, v, i_gate, log_f
+
+
+def mlstm_apply(params, x, cfg, return_state: bool = False):
+    """Chunkwise-parallel forward: x [B,S,d] -> [B,S,d] (x pre-normed)."""
+    b, s, _ = x.shape
+    hn, hd = cfg.n_heads, cfg.xlstm_head_dim
+    c = min(cfg.xlstm_chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    xu, z, q, k, v, i_gate, log_f = _mlstm_qkvg(params, x, cfg)
+
+    def chunked(t):  # [B,S,...] -> [NC,B,C,...]
+        return t.reshape(b, nc, c, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = chunked(q), chunked(k), chunked(v)
+    ic, lfc = chunked(i_gate), chunked(log_f)
+
+    s0 = jnp.zeros((b, hn, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, hn, hd), jnp.float32)
+
+    def step(carry, inp):
+        s_state, n_state = carry
+        qq, kk, vv, ii, lf = inp  # [B,C,H,*]
+        cum = jnp.cumsum(lf, axis=1)  # [B,C,H] inclusive log-decay
+        # intra-chunk: scores(t,τ) = q_t·k_τ · exp(cum_t − cum_τ) · i_τ, τ ≤ t
+        qk = jnp.einsum(
+            "bthd,bshd->bhts", qq, kk, preferred_element_type=jnp.float32
+        )
+        ratio = cum.transpose(0, 2, 1)[:, :, :, None] - cum.transpose(0, 2, 1)[
+            :, :, None, :
+        ]
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        decay = jnp.where(causal, jnp.exp(ratio), 0.0)
+        scores = qk * decay * ii.transpose(0, 2, 1)[:, :, None, :]
+        num_intra = jnp.einsum("bhts,bshd->bthd", scores, vv.astype(jnp.float32))
+        den_intra = jnp.sum(scores, axis=-1).transpose(0, 2, 1)  # [B,C,H]
+        # inter-chunk: carry-in state scaled by exp(cum_t)
+        et = jnp.exp(cum)  # [B,C,H]
+        num_inter = (
+            jnp.einsum("bthd,bhde->bthe", qq.astype(jnp.float32), s_state)
+            * et[..., None]
+        )
+        den_inter = (
+            jnp.einsum("bthd,bhd->bth", qq.astype(jnp.float32), n_state) * et
+        )
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+        hh = (num_intra + num_inter) / den[..., None]
+        # state update: S' = exp(tot)·S + Σ_τ exp(tot − cum_τ)·i_τ·k_τ v_τᵀ
+        tot = cum[:, -1]  # [B,H]
+        w_tau = jnp.exp(tot[:, None] - cum) * ii  # [B,C,H]
+        kv = jnp.einsum(
+            "bshd,bshe->bhde",
+            kk.astype(jnp.float32) * w_tau[..., None],
+            vv.astype(jnp.float32),
+        )
+        s_new = jnp.exp(tot)[..., None, None] * s_state + kv
+        n_new = jnp.exp(tot)[..., None] * n_state + jnp.einsum(
+            "bshd,bsh->bhd", kk.astype(jnp.float32), w_tau
+        )
+        return (s_new, n_new), hh
+
+    (s_f, n_f), hs = jax.lax.scan(
+        step, (s0, n0), (qc, kc, vc, ic, lfc),
+        unroll=min(max(cfg.mlstm_unroll, 1), nc),
+    )
+    h = hs.swapaxes(0, 1).reshape(b, s, hn, hd)  # [B,S,H,hd]
+    h = rms_norm(h, params["h_scale"]).reshape(b, s, hn * hd)
+    out = h.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_down"])
+    if not return_state:
+        return out
+    cache = {"conv": xu[:, -3:].astype(cfg.dtype), "S": s_f, "n": n_f}
+    return out, cache
+
+
+def init_mlstm_cache(cfg, batch: int):
+    hn, hd = cfg.n_heads, cfg.xlstm_head_dim
+    return {
+        "conv": jnp.zeros((batch, 3, cfg.xlstm_d_inner), cfg.dtype),
+        "S": jnp.zeros((batch, hn, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, hn, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg) -> Tuple[jnp.ndarray, dict]:
+    b = x.shape[0]
+    hn, hd = cfg.n_heads, cfg.xlstm_head_dim
+    xu = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    window = jnp.concatenate([cache["conv"], xu.astype(cfg.dtype)], axis=1)
+    conv = jnp.einsum(
+        "bki,ik->bi", window.astype(jnp.float32), params["conv_w"]
+    )
+    xc = jax.nn.silu(conv + params["conv_b"]).astype(x.dtype)[:, None, :]
+    q = jnp.einsum("bse,ehd->bshd", xc, params["wq"])[:, 0]
+    k = (
+        jnp.einsum("bse,ehd->bshd", xc, params["wk"])[:, 0]
+        * cfg.xlstm_head_dim**-0.5
+    )
+    v = jnp.einsum("bse,ehd->bshd", xu, params["wv"])[:, 0]
+    gates = (
+        jnp.einsum("be,eg->bg", xc[:, 0].astype(jnp.float32), params["w_gates"])
+        + params["gate_bias"]
+    )
+    i_g = jnp.exp(jnp.minimum(gates[:, :hn], 0.0))[..., None]
+    f_g = jax.nn.sigmoid(gates[:, hn:])[..., None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    s_new = f_g[..., None] * cache["S"] + i_g[..., None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n_new = f_g * cache["n"] + i_g * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, s_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)), 1.0)
+    h = (num / den[..., None]).reshape(b, 1, hn, hd)
+    h = rms_norm(h, params["h_scale"]).reshape(b, 1, hn * hd)
+    out = h.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", out, params["w_down"])
+    return out, {"conv": window[:, 1:], "S": s_new, "n": n_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hd = d // hn
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, cfg.param_dtype),  # z,i,f,o
+        "r": dense_init(ks[1], hd, (hn, 4 * hd), jnp.float32).transpose(1, 0, 2),
+        "bias": jnp.concatenate(
+            [
+                jnp.zeros((2 * d,), jnp.float32),
+                3.0 * jnp.ones((d,), jnp.float32),  # forget bias
+                jnp.zeros((d,), jnp.float32),
+            ]
+        ),
+        "h_scale": jnp.ones((hn, hd), jnp.float32),
+        "w_out": dense_init(ks[2], d, d, cfg.param_dtype),
+    }
+
+
+def _slstm_cell(params, wx_t, state, cfg):
+    """One recurrence step.  wx_t [B, 4d] precomputed input projection."""
+    d = cfg.d_model
+    hn = cfg.n_heads
+    hd = d // hn
+    h_prev, c_prev, n_prev = state  # [B,hn,hd] each
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, params["r"]).reshape(-1, 4 * d)
+    pre = wx_t.astype(jnp.float32) + rec + params["bias"]
+    zg, ig, fg, og = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zg).reshape(-1, hn, hd)
+    i = jnp.exp(jnp.minimum(ig, 0.0)).reshape(-1, hn, hd)
+    f = jax.nn.sigmoid(fg).reshape(-1, hn, hd)
+    o = jax.nn.sigmoid(og).reshape(-1, hn, hd)
+    c = f * c_prev + i * z
+    n = f * n_prev + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (h, c, n)
+
+
+def slstm_apply(params, x, cfg, return_state: bool = False):
+    """Sequential forward: x [B,S,d] -> [B,S,d] (x pre-normed)."""
+    b, s, d = x.shape
+    hn = cfg.n_heads
+    hd = d // hn
+    wx = jnp.einsum("bsd,de->bse", x, params["w_in"])  # [B,S,4d]
+
+    def step(state, wx_t):
+        new = _slstm_cell(params, wx_t, state, cfg)
+        return new, new[0]
+
+    init = tuple(jnp.zeros((b, hn, hd), jnp.float32) for _ in range(3))
+    (h_f, c_f, n_f), hs = jax.lax.scan(
+        step, init, wx.swapaxes(0, 1), unroll=cfg.slstm_unroll
+    )
+    h = hs.swapaxes(0, 1)  # [B,S,hn,hd]
+    h = rms_norm(h, params["h_scale"]).reshape(b, s, d)
+    out = jnp.einsum("bsd,de->bse", h.astype(x.dtype), params["w_out"])
+    if not return_state:
+        return out
+    return out, {"h": h_f, "c": c_f, "n": n_f}
+
+
+def init_slstm_cache(cfg, batch: int):
+    hn = cfg.n_heads
+    hd = cfg.d_model // hn
+    return {
+        "h": jnp.zeros((batch, hn, hd), jnp.float32),
+        "c": jnp.zeros((batch, hn, hd), jnp.float32),
+        "n": jnp.zeros((batch, hn, hd), jnp.float32),
+    }
+
+
+def slstm_decode(params, x, cache, cfg) -> Tuple[jnp.ndarray, dict]:
+    b, _, d = x.shape
+    hn = cfg.n_heads
+    hd = d // hn
+    wx = jnp.einsum("bsd,de->bse", x, params["w_in"])[:, 0]
+    h, c, n = _slstm_cell(params, wx, (cache["h"], cache["c"], cache["n"]), cfg)
+    hh = rms_norm(h, params["h_scale"]).reshape(b, 1, d)
+    out = jnp.einsum("bsd,de->bse", hh.astype(x.dtype), params["w_out"])
+    return out, {"h": h, "c": c, "n": n}

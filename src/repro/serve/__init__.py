@@ -1,0 +1,11 @@
+"""Serving substrate: continuous-batching engine over prefill/decode steps.
+
+The per-layer KV/state cache structures live with their mixers in
+``repro.models`` (ring-buffer SWA cache, Mamba/xLSTM recurrent state); this
+package adds request scheduling, slot management and sampling.
+"""
+
+from . import engine
+from .engine import Engine, Request, Result, ServeConfig
+
+__all__ = ["Engine", "Request", "Result", "ServeConfig", "engine"]

@@ -1,0 +1,209 @@
+"""Batched serving engine: continuous batching over prefill + decode steps.
+
+The step functions come from ``repro.models.model`` (``prefill`` /
+``decode_step``); this module adds the scheduling layer a serving deployment
+needs:
+
+* **slot-based continuous batching** — a fixed decode batch of ``slots``;
+  finished sequences free their slot, queued requests are prefillied into
+  the vacant slot's cache lines (cache surgery via ``jax.tree.map`` on the
+  batch axis);
+* **two compiled programs** only (one prefill shape, one decode shape) so
+  serving never recompiles mid-flight — requests are right-padded to the
+  prefill length;
+* greedy / temperature sampling;
+* per-request max-token and EOS stopping.
+
+On a mesh the same engine runs with the decode batch sharded over ``data``
+and the cache sequence-sharded over ``model`` (SERVE_RULES); the CPU tests
+run it unsharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+
+__all__ = ["Request", "Result", "ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: List[int]  # prompt
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: List[int]  # generated continuation
+    prompt_len: int
+    latency_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4  # decode batch size
+    prefill_len: int = 64  # compiled prefill shape (prompts right-padded)
+    max_len: int = 256  # KV-cache capacity
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    """Single-program continuous-batching engine around one model."""
+
+    def __init__(self, params, cfg, scfg: ServeConfig) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self._queue: Deque[Request] = deque()
+        self._results: List[Result] = []
+        self._rng = jax.random.key(scfg.seed)
+
+        # slot bookkeeping (host side)
+        self._slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self._slot_pos: np.ndarray = np.zeros(scfg.slots, np.int32)
+        self._slot_new: List[List[int]] = [[] for _ in range(scfg.slots)]
+        self._slot_t0: List[float] = [0.0] * scfg.slots
+        self._last_tok = np.zeros(scfg.slots, np.int32)
+
+        self.cache = model_lib.init_cache(cfg, scfg.slots, scfg.max_len)
+
+        # SSM/hybrid mixers carry recurrent state: right-padding a prompt
+        # would push pad tokens through the recurrence, so those archs
+        # prefill at the exact prompt length (one compile per distinct
+        # length); attention-only archs use the single padded prefill shape
+        # (pad KV entries are masked until overwritten by real tokens).
+        self.exact_prefill = any(b.mixer != "attn" for b in cfg.pattern)
+
+        self._prefill_one = jax.jit(
+            lambda p, b: model_lib.prefill(p, b, cfg, scfg.max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model_lib.decode_step(p, t, c, pos, cfg)
+        )
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def run(self) -> List[Result]:
+        """Drive to completion; returns results in finish order."""
+        while self._queue or any(r is not None for r in self._slot_req):
+            self._admit()
+            self._decode_tick()
+        out, self._results = self._results, []
+        return out
+
+    # -- internals -----------------------------------------------------------
+    def _admit(self) -> None:
+        for slot in range(self.scfg.slots):
+            if self._slot_req[slot] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            self._slot_t0[slot] = time.perf_counter()
+            if self.exact_prefill:
+                toks = np.asarray([req.tokens], np.int32)
+            else:
+                toks = np.full((1, self.scfg.prefill_len), 0, np.int32)
+                toks[0, : len(req.tokens)] = req.tokens
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, cache1 = self._prefill_one(self.params, batch)
+            # place the prefilled cache lines into this slot
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache,
+                cache1,
+            )
+            self._slot_req[slot] = req
+            self._slot_new[slot] = []
+            if self.exact_prefill:
+                # recurrence consumed the prompt exactly once; the first new
+                # token comes straight from the prefill logits.
+                tok0 = int(self._sample(logits)[0])
+                self._slot_pos[slot] = len(req.tokens)
+                self._last_tok[slot] = tok0
+                self._slot_new[slot].append(tok0)
+                if req.max_new_tokens <= 1 or tok0 == req.eos:
+                    self._finish_slot(slot)
+            else:
+                # attention caches are idempotent under re-write: the first
+                # decode tick re-emits the last prompt token's KV and samples
+                # the next token; pad KV entries stay masked until real
+                # tokens overwrite their slots.
+                self._slot_pos[slot] = len(req.tokens) - 1
+                self._last_tok[slot] = req.tokens[-1]
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        logits = logits[:, : self.cfg.vocab]  # drop padded vocab tail
+        if self.scfg.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return np.asarray(
+            jax.random.categorical(k, logits / self.scfg.temperature), np.int32
+        )
+
+    def _decode_tick(self) -> None:
+        active = [s for s in range(self.scfg.slots) if self._slot_req[s] is not None]
+        if not active:
+            return
+        # the compiled decode program is batch-uniform in cur_pos; slots may
+        # differ -> run per distinct position group (rare; prompts are padded
+        # to similar lengths in practice).
+        positions = {int(self._slot_pos[s]) for s in active}
+        for pos in sorted(positions):
+            group = [s for s in active if int(self._slot_pos[s]) == pos]
+            toks = jnp.asarray(self._last_tok[:, None], jnp.int32)
+            logits, new_cache = self._decode(
+                self.params, toks, self.cache, jnp.asarray(pos, jnp.int32)
+            )
+            # only the group's slots advance; others keep their cache rows
+            keep = np.zeros(self.scfg.slots, bool)
+            keep[group] = True
+            keep_dev = jnp.asarray(keep)
+
+            def merge(new, old):
+                mask = keep_dev.reshape(
+                    (1, self.scfg.slots) + (1,) * (new.ndim - 2)
+                )
+                return jnp.where(mask, new, old)
+
+            self.cache = jax.tree.map(merge, new_cache, self.cache)
+            nxt = self._sample(logits)
+            for s in group:
+                self._advance_slot(s, int(nxt[s]))
+
+    def _advance_slot(self, slot: int, tok: int) -> None:
+        req = self._slot_req[slot]
+        assert req is not None
+        self._slot_new[slot].append(tok)
+        self._slot_pos[slot] += 1
+        self._last_tok[slot] = tok
+        if len(self._slot_new[slot]) >= req.max_new_tokens or (
+            req.eos is not None and tok == req.eos
+        ):
+            self._finish_slot(slot)
+
+    def _finish_slot(self, slot: int) -> None:
+        req = self._slot_req[slot]
+        assert req is not None
+        self._results.append(
+            Result(
+                uid=req.uid,
+                tokens=list(self._slot_new[slot]),
+                prompt_len=len(req.tokens),
+                latency_s=time.perf_counter() - self._slot_t0[slot],
+            )
+        )
+        self._slot_req[slot] = None

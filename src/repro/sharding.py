@@ -1,0 +1,339 @@
+"""Logical-axis sharding policy (MaxText-style).
+
+Model code never names mesh axes.  It annotates tensors with *logical* axes
+(``batch``, ``seq``, ``heads``, ``ffn``, ...) via :func:`constrain`, and
+parameter leaves get logical axes from their *path* (``wq`` -> (fsdp, heads,
+head_dim)).  A :class:`ShardingPolicy` maps logical axes onto mesh axes and
+is installed as a context; with no active policy every annotation is a no-op,
+so the same model definition serves single-device CPU smoke tests and the
+512-chip dry-run unchanged.
+
+Resolution rules (applied per tensor):
+
+* a logical axis maps to one mesh axis or a tuple of mesh axes;
+* mesh axes missing from the active mesh are dropped (single-pod vs
+  multi-pod reuse one rule set);
+* a mesh axis may appear **once** per PartitionSpec — later logical axes
+  that want an already-used mesh axis fall back to replication.  This is
+  what lets one rule set serve MoE (expert wins ``model``, ffn falls back)
+  and dense (ffn takes ``model``) weights alike;
+* a dimension not divisible by its mesh-axis product falls back to
+  replication (e.g. MQA's kv_heads=1, qwen2-moe's 60 experts on a 16-way
+  axis) instead of forcing GSPMD padding.
+
+Two built-in rule sets: ``TRAIN_RULES`` (batch-DP + FSDP over ``data``, TP
+over ``model``) and ``SERVE_RULES`` (weights replicated over ``data``, TP
+over ``model``, KV-cache sequence sharded over ``model`` — SP decode).
+Hillclimbing (EXPERIMENTS.md §Perf) swaps individual rules.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "AxisRules",
+    "ShardingPolicy",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "active_policy",
+    "constrain",
+    "use_policy",
+    "logical_spec",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+#: logical axis -> mesh axes.  ``fsdp`` is the *parameter* embed/width dim
+#: (sharded over data for ZeRO-3); activation ``embed`` stays replicated.
+TRAIN_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # the *saved* (remat carry) activations' sequence dim: mapping this to
+    # "model" is Megatron-style sequence parallelism — 16x less HBM for
+    # stored layer inputs, paid for with per-period all-gathers.  Off in the
+    # baseline; production policy for the largest train cells (see
+    # launch/dryrun.PROD_OVERRIDES) and a §Perf hillclimb knob.
+    "act_seq": None,
+    "embed": None,
+    "fsdp": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "expert": "model",
+    "vocab": "model",
+    "kv_seq": None,
+    "state": None,
+    "moe_cap": "data",  # MoE dispatch-buffer capacity dim (EP layout)
+}
+
+SERVE_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,
+    "embed": None,
+    "fsdp": None,  # serving keeps full weight replicas per data shard
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "expert": "model",
+    "vocab": "model",
+    "kv_seq": "model",  # SP: decode cache sequence dim over model
+    "state": "model",  # SSM / mLSTM state inner dim
+    "moe_cap": "data",
+}
+
+
+class AxisRules:
+    """Immutable logical->mesh axis mapping with override support."""
+
+    def __init__(self, rules: Dict[str, MeshAxes]) -> None:
+        self._rules = dict(rules)
+
+    def get(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self._rules.get(logical, None)
+        if axes is None:
+            return ()
+        if isinstance(axes, str):
+            return (axes,)
+        return tuple(axes)
+
+    def override(self, **updates: MeshAxes) -> "AxisRules":
+        merged = dict(self._rules)
+        merged.update(updates)
+        return AxisRules(merged)
+
+    def items(self):
+        return self._rules.items()
+
+
+class ShardingPolicy:
+    """Binds an :class:`AxisRules` to a concrete mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Union[AxisRules, Dict[str, MeshAxes]]):
+        self.mesh = mesh
+        self.rules = rules if isinstance(rules, AxisRules) else AxisRules(rules)
+
+    def spec(
+        self, logical: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None
+    ) -> PartitionSpec:
+        """Resolve logical axes to a PartitionSpec (see module doc rules)."""
+        used: set = set()
+        out = []
+        for i, name in enumerate(logical):
+            axes = [
+                a
+                for a in self.rules.get(name)
+                if a in self.mesh.shape and a not in used
+            ]
+            if shape is not None and axes:
+                nshards = 1
+                for a in axes:
+                    nshards *= self.mesh.shape[a]
+                if shape[i] % nshards != 0:
+                    axes = []
+            if not axes:
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(tuple(axes) if len(axes) > 1 else axes[0])
+        while out and out[-1] is None:
+            out.pop()
+        return PartitionSpec(*out)
+
+    def sharding(
+        self, logical: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def constrain(self, x, logical: Sequence[Optional[str]]):
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(logical, x.shape)
+        )
+
+
+_STATE = threading.local()
+
+
+def active_policy() -> Optional[ShardingPolicy]:
+    return getattr(_STATE, "policy", None)
+
+
+@contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = active_policy()
+    _STATE.policy = policy
+    try:
+        yield policy
+    finally:
+        _STATE.policy = prev
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """Annotate ``x`` with logical axes; no-op without an active policy."""
+    pol = active_policy()
+    if pol is None:
+        return x
+    return pol.constrain(x, logical)
+
+
+def logical_spec(logical: Sequence[Optional[str]], shape=None) -> PartitionSpec:
+    """Resolve under the active policy (PartitionSpec() when none active)."""
+    pol = active_policy()
+    if pol is None:
+        return PartitionSpec()
+    return pol.spec(logical, shape)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-path -> logical axes (parameters, optimizer state, caches, batches)
+# ---------------------------------------------------------------------------
+
+#: parameter leaf name -> logical axes of its (unstacked) shape.
+PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / heads
+    "embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "pos_embed": (None, "fsdp"),
+    "mm_proj": ("fsdp", None),
+    # attention
+    "wq": ("fsdp", "heads", "head_dim"),
+    "wk": ("fsdp", "kv_heads", "head_dim"),
+    "wv": ("fsdp", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "fsdp"),
+    # dense MLP (also MoE shared experts)
+    "w_gate": ("fsdp", "ffn"),
+    "w_up": ("fsdp", "ffn"),
+    "w_down": ("ffn", "fsdp"),
+    # MoE
+    "router": ("fsdp", None),
+    "we_gate": ("expert", "fsdp", "ffn"),
+    "we_up": ("expert", "fsdp", "ffn"),
+    "we_down": ("expert", "ffn", "fsdp"),
+    # mamba (di = expanded inner dim -> "ffn" logical axis)
+    "in_proj": ("fsdp", "ffn"),
+    "conv_w": ("ffn", None),
+    "conv_b": ("ffn",),
+    "x_proj": ("ffn", None),
+    "dt_proj": (None, "ffn"),
+    "dt_bias": ("ffn",),
+    "A_log": ("ffn", "state"),
+    "D": ("ffn",),
+    "out_proj": ("ffn", "fsdp"),
+    # xLSTM
+    "w_z": ("fsdp", "ffn"),
+    "w_gates": ("ffn", None),
+    "w_in": ("fsdp", "ffn"),
+    "w_out": ("fsdp", None),
+    "r": ("heads", "head_dim", None),
+    # norms / small vectors: replicated
+    "scale": (),
+    "bias": (),
+    "gate_bias": (),
+    "h_scale": (),
+}
+
+#: decode-cache leaf name -> logical axes.
+CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "pos": ("batch", "kv_seq"),
+    "conv": ("batch", None, "ffn"),
+    "h": ("batch", "ffn", "state"),
+    "S": ("batch", "heads", None, "state"),
+    "n": ("batch", "heads", "state"),
+    "c": ("batch", "heads", "state"),
+}
+
+#: batch-input leaf name -> logical axes.
+BATCH_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", "embed"),
+    "patches": ("batch", "seq", "embed"),
+    "token": ("batch", None),
+    "cur_pos": (),
+}
+
+_FACTORED_SUFFIX = {"vr": -1, "vc": -2}  # adafactor factored stats
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return names
+
+
+def _leaf_logical(path, ndim: int, table: Dict) -> Tuple[Optional[str], ...]:
+    """Resolve a leaf's logical axes from its path.
+
+    Handles: scan-stacked leading axes (periods/layers -> extra None dims),
+    optimizer-state wrappers (mu/nu/v mirror the param), and adafactor's
+    factored vr/vc (parent's axes minus the reduced dim).
+    """
+    names = _path_names(path)
+    if not names:
+        return (None,) * ndim
+    last = names[-1]
+    drop = None
+    if last in _FACTORED_SUFFIX and len(names) >= 2 and names[-2] in table:
+        drop = _FACTORED_SUFFIX[last]
+        last = names[-2]
+    elif last == "v" and len(names) >= 2 and names[-2] in table:
+        # adafactor unfactored stat wraps the param name
+        last = names[-2]
+    logical = table.get(last)
+    if logical is None:
+        return (None,) * ndim
+    logical = tuple(logical)
+    if drop is not None:
+        idx = len(logical) + drop
+        logical = logical[:idx] + logical[idx + 1 :]
+    # scan-stacked (periods / encoder layers / microbatch) leading dims
+    while len(logical) < ndim:
+        logical = (None,) + logical
+    if len(logical) > ndim:  # defensive: over-specified -> replicate
+        return (None,) * ndim
+    return logical
+
+
+def tree_logical_specs(tree, policy: ShardingPolicy, table: Dict):
+    """NamedSharding pytree for ``tree`` under ``policy`` via path rules."""
+
+    def leaf_spec(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        return policy.sharding(_leaf_logical(path, len(shape), table), shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def param_specs(params, policy: ShardingPolicy):
+    return tree_logical_specs(params, policy, PARAM_AXES)
+
+
+def state_specs(state, policy: ShardingPolicy):
+    """Specs for a TrainState (params + optimizer state + step + err)."""
+    return tree_logical_specs(state, policy, PARAM_AXES)
+
+
+def cache_specs(cache, policy: ShardingPolicy):
+    return tree_logical_specs(cache, policy, CACHE_AXES)
+
+
+def batch_specs(batch, policy: ShardingPolicy):
+    return tree_logical_specs(batch, policy, BATCH_AXES)

@@ -1,0 +1,203 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-agnostic.
+
+Layout (one directory per step)::
+
+    <dir>/step_000420/
+        manifest.json      # step, leaf paths, shapes, dtypes, leaf files
+        leaf_00000.npy ... # one .npy per state leaf (host numpy)
+    <dir>/LATEST           # atomic pointer file -> "step_000420"
+
+Guarantees used by the restart path:
+
+* **atomicity** — writes land in ``.tmp-step_X`` and are ``os.rename``-d
+  into place only after fsync; a crash mid-save never corrupts the previous
+  checkpoint, and LATEST flips last;
+* **async** — ``save_async`` snapshots device arrays to host (blocking only
+  for the device->host copy) then writes on a background thread, so the
+  train loop overlaps checkpoint I/O with the next steps;
+* **mesh-agnostic restore** — leaves are stored as *full* (unsharded)
+  host arrays keyed by pytree path.  ``restore`` rebuilds the pytree and
+  ``device_put``s each leaf with the sharding derived from the *current*
+  policy — so a job checkpointed on 256 chips restarts on 512 (or 8): this
+  is the elastic-scaling contract;
+* **retention** — ``keep`` most recent checkpoints are retained, older ones
+  deleted after a successful save (never before).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "save", "restore", "latest_step"]
+
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    pointer = os.path.join(directory, "LATEST")
+    if not os.path.exists(pointer):
+        return None
+    with open(pointer) as f:
+        name = f.read().strip()
+    if not name.startswith("step_"):
+        return None
+    return int(name[len("step_") :])
+
+
+def save(directory: str, step: int, state) -> str:
+    """Synchronous atomic save.  Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:06d}"
+    tmp = os.path.join(directory, f".tmp-{name}")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_names(state)
+    manifest: Dict[str, Any] = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {
+                "path": path,
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    pointer_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(pointer_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(pointer_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def restore(directory: str, state_like, step: Optional[int] = None,
+            shardings=None):
+    """Rebuild ``state_like``'s pytree from disk.
+
+    ``state_like`` provides structure (may be ShapeDtypeStructs).
+    ``shardings`` (optional pytree of NamedSharding, same structure) reshards
+    each leaf for the current mesh — mismatched meshes are fine because the
+    stored leaves are unsharded host arrays.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+    shard_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+        else [None] * len(flat)
+    )
+    leaves = []
+    for (kpath, like), shd in zip(flat, shard_flat):
+        key = jax.tree_util.keystr(kpath)
+        if key not in by_path:
+            raise KeyError(f"checkpoint misses leaf {key}")
+        entry = by_path[key]
+        arr = np.load(os.path.join(path, entry["file"]))
+        want_shape = tuple(getattr(like, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != {want_shape}"
+            )
+        dtype = getattr(like, "dtype", arr.dtype)
+        arr = arr.astype(dtype)
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(leaves), manifest["step"]
+
+
+class Checkpointer:
+    """Async wrapper with retention.  One in-flight save at a time — a new
+    ``save_async`` waits for the previous write to finish (device->host
+    snapshot is taken synchronously so the state can keep mutating)."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, state) -> None:
+        self.wait()
+        # snapshot to host NOW (cheap vs. step time; device buffer freed)
+        host_state = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), state
+        )
+
+        def work():
+            try:
+                save(self.directory, step, host_state)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, state) -> str:
+        self.wait()
+        out = save(self.directory, step, state)
+        self._gc()
+        return out
+
+    def restore_latest(self, state_like, shardings=None):
+        self.wait()
+        return restore(self.directory, state_like, shardings=shardings)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[len("step_") :])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_")
+        )
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:06d}"),
+                ignore_errors=True,
+            )

@@ -1,0 +1,109 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+At 1000+-node scale the data-parallel gradient all-reduce is the dominant
+inter-pod collective.  Quantizing gradients to int8 cuts its bytes 2x (vs
+bf16) / 4x (vs fp32); **error feedback** (Seide et al. 2014) keeps SGD
+convergence: the quantization residual is carried into the next step, so the
+compression error telescopes instead of accumulating.
+
+    e_t      : residual state (same pytree as grads, fp32)
+    c_t      = quantize(g_t + e_t)
+    e_{t+1}  = (g_t + e_t) - dequantize(c_t)
+    ĝ_t      = all_reduce(c_t) -> dequantize
+
+Quantization is per-leaf symmetric int8 (scale = max|x| / 127).  On a real
+mesh the int8 payload is what crosses ICI — ``compressed_psum`` shows the
+shard_map wiring (psum over int32 accumulators to avoid int8 overflow: with
+≤ 2^23 / 127 ≈ 66k shards headroom, far beyond any mesh).  In the jit/GSPMD
+train step the same math runs as a grad transform (quantize→dequantize with
+error feedback) so convergence behaviour is testable off-mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_error_state",
+    "compress_decompress",
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_psum",
+]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads, err):
+    """Error-feedback int8 round trip.  Returns (ĝ, new_err)."""
+
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(tot)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), tot - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )
+
+
+def compressed_psum(grads, err, axis_names: Sequence[str]):
+    """The on-mesh form: int8 quantize -> **all-gather(int8)** -> local
+    dequant-sum, with error feedback.  Call inside ``shard_map``.
+
+    Why all-gather and not psum: summing int8 across P shards needs ≥
+    log2(127·P) bits, so a psum would carry int32 on the wire — zero
+    savings.  Gathering the int8 payloads and reducing locally moves
+    ~n·(P−1)/P bytes per device vs ~2·n·2·(P−1)/P for a ring bf16
+    all-reduce: **4× fewer wire bytes** (+ one fp32 scale per leaf).  This
+    is the standard compressed-collective formulation (1-bit Adam family);
+    intended for the *cross-pod* axis where links are scarce — use P small
+    (e.g. 2 pods), since the gather buffer is [P, n] int8.
+
+    The per-shard scale is pmax'd so every shard dequantizes with a common
+    factor; error feedback keeps convergence (tests/test_train.py).
+    """
+    axes = tuple(axis_names)
+    nshards = jax.lax.psum(1, axes)
+
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(tot)) / 127.0
+        scale = jax.lax.pmax(jnp.maximum(scale, 1e-30), axes)
+        q = jnp.clip(jnp.round(tot / scale), -127, 127).astype(jnp.int8)
+        gathered = jax.lax.all_gather(q, axes)  # int8 on the wire
+        summed = jnp.sum(gathered.astype(jnp.float32), axis=0)
+        deq_local = q.astype(jnp.float32) * scale
+        mean = summed * scale / nshards
+        return mean.astype(g.dtype), tot - deq_local
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )

@@ -1,0 +1,214 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+No optax dependency — the three optimizers the configs reference are
+implemented directly:
+
+* ``sgd``       — momentum SGD (paper-era baseline)
+* ``adamw``     — decoupled weight decay Adam; fp32 moments
+* ``adafactor`` — factored second moments (Shazeer & Stern 2018): for a
+  [r, c] matrix the second-moment statistics are one row vector + one col
+  vector instead of r·c — the only way optimizer state for the 398B jamba
+  fits the mesh (DESIGN.md §Mesh).  Matrices factor over their last two
+  dims; vectors fall back to full statistics.
+
+Update rules run in fp32 regardless of param dtype; the cast back happens
+once per step.  ``clip_by_global_norm`` and the warmup-cosine schedule are
+provided here too so the train step has no other deps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adamw",
+    "adafactor",
+    "make_optimizer",
+    "clip_by_global_norm",
+    "warmup_cosine",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (updates, opt_state)
+
+
+def _f32(t):
+    return jax.tree.map(lambda x: x.astype(jnp.float32), t)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def warmup_cosine(
+    peak_lr: float,
+    total_steps: int,
+    warmup_steps: int = 100,
+    final_frac: float = 0.1,
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+
+def sgd(lr: Callable, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        del params
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        lr_t = lr(step)
+        updates = jax.tree.map(lambda m: -lr_t * m, mu)
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        gf = _f32(grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], gf)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], gf
+        )
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        lr_t = lr(step)
+
+        def upd(m, v, p):
+            step_ = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            return -lr_t * (step_ + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(
+    lr: Callable,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored RMS-style optimizer; no first moment (memory-lean)."""
+
+    def init(params):
+        def make(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(make, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        # increasing-decay schedule from the paper: 1 - t^{-0.8}
+        beta = 1.0 - t**-decay
+        lr_t = lr(step)
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = (
+                    vr[..., None] * vc[..., None, :] / denom[..., None]
+                )
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * v["v"] + (1 - beta) * g2
+                new_v = {"v": vhat}
+            u = gf * jax.lax.rsqrt(vhat + eps)
+            # RMS clip (adafactor's built-in update clipping)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            du = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return du, new_v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_vs = treedef.unflatten([o[1] for o in outs])
+        return updates, {"v": new_vs}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(
+    name: str, lr_schedule: Callable, weight_decay: float = 0.1
+) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_schedule, weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(lr_schedule)
+    if name == "sgd":
+        return sgd(lr_schedule)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,174 @@
+"""Train-step builder: loss → grads → (clip, compress) → optimizer update.
+
+``make_train_step(cfg, ...)`` returns a pure ``(state, batch) -> (state,
+metrics)`` function plus an ``init_state``.  Features:
+
+* **microbatching** — ``cfg.microbatches`` splits the global batch and
+  accumulates grads with ``lax.scan`` (remat-friendly; activations for one
+  microbatch at a time);
+* **global-norm clipping** (fp32);
+* **int8 error-feedback gradient compression** (optional) — the residual
+  state lives in ``TrainState.err`` so the transform is a pure function;
+* sharding-agnostic: under an active ``repro.sharding`` policy the state
+  specs derive from parameter leaf paths (see ``state_logical_axes``).
+
+The TrainState is a registered pytree, so ``jax.jit`` / ``.lower()`` accept
+it directly, and checkpointing flattens it with named paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from ..models import model as model_lib
+from . import compression as comp
+from .optim import Optimizer, clip_by_global_norm, make_optimizer, warmup_cosine
+
+__all__ = ["TrainState", "make_train_step", "init_state", "TrainHParams"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    err: Optional[Any] = None  # compression residual (None = off)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    peak_lr: float = 3e-4
+    total_steps: int = 10_000
+    warmup_steps: int = 100
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False
+
+
+def init_state(key, cfg, hp: TrainHParams = TrainHParams()) -> TrainState:
+    params = model_lib.init_params(key, cfg)
+    opt = _optimizer(cfg, hp)
+    err = comp.init_error_state(params) if hp.compress_grads else None
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        step=jnp.zeros((), jnp.int32),
+        err=err,
+    )
+
+
+def _optimizer(cfg, hp: TrainHParams) -> Optimizer:
+    sched = warmup_cosine(hp.peak_lr, hp.total_steps, hp.warmup_steps)
+    return make_optimizer(cfg.optimizer, sched, weight_decay=hp.weight_decay)
+
+
+def _constrain_like_params(grads):
+    """Pin each (micro)batch gradient to its parameter's sharding.
+
+    Under GSPMD with grad accumulation, an unconstrained per-microbatch
+    gradient is ALL-REDUCED over the data axis before being added to the
+    accumulator — M all-reduces of the full gradient per step.  Declaring
+    the param sharding here turns each into a reduce-scatter onto the
+    FSDP-sharded accumulator (ZeRO-2 pattern): ~2× less wire and the
+    accumulator stays sharded.  No-op without an active policy (CPU tests).
+    """
+    pol = shd.active_policy()
+    if pol is None:
+        return grads
+    return jax.tree_util.tree_map_with_path(
+        lambda path, g: pol.constrain(
+            g, shd._leaf_logical(path, g.ndim, shd.PARAM_AXES)
+        ),
+        grads,
+    )
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    """[B, ...] -> [n, B/n, ...] per leaf (scalar leaves broadcast)."""
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    cfg,
+    hp: TrainHParams = TrainHParams(),
+    loss_fn: Optional[Callable] = None,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, Dict]]:
+    """Returns the pure train_step; jit it (with shardings) at the call site."""
+    opt = _optimizer(cfg, hp)
+    loss_fn = loss_fn or (lambda p, b: model_lib.loss_fn(p, b, cfg))
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    nmicro = max(cfg.microbatches, 1)
+
+    def compute_grads(params, batch):
+        if nmicro == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+
+        micro = _split_microbatches(batch, nmicro)
+
+        def acc_step(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            grads = _constrain_like_params(grads)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+            )
+            m_acc = jax.tree.map(lambda a, m: a + m, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        m0 = {
+            "loss": jnp.zeros((), jnp.float32),
+            "ce": jnp.zeros((), jnp.float32),
+            "aux": jnp.zeros((), jnp.float32),
+            "ntok": jnp.zeros((), jnp.float32),
+        }
+        (grads, metrics), _ = jax.lax.scan(
+            acc_step, (g0, m0), micro,
+            unroll=nmicro if cfg.scan_unroll else 1,
+        )
+        inv = 1.0 / nmicro
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+        metrics["ntok"] = metrics["ntok"] * nmicro
+        return grads, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.clip_norm)
+        err = state.err
+        if err is not None:
+            grads, err = comp.compress_decompress(grads, err)
+        updates, opt_state = opt.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            state.params,
+            updates,
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        new_state = TrainState(
+            params=params,
+            opt_state=opt_state,
+            step=state.step + 1,
+            err=err,
+        )
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,114 @@
+"""Factorized vs materialized cofactors (paper §3.4, Prop. 4.1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FactorizedEngine,
+    cofactors_factorized,
+    cofactors_materialized,
+    cofactors_row_engine,
+    design_matrix,
+)
+from repro.core.distributed import partitioned_cofactors_host
+from repro.data.synthetic import favorita_like, figure1_schema, random_acyclic_schema
+
+
+@pytest.fixture(scope="module")
+def fig1():
+    return figure1_schema()
+
+
+@pytest.fixture(scope="module")
+def favorita():
+    return favorita_like(n_dates=8, n_stores=4, n_items=6, seed=3)
+
+
+@pytest.mark.parametrize("bundle_name", ["fig1", "favorita"])
+def test_factorized_equals_materialized(bundle_name, fig1, favorita):
+    b = fig1 if bundle_name == "fig1" else favorita
+    cols = b.features + [b.label]
+    fact = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    flat = cofactors_row_engine(b.store, cols)
+    assert fact.count == flat.count
+    np.testing.assert_allclose(fact.lin, flat.lin, rtol=1e-10)
+    np.testing.assert_allclose(fact.quad, flat.quad, rtol=1e-10)
+
+
+def test_jax_backend_matches_numpy(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    f32 = cofactors_factorized(b.store, b.vorder, cols, backend="jax")
+    f64 = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(f32.quad, f64.quad, rtol=1e-4)
+    np.testing.assert_allclose(f32.lin, f64.lin, rtol=1e-4)
+
+
+def test_materialized_gram_matches_row_engine(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    fast = cofactors_materialized(b.store, cols)
+    slow = cofactors_row_engine(b.store, cols)
+    np.testing.assert_allclose(fast.quad, slow.quad, rtol=1e-4)
+
+
+def test_cofactor_symmetry(fig1):
+    cols = fig1.features + [fig1.label]
+    cof = cofactors_factorized(fig1.store, fig1.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(cof.quad, cof.quad.T)
+    mat = cof.matrix()
+    np.testing.assert_allclose(mat, mat.T)
+
+
+def test_commutativity_with_union(favorita):
+    """Prop 4.1: cofactors of a disjoint partition sum to the global ones."""
+    b = favorita
+    cols = b.features + [b.label]
+    joined = b.store.materialize_join()
+    z = design_matrix(joined, cols)
+    whole = partitioned_cofactors_host(z, cols, 1)
+    parts = partitioned_cofactors_host(z, cols, 7)
+    np.testing.assert_allclose(whole.quad, parts.quad, rtol=1e-12)
+    np.testing.assert_allclose(whole.lin, parts.lin, rtol=1e-12)
+    assert whole.count == parts.count
+
+
+def test_commutativity_with_projection(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    cof = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    sub = cof.project([b.features[0], b.label])
+    full_entry = cof.quad[
+        cof.features.index(b.features[0]), cof.features.index(b.label)
+    ]
+    np.testing.assert_allclose(sub.quad[0, 1], full_entry)
+
+
+def test_sum_product_aggregates(fig1):
+    """Paper Figures 2–3: COUNT and SUM(Sale·Competitor) via factorization."""
+    eng = FactorizedEngine(
+        fig1.store,
+        fig1.vorder,
+        ["Sale", "Competitor", "Inventory"],
+        backend="numpy",
+    )
+    joined = fig1.store.materialize_join()
+    sale = joined.column("Sale").astype(float)
+    comp = joined.column("Competitor").astype(float)
+    assert eng.sum_product([]) == joined.num_rows
+    np.testing.assert_allclose(eng.sum_product(["Sale"]), sale.sum())
+    np.testing.assert_allclose(
+        eng.sum_product(["Sale", "Competitor"]), (sale * comp).sum()
+    )
+
+
+def test_random_schemas_fact_equals_flat():
+    for seed in range(12):
+        b = random_acyclic_schema(seed, n_branches=(seed % 3) + 1)
+        cols = b.features + [b.label]
+        fact = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+        joined = b.store.materialize_join()
+        z = design_matrix(joined, cols)
+        np.testing.assert_allclose(fact.count, z.shape[0])
+        np.testing.assert_allclose(fact.lin, z.sum(0), rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(fact.quad, z.T @ z, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,157 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret mode on CPU (the kernels TARGET TPU; interpret
+executes the kernel body in Python), asserting allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash import flash_kernel_call
+from repro.kernels.gram import gram_kernel_call
+
+KEY = jax.random.key(42)
+
+
+def rand(shape, dtype, key=KEY):
+    x = jax.random.normal(key, shape, jnp.float32) * 3.0
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 7, 8, 129, 1000])
+@pytest.mark.parametrize("k", [1, 3, 64, 130])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(m, k, dtype):
+    x = rand((m, k), dtype)
+    out = ops.gram(x)
+    expect = ref.gram_ref(x)
+    # fp32 accumulation order differs between the blocked kernel and the
+    # one-shot oracle: near-zero entries see ~1e-3 relative noise at
+    # m=1000 — atol covers them, rtol still catches indexing bugs.
+    rtol, atol = (1e-3, 5e-2) if dtype == jnp.float32 else (3e-2, 3e-2)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=rtol, atol=atol
+    )
+
+
+def test_gram_blocked_padding_exact():
+    """Padding rows/cols must contribute exactly nothing."""
+    x = rand((130, 5), jnp.float32)
+    out = ops.gram(x, bm=64, bk=128)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.gram_ref(x)), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_gram_kernel_call_requires_aligned():
+    with pytest.raises(AssertionError):
+        gram_kernel_call(jnp.zeros((100, 128)), bm=64, bk=128)
+
+
+# ---------------------------------------------------------------------------
+# segment gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,g", [(5, 1), (64, 4), (200, 17), (1000, 3)])
+@pytest.mark.parametrize("k", [2, 9])
+def test_segment_gram_sweep(m, g, k):
+    x = rand((m, k), jnp.float32)
+    seg = jax.random.randint(KEY, (m,), 0, g)
+    out = ops.segment_gram(x, seg, g)
+    expect = ref.segment_gram_ref(x, seg, g)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_segment_gram_group_chunking():
+    """Group counts above the VMEM budget must chunk transparently."""
+    m, k = 64, 40  # 40*40*4 = 6.4 KB per group
+    x = rand((m, k), jnp.float32)
+    g = 4000  # 4000 groups * 6.4KB > 8MB budget -> chunked path
+    seg = jax.random.randint(KEY, (m,), 0, g)
+    out = ops.segment_gram(x, seg, g)
+    expect = ref.segment_gram_ref(x, seg, g)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# moments
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 8, 100, 4096])
+def test_moments_sweep(m):
+    x = rand((m,), jnp.float32)
+    s, mx, cnt = ops.moments(x)
+    es, emx, ecnt = ref.moments_ref(x)
+    np.testing.assert_allclose(float(s), float(es), rtol=1e-5)
+    np.testing.assert_allclose(float(mx), float(emx), rtol=1e-6)
+    assert cnt == ecnt
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kh,d,causal,window",
+    [
+        (2, 64, 64, 4, 2, 32, True, None),   # GQA causal
+        (1, 48, 48, 2, 2, 16, True, 16),     # sliding window
+        (2, 24, 72, 3, 1, 64, False, None),  # MQA, non-causal, ragged blocks
+        (1, 16, 128, 4, 4, 128, True, None), # long kv, MXU-width head
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(b, sq, sk, h, kh, d, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, sq, h, d), dtype, ks[0])
+    k = rand((b, sk, kh, d), dtype, ks[1])
+    v = rand((b, sk, kh, d), dtype, ks[2])
+    out = ops.flash_attention(
+        q, k, v, causal=causal, window=window, bq=16, bk=16
+    )
+    g = h // kh
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kr = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vr = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    expect = (
+        ref.flash_ref(qr, kr, vr, causal=causal, window=window)
+        .reshape(b, h, sq, d)
+        .transpose(0, 2, 1, 3)
+    )
+    tol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(expect, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_matches_model_chunked_path():
+    """The Pallas kernel and the jnp online-softmax path must agree."""
+    from repro.models.attention import chunked_attention
+
+    b, s, h, kh, d = 2, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand((b, s, h, d), jnp.float32, ks[0])
+    k = rand((b, s, kh, d), jnp.float32, ks[1])
+    v = rand((b, s, kh, d), jnp.float32, ks[2])
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    out_jnp = chunked_attention(
+        q, k, v, pos, pos, causal=True, window=None,
+        out_dtype=jnp.float32, q_chunk=16, k_chunk=16,
+    )
+    out_pl = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    np.testing.assert_allclose(
+        np.asarray(out_pl), np.asarray(out_jnp), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,63 @@
+"""Pipeline parallelism: 2-stage GPipe schedule == sequential execution.
+
+Needs 2 devices, so it runs in a subprocess with
+``--xla_force_host_platform_device_count=2`` (the main test process must
+keep seeing 1 device per the repo's dry-run conventions).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp, numpy as np
+from repro import sharding as shd
+from repro.configs import get_config
+from repro.models import model
+from repro.train.pipeline import make_pp_loss_for_mesh
+
+cfg = get_config("smollm-135m", smoke=True)  # 2 periods -> 1 per stage
+mesh = jax.make_mesh((2, 1), ("pod", "data"))
+policy = shd.ShardingPolicy(mesh, shd.TRAIN_RULES)
+B, S = 4, 16
+key = jax.random.key(0)
+params = model.init_params(key, cfg)
+batch = {{"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+          "labels": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                       cfg.vocab)}}
+batch_abs = jax.tree.map(
+    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+fn, (psh, bsh) = make_pp_loss_for_mesh(
+    cfg, mesh, policy, batch_abs, microbatches=2)
+params_p = jax.device_put(params, psh)
+batch_p = jax.device_put(batch, bsh)
+with mesh:
+    loss_pp = float(jax.jit(fn)(params_p, batch_p))
+loss_seq = float(model.loss_fn(params, batch, cfg)[0])
+np.testing.assert_allclose(loss_pp, loss_seq, rtol=2e-5)
+g = jax.jit(jax.grad(fn))(params_p, batch_p)
+g_seq = jax.grad(lambda p: model.loss_fn(p, batch, cfg)[0])(params)
+errs = [float(np.max(np.abs(np.asarray(a, np.float64)
+                            - np.asarray(b, np.float64))))
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_seq))]
+assert max(errs) < 1e-4, max(errs)
+print("PP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SCRIPT.format(src=os.path.abspath(src))
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PP_OK" in out.stdout

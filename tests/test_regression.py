@@ -1,0 +1,174 @@
+"""End-to-end regression pipeline: GD versions, scaling, θ rescale (§3–§4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GDConfig,
+    VERSIONS,
+    bgd_cofactor,
+    bgd_data,
+    compute_scale_factors,
+    design_matrix,
+    linear_regression,
+    rescale_theta,
+    solve_cofactor,
+)
+from repro.data.synthetic import favorita_like, figure1_schema
+
+
+@pytest.fixture(scope="module")
+def favorita():
+    return favorita_like(n_dates=12, n_stores=5, n_items=6, seed=7)
+
+
+@pytest.fixture(scope="module")
+def lstsq_theta(favorita):
+    joined = favorita.store.materialize_join()
+    x = design_matrix(joined, favorita.features)
+    y = joined.column(favorita.label).astype(np.float64)
+    a = np.concatenate([np.ones((len(y), 1)), x], axis=1)
+    theta, *_ = np.linalg.lstsq(a, y, rcond=None)
+    return theta
+
+
+@pytest.mark.parametrize("version", ["v1", "v3", "v4"])
+def test_bgd_converges_to_lstsq(favorita, lstsq_theta, version):
+    r = linear_regression(
+        favorita.store,
+        favorita.vorder,
+        favorita.features,
+        favorita.label,
+        VERSIONS[version],
+    )
+    n = len(favorita.features)
+    np.testing.assert_allclose(r.theta[: n + 1], lstsq_theta, rtol=2e-2, atol=2e-2)
+
+
+def test_fact_equals_nopre_theta(favorita):
+    """Paper Table 2: fact and noPre agree to many digits (same math)."""
+    r1 = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["v1"],
+    )
+    r2 = linear_regression(
+        favorita.store, None, favorita.features, favorita.label, VERSIONS["v2"]
+    )
+    np.testing.assert_allclose(r1.theta, r2.theta, rtol=1e-3, atol=1e-3)
+
+
+def test_closed_form_matches_lstsq(favorita, lstsq_theta):
+    r = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["closed"],
+    )
+    n = len(favorita.features)
+    np.testing.assert_allclose(r.theta[: n + 1], lstsq_theta, rtol=1e-3, atol=1e-3)
+
+
+def test_v5_theta0_produces_large_error(favorita):
+    """Paper: versions 5/6 'lead to a huge error' — θ0 off by ~label mean."""
+    good = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["v4"],
+    ).evaluate(favorita.store, favorita.features, favorita.label)
+    bad = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["v5"],
+    ).evaluate(favorita.store, favorita.features, favorita.label)
+    assert bad["avg_abs_err"] > 3 * good["avg_abs_err"]
+
+
+def test_v4_converges_no_slower(favorita):
+    r1 = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["v1"],
+    )
+    r4 = linear_regression(
+        favorita.store, favorita.vorder, favorita.features, favorita.label,
+        VERSIONS["v4"],
+    )
+    assert r4.iterations <= r1.iterations * 1.5
+
+
+def test_paper_table1_scaling_example():
+    """Paper Table 1: exact avg/max values of the worked example."""
+    x1 = np.array([0.01, 0.03, -0.05, -0.01, 0.02])
+    x2 = np.array([20000.0, 0.0, -19500.0, 10000.0, -7000.0])
+    assert np.isclose(x1.mean(), 0.0)
+    assert np.isclose(np.abs(x1).max(), 0.05)
+    assert np.isclose(x2.mean(), 700.0)
+    assert np.isclose(np.abs(x2).max(), 20000.0)
+    conv1 = (x1 - x1.mean()) / np.abs(x1).max()
+    conv2 = (x2 - x2.mean()) / np.abs(x2).max()
+    np.testing.assert_allclose(conv1, [0.2, 0.6, -1.0, -0.2, 0.4])
+    np.testing.assert_allclose(conv2, [0.965, -0.035, -1.01, 0.465, -0.385])
+
+
+def test_paper_section33_theta_rescale_example():
+    """Paper §3.3 worked example: θ rescaling yields 200·x1 + 0.1·x2."""
+    from repro.core.scaling import ScaleFactors
+
+    factors = ScaleFactors(
+        avg={"x1": 0.0, "x2": 700.0, "y": 0.0},
+        max={"x1": 0.05, "x2": 20000.0, "y": 1.0},
+        features=["x1", "x2"],
+        label="y",
+    )
+    theta_conv = np.array([70.0, 10.0, 2000.0, -1.0])
+    theta = rescale_theta(theta_conv, factors, mode="theta0_conv")
+    np.testing.assert_allclose(theta[1], 200.0)
+    np.testing.assert_allclose(theta[2], 0.1)
+    np.testing.assert_allclose(theta[0], 70.0 - (200.0 * 0.0 + 0.1 * 700.0))
+
+
+def test_rescale_exact_mode_preserves_predictions():
+    """§3.3 identity: predictions in conv space == predictions in original."""
+    rng = np.random.default_rng(0)
+    m, n = 50, 3
+    x = rng.normal(0, 5, size=(m, n))
+    y = x @ np.array([1.0, -2.0, 0.5]) + 3.0 + rng.normal(0, 0.1, m)
+    avg = {f"f{j}": float(x[:, j].mean()) for j in range(n)}
+    mx = {f"f{j}": float(np.abs(x[:, j]).max()) for j in range(n)}
+    avg["y"], mx["y"] = float(y.mean()), 1.0
+    from repro.core.scaling import ScaleFactors
+
+    factors = ScaleFactors(
+        avg=avg, max=mx, features=[f"f{j}" for j in range(n)], label="y"
+    )
+    xc = np.stack(
+        [(x[:, j] - avg[f"f{j}"]) / mx[f"f{j}"] for j in range(n)], axis=1
+    )
+    yc = y - avg["y"]
+    a = np.concatenate([np.ones((m, 1)), xc], axis=1)
+    theta_conv_t, *_ = np.linalg.lstsq(a, yc, rcond=None)
+    theta_conv = np.concatenate([theta_conv_t, [-1.0]])
+    theta = rescale_theta(theta_conv, factors, mode="exact")
+    pred_conv = a @ theta_conv_t + avg["y"]
+    pred_orig = theta[0] + x @ theta[1 : n + 1]
+    np.testing.assert_allclose(pred_conv, pred_orig, rtol=1e-8)
+
+
+def test_gd_respects_iteration_cap():
+    cof = np.array([[4.0, 1.0, 2.0], [1.0, 3.0, 1.0], [2.0, 1.0, 5.0]])
+    res = bgd_cofactor(cof, GDConfig(max_iter=5))
+    assert res.iterations == 5
+
+
+def test_gd_cofactor_equals_gd_data():
+    """fact and noPre run the *same* update — trajectories must agree."""
+    rng = np.random.default_rng(1)
+    z = rng.normal(0, 1, size=(200, 4))
+    cfg = GDConfig(max_iter=500)
+    a = bgd_cofactor(z.T @ z, cfg)
+    b = bgd_data(z, cfg)
+    np.testing.assert_allclose(a.theta, b.theta, rtol=1e-3, atol=1e-4)
+
+
+def test_solve_cofactor_ridge():
+    rng = np.random.default_rng(2)
+    z = rng.normal(0, 1, size=(300, 5))
+    theta = solve_cofactor(z.T @ z, ridge=0.0)
+    # stationarity: C_tt θ_t = C_t,label
+    cof = z.T @ z
+    np.testing.assert_allclose(cof[:4, :4] @ theta[:4], cof[:4, 4], rtol=1e-8)

@@ -1,0 +1,86 @@
+"""Roofline extraction: HLO collective parsing + term math + model FLOPs."""
+
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import HW
+from repro.launch.roofline import (
+    RooflineTerms,
+    collective_bytes,
+    model_flops,
+    total_collective_bytes,
+)
+
+HLO_SAMPLE = """
+HloModule jit_step
+ENTRY %main {
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+  %ag = bf16[64,64]{1,0} all-gather(bf16[32,64]{1,0} %y), dimensions={0}
+  %rs = f32[8]{0} reduce-scatter(f32[64]{0} %z), dimensions={0}
+  %cp = s32[4,4]{1,0} collective-permute(s32[4,4]{1,0} %w)
+  %a2a = f32[16]{0} all-to-all(f32[16]{0} %v), dimensions={0}
+  %ars = (f32[10]{0}, f32[10]{0}) all-reduce-start(f32[10]{0} %u)
+  %ard = f32[10]{0} all-reduce-done((f32[10]{0}, f32[10]{0}) %ars)
+  %plain = f32[999]{0} add(f32[999]{0} %p, f32[999]{0} %q)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    got = collective_bytes(HLO_SAMPLE)
+    assert got["all-gather"] == 64 * 64 * 2
+    assert got["reduce-scatter"] == 8 * 4
+    assert got["collective-permute"] == 4 * 4 * 4
+    assert got["all-to-all"] == 16 * 4
+    # all-reduce: the plain op + the -start tuple (2x 10 floats)
+    assert got["all-reduce"] == 128 * 256 * 4 + 2 * 10 * 4
+    # the plain add must NOT be counted
+    assert sum(got.values()) < 999 * 4 + sum(got.values())
+
+
+def test_total_collective_weights_allreduce_2x():
+    per_kind = {"all-reduce": 100, "all-gather": 100}
+    assert total_collective_bytes(per_kind) == 300.0
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        arch="a", shape="s", mesh="m", chips=256,
+        hlo_flops=197e12,          # per-shard == 1 second of compute
+        hlo_bytes=819e9,           # == 1 second of HBM
+        coll_bytes=50e9,           # == 1 second of ICI
+        coll_by_kind={},
+        model_flops=197e12 * 256,  # exactly the useful amount
+    )
+    np.testing.assert_allclose(t.t_compute, 1.0)
+    np.testing.assert_allclose(t.t_memory, 1.0)
+    np.testing.assert_allclose(t.t_collective, 1.0)
+    np.testing.assert_allclose(t.useful_ratio, 1.0)
+    np.testing.assert_allclose(t.roofline_fraction, 1.0)
+    t2 = RooflineTerms(
+        arch="a", shape="s", mesh="m", chips=4,
+        hlo_flops=4.0, hlo_bytes=8e20, coll_bytes=0.0,
+        coll_by_kind={}, model_flops=16.0,
+    )
+    assert t2.bottleneck == "memory"
+    assert t2.roofline_fraction < 1e-6
+
+
+def test_model_flops_shapes():
+    cfg = ARCHS["smollm-135m"]
+    train = model_flops(cfg, SHAPES["train_4k"])
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    counts = cfg.param_counts()
+    assert train == 6.0 * counts["active"] * 256 * 4096
+    assert dec == 2.0 * counts["active"] * 128
+    # MoE: active params drive the number, not total
+    moe = ARCHS["mixtral-8x7b"]
+    mc = moe.param_counts()
+    assert model_flops(moe, SHAPES["train_4k"]) == \
+        6.0 * mc["active"] * 256 * 4096
+
+
+def test_hw_constants_match_assignment():
+    assert HW.peak_flops_bf16 == 197e12
+    assert HW.hbm_bw == 819e9
+    assert HW.ici_bw == 50e9
