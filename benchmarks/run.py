@@ -6,6 +6,7 @@ One module per paper table/figure (+ substrate benches):
   figure9_engines              — Fig. 9 (in-memory vs row-engine proxy)
   figure23_aggregates          — Figs. 2–3 (COUNT / SUM over factorization)
   union_commutativity_scaling  — Prop. 4.1 as the distribution rule
+  incremental_retrain_after_append — retrain cost after appends (AC/DC)
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
@@ -24,6 +25,7 @@ def main() -> int:
         bench_aggregates,
         bench_engines,
         bench_factorized,
+        bench_incremental,
         bench_kernels,
         bench_lm,
         bench_polynomial,
@@ -35,6 +37,7 @@ def main() -> int:
         ("figure9 (engine comparison)", bench_engines.main),
         ("figures2-3 (aggregates)", bench_aggregates.main),
         ("union commutativity scaling", bench_scaling.main),
+        ("incremental retrain after append", bench_incremental.main),
         ("polynomial extension", bench_polynomial.main),
         ("kernel hotspots", bench_kernels.main),
         ("lm smoke steps", bench_lm.main),

@@ -1,0 +1,18 @@
+"""Version compatibility shims for the pinned JAX.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace in newer releases; the pinned version only ships the
+experimental spelling.  Import it from here so every caller (library code,
+tests, benchmarks) tracks whichever location exists.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+try:  # JAX >= 0.4.34 style
+    shard_map = jax.shard_map
+except AttributeError:  # pinned JAX: experimental namespace only
+    from jax.experimental.shard_map import shard_map

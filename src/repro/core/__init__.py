@@ -17,9 +17,12 @@ from .cofactor import (
     Cofactors,
     cofactors_factorized,
     cofactors_from_matrix,
+    cofactors_grouped,
     cofactors_materialized,
     cofactors_row_engine,
+    cofactors_streaming,
     design_matrix,
+    iter_design_chunks,
 )
 from .factorize import FactorizedEngine
 from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
@@ -62,10 +65,13 @@ __all__ = [
     "bgd_data",
     "cofactors_factorized",
     "cofactors_from_matrix",
+    "cofactors_grouped",
     "cofactors_materialized",
     "cofactors_row_engine",
+    "cofactors_streaming",
     "compute_scale_factors",
     "design_matrix",
+    "iter_design_chunks",
     "linear_regression",
     "predict",
     "rescale_theta",

@@ -10,11 +10,25 @@ Three engines, mirroring the paper's evaluation matrix:
 * ``cofactors_row_engine``                — row-at-a-time interpreted loop,
   the *disk-row-engine proxy* standing in for PostgreSQL in the
   engine-comparison benchmark (Fig. 9 analogue).  Never used for training.
+
+Streaming / incremental paths (union commutativity, Prop. 4.1):
+
+* ``cofactors_streaming``  — accumulates X^T X chunk-by-chunk through the
+  Pallas ``gram`` kernel and folds the per-chunk ``Cofactors`` with
+  ``__add__``, so arbitrarily large design matrices never materialize on
+  device at once.  ``cofactors_materialized(..., chunk_rows=N)`` routes the
+  noPre path through it.  Accepts any iterable of [m_i, k] row chunks, so
+  it also serves out-of-core / append-stream sources directly.
+* ``cofactors_grouped``    — per-group cofactors of a partition labeling in
+  ONE fused pass via the Pallas ``segment_gram`` kernel (u = [1, x] makes
+  u·u^T carry count/lin/quad together); the groups sum back to the global
+  cofactors with ``__add__`` — the same algebra ``Store.append`` and the
+  distributed reduction use.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Iterable, Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +43,11 @@ __all__ = [
     "cofactors_factorized",
     "cofactors_materialized",
     "cofactors_from_matrix",
+    "cofactors_grouped",
     "cofactors_row_engine",
+    "cofactors_streaming",
     "design_matrix",
+    "iter_design_chunks",
 ]
 
 
@@ -38,16 +55,13 @@ def design_matrix(
     joined: Relation, features: Sequence[str], scale=None
 ) -> np.ndarray:
     """Extract the [m, k] feature matrix from a materialized join, applying
-    lazy view rescaling (paper §4.2) when ``scale`` is given."""
-    cols = []
-    for f in features:
-        c = joined.column(f).astype(np.float64)
-        if scale is not None:
-            c = scale.transform(f, c)
-        cols.append(c)
-    if not cols:
-        return np.zeros((joined.num_rows, 0))
-    return np.stack(cols, axis=1)
+    lazy view rescaling (paper §4.2) when ``scale`` is given.  The one-chunk
+    case of ``iter_design_chunks`` — single source of truth for column
+    extraction/transform semantics."""
+    m = joined.num_rows
+    if m == 0:
+        return np.zeros((0, len(features)))
+    return next(iter_design_chunks(joined, features, m, scale=scale))
 
 
 @jax.jit
@@ -77,15 +91,144 @@ def cofactors_from_matrix(
     )
 
 
+def iter_design_chunks(
+    joined: Relation,
+    features: Sequence[str],
+    chunk_rows: int,
+    scale=None,
+) -> Iterator[np.ndarray]:
+    """Yield the design matrix of ``joined`` in [≤chunk_rows, k] slices
+    without ever stacking the full [m, k] matrix."""
+    if chunk_rows <= 0:
+        raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+    m = joined.num_rows
+    cols = [joined.column(f) for f in features]
+    for lo in range(0, m, chunk_rows):
+        hi = min(lo + chunk_rows, m)
+        chunk = []
+        for f, c in zip(features, cols):
+            part = c[lo:hi].astype(np.float64)
+            if scale is not None:
+                part = scale.transform(f, part)
+            chunk.append(part)
+        if chunk:
+            yield np.stack(chunk, axis=1)
+        else:
+            yield np.zeros((hi - lo, 0))
+
+
+def cofactors_streaming(
+    chunks: Union[np.ndarray, Iterable[np.ndarray]],
+    features: Sequence[str],
+    chunk_rows: Optional[int] = None,
+    use_kernel: bool = True,
+) -> Cofactors:
+    """Fold an arbitrarily long stream of design-matrix row chunks into one
+    ``Cofactors`` — each chunk's Gram runs through the Pallas ``gram``
+    kernel (``use_kernel=False``: plain jnp) and the per-chunk aggregates
+    sum via ``Cofactors.__add__``.  Peak device memory is one chunk plus
+    the k×k accumulator, independent of the total row count.
+
+    ``chunks`` is either an iterable of [m_i, k] arrays or a single [m, k]
+    matrix together with ``chunk_rows`` (split on the host, streamed to the
+    device chunk-by-chunk).
+    """
+    features = list(features)
+    if isinstance(chunks, np.ndarray):
+        if chunk_rows is None:
+            raise ValueError("chunk_rows required when passing one matrix")
+        if chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        m = chunks.shape[0]
+        x = chunks
+        chunks = (
+            x[lo : min(lo + chunk_rows, m)] for lo in range(0, m, chunk_rows)
+        )
+    k = len(features)
+    total = Cofactors(
+        count=0.0,
+        lin=np.zeros((k,), dtype=np.float64),
+        quad=np.zeros((k, k), dtype=np.float64),
+        features=features,
+    )
+    for chunk in chunks:
+        if chunk.shape[1] != k:
+            raise ValueError(
+                f"chunk has {chunk.shape[1]} columns, expected {k} features"
+            )
+        if chunk.shape[0] == 0:
+            continue
+        total = total + cofactors_from_matrix(
+            chunk, features, use_kernel=use_kernel
+        )
+    return total
+
+
+def cofactors_grouped(
+    x: np.ndarray,
+    seg: np.ndarray,
+    num_groups: int,
+    features: Sequence[str],
+    use_kernel: bool = True,
+) -> List[Cofactors]:
+    """Per-group cofactors of a partition labeling in one fused pass.
+
+    Appends the intercept column (u = [1, x]) and runs the Pallas
+    ``segment_gram`` kernel, whose [G, k+1, k+1] output carries every
+    group's count / lin / quad at once.  Summing the returned list with
+    ``Cofactors.__add__`` reproduces the global cofactors — the per-shard
+    building block of the distributed delta path.  Out-of-range segment
+    ids contribute to no group (matching the kernel's zero-one-hot-row
+    semantics) on both paths.
+    """
+    m, k = x.shape
+    u = np.concatenate([np.ones((m, 1), dtype=np.float64), x], axis=1)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        blocks = np.asarray(
+            kops.segment_gram(
+                jnp.asarray(u, dtype=jnp.float32),
+                jnp.asarray(seg, dtype=jnp.int32),
+                num_groups,
+            ),
+            dtype=np.float64,
+        )
+    else:
+        seg = np.asarray(seg)
+        keep = (seg >= 0) & (seg < num_groups)
+        blocks = np.zeros((num_groups, k + 1, k + 1), dtype=np.float64)
+        uk = u[keep]
+        np.add.at(blocks, seg[keep], uk[:, :, None] * uk[:, None, :])
+    return [
+        Cofactors(
+            count=float(b[0, 0]),
+            lin=b[0, 1:].copy(),
+            quad=b[1:, 1:].copy(),
+            features=list(features),
+        )
+        for b in blocks
+    ]
+
+
 def cofactors_materialized(
     store: Store,
     features: Sequence[str],
     relations: Optional[Sequence[str]] = None,
     use_kernel: bool = False,
     scale=None,
+    chunk_rows: Optional[int] = None,
 ) -> Cofactors:
-    """The non-factorized ("noPre") path: flat join, then X^T X."""
+    """The non-factorized ("noPre") path: flat join, then X^T X.  With
+    ``chunk_rows`` the Gram accumulates through ``cofactors_streaming`` so
+    only one chunk of the design matrix is resident at a time."""
     joined = store.materialize_join(relations)
+    if chunk_rows is not None:
+        return cofactors_streaming(
+            iter_design_chunks(joined, features, chunk_rows, scale=scale),
+            features,
+            use_kernel=use_kernel,
+        )
     x = design_matrix(joined, features, scale=scale)
     return cofactors_from_matrix(x, features, use_kernel=use_kernel)
 

@@ -16,6 +16,11 @@ onto a JAX device mesh:
 applies it to a partitioned design matrix.  ``partitioned_cofactors_host``
 demonstrates the same algebra without a mesh (host-side partition + sum) and
 is used by tests as the oracle.
+
+Incremental maintenance composes with the same algebra: an *append* of new
+rows Δ is a union, so ``incremental_sharded_cofactors`` computes the delta
+cofactors of Δ per shard (one psum) and folds them into the previous global
+cofactors with ``Cofactors.__add__`` — no rescan of the historical data.
 """
 
 from __future__ import annotations
@@ -28,12 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .factorize import Cofactors
 
 __all__ = [
     "sharded_gram",
     "sharded_cofactors",
     "partitioned_cofactors_host",
+    "incremental_sharded_cofactors",
 ]
 
 
@@ -51,7 +58,7 @@ def sharded_gram(z: jnp.ndarray, mesh: Mesh, data_axes: Sequence[str]):
     axes = tuple(data_axes)
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=P(axes, None),
         out_specs=P(),  # replicated result
@@ -91,6 +98,36 @@ def sharded_cofactors(
         quad=gram[1:, 1:],
         features=list(features),
     )
+
+
+def incremental_sharded_cofactors(
+    base: Cofactors,
+    z_delta: np.ndarray,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+) -> Cofactors:
+    """Fold an appended row batch into existing global cofactors.
+
+    ``base`` holds the cofactors of all rows seen so far; ``z_delta`` is the
+    design matrix (WITHOUT intercept column) of the newly appended rows only.
+    The delta cofactors are computed over the mesh when one is given (each
+    shard sees a horizontal slice of Δ, one psum reduces them) and on the
+    host otherwise; union commutativity makes ``base + delta`` exact.
+
+    Precision: the mesh path accumulates each delta in fp32 on-device
+    (~1e-7 relative per delta), so its rounding flows into the long-lived
+    base — the host path (``mesh=None``) is fp64 and matches the fp64
+    maintenance policy of ``Store.append``.  Prefer the host path for
+    accumulators that must survive many appends; use the mesh path when
+    delta volume, not accumulation lifetime, is the bottleneck.
+    """
+    if z_delta.shape[0] == 0:
+        return base
+    if mesh is None:
+        delta = partitioned_cofactors_host(z_delta, base.features, 1)
+    else:
+        delta = sharded_cofactors(z_delta, base.features, mesh, data_axes)
+    return base + delta
 
 
 def partitioned_cofactors_host(

@@ -83,13 +83,46 @@ class Cofactors:
 
     def __add__(self, other: "Cofactors") -> "Cofactors":
         """Commutativity with union (paper Prop. 4.1): cofactors of a disjoint
-        partition sum elementwise.  This is the distribution rule."""
+        partition sum elementwise.  This is the distribution rule — and the
+        delta-maintenance rule used by ``Store.append``."""
         assert self.features == other.features
         return Cofactors(
             count=self.count + other.count,
             lin=self.lin + other.lin,
             quad=self.quad + other.quad,
             features=list(self.features),
+        )
+
+    def rescale(self, factors) -> "Cofactors":
+        """Cofactors of the affinely rescaled columns x' = (x − a)/b, derived
+        from the unscaled aggregates in O(k²) — the paper's §4.2 lazy views
+        lifted to the aggregate level:
+
+            Σ x'_i        = (lin_i − a_i·m) / b_i
+            Σ x'_i x'_j   = (quad_ij − a_i·lin_j − a_j·lin_i + m·a_i·a_j)
+                            / (b_i·b_j)
+
+        This is what lets ``Store``'s cache hold *unscaled* cofactors: after
+        an append changes the scale factors, the warm-retrain path rescales
+        the cached aggregates instead of rescanning any data.  ``factors`` is
+        a ``ScaleFactors``; columns it does not cover pass through (a=0,
+        b=1)."""
+        a = np.array(
+            [factors.avg.get(f, 0.0) for f in self.features], dtype=np.float64
+        )
+        b = np.array(
+            [factors.max.get(f, 1.0) for f in self.features], dtype=np.float64
+        )
+        m = self.count
+        lin = (self.lin - a * m) / b
+        quad = (
+            self.quad
+            - np.outer(a, self.lin)
+            - np.outer(self.lin, a)
+            + m * np.outer(a, a)
+        ) / np.outer(b, b)
+        return Cofactors(
+            count=m, lin=lin, quad=quad, features=list(self.features)
         )
 
 

@@ -116,8 +116,20 @@ def linear_regression(
     config: Optional[RegressionConfig] = None,
     backend: str = "jax",
     use_kernel: bool = False,
+    use_cache: bool = False,
 ) -> RegressionResult:
-    """The paper's ``linearRegression(...)`` pipeline."""
+    """The paper's ``linearRegression(...)`` pipeline.
+
+    ``use_cache=True`` (factorized mode only) is the **warm-retrain** path:
+    unscaled cofactors come from the store's incrementally-maintained cache
+    (``Store.cofactors``), so after ``Store.append`` a retrain costs only
+    the delta maintenance already paid plus an O(k²) ``Cofactors.rescale``
+    with the fresh scale factors — no rescan of the historical data.  The
+    cached aggregates are always maintained with the fp64 numpy engine
+    (regardless of ``backend``): unscaled quad entries grow with data
+    magnitude and ``rescale`` is a cancelling difference, so a long-lived
+    fp32 accumulator would leak rounding error into the leading digits.
+    """
     cfg = config or VERSIONS["v1"]
     features = list(features)
     if cfg.factorized and vorder is None:
@@ -129,9 +141,14 @@ def linear_regression(
 
     cols = features + [label]  # cofactor ordering: [intercept] + cols
     if cfg.factorized:
-        cof = cofactors_factorized(
-            store, vorder, cols, backend=backend, scale=factors
-        )
+        if use_cache:
+            cof = store.cofactors(vorder, cols, backend="numpy").rescale(
+                factors
+            )
+        else:
+            cof = cofactors_factorized(
+                store, vorder, cols, backend=backend, scale=factors
+            )
         cof_matrix = cof.matrix()
         t2 = time.perf_counter()
         if cfg.solver == "closed_form":

@@ -120,6 +120,34 @@ class Relation:
             domains=dict(self.domains),
         )
 
+    def concat(self, other: "Relation") -> "Relation":
+        """Row-wise union with ``other`` (same attribute sets required).
+
+        Domains merge per attribute with ``max`` so existing dictionary ids
+        stay valid and new ids from ``other`` extend the domain — the
+        building block of ``Store.append``.
+        """
+        if set(other.keys) != set(self.keys) or set(other.values) != set(
+            self.values
+        ):
+            raise ValueError(
+                f"cannot concat {other.name} into {self.name}: attribute "
+                f"sets differ ({sorted(other.attributes)} vs "
+                f"{sorted(self.attributes)})"
+            )
+        keys = {
+            a: np.concatenate([c, other.keys[a]]) for a, c in self.keys.items()
+        }
+        values = {
+            a: np.concatenate([c, other.values[a]])
+            for a, c in self.values.items()
+        }
+        domains = {
+            a: max(self.domains.get(a, 0), other.domains.get(a, 0))
+            for a in set(self.domains) | set(other.domains)
+        }
+        return Relation(self.name, keys, values, domains)
+
     def with_value(self, attr: str, col: np.ndarray) -> "Relation":
         values = dict(self.values)
         values[attr] = np.asarray(col, dtype=np.float64)

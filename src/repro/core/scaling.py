@@ -61,7 +61,13 @@ def _union_moments(store: Store, col: str, use_kernel: bool = False):
     """avg and max|x| of ``col`` over the union of relations containing it.
 
     Key attributes participate through their dense numeric encoding (the
-    paper numerically encodes categorical-ish columns like ``date``)."""
+    paper numerically encodes categorical-ish columns like ``date``).  The
+    default path reads the store's maintained moments cache (O(1) after
+    appends); ``use_kernel`` forces a fresh fused-pass reduction through the
+    Pallas ``moments`` kernel."""
+    if not use_kernel:
+        s, mx, cnt = store.column_moments(col)
+        return s / cnt, mx
     chunks = [
         rel.column(col).astype(np.float64)
         for rel in store.relations()
@@ -70,14 +76,12 @@ def _union_moments(store: Store, col: str, use_kernel: bool = False):
     if not chunks:
         raise ValueError(f"column {col} not found in any relation")
     allv = np.concatenate(chunks)
-    if use_kernel:
-        import jax.numpy as jnp
+    import jax.numpy as jnp
 
-        from repro.kernels import ops as kops
+    from repro.kernels import ops as kops
 
-        s, mx, cnt = kops.moments(jnp.asarray(allv, dtype=jnp.float32))
-        return float(s) / float(cnt), float(mx)
-    return float(allv.mean()), float(np.abs(allv).max())
+    s, mx, cnt = kops.moments(jnp.asarray(allv, dtype=jnp.float32))
+    return float(s) / float(cnt), float(mx)
 
 
 def compute_scale_factors(

@@ -4,30 +4,86 @@ Plays the role HyPer plays in the paper — it *holds* the training data and
 executes the factorized aggregate plan close to the data.  ``materialize_join``
 is the non-factorized ("noPre") path: it computes the flat natural join whose
 size is O(|D|^rho*) and against which factorization is benchmarked.
+
+Incremental cofactor maintenance (AC/DC-style, Abo Khamis et al. 2018):
+the store keeps a **cofactor cache** keyed by
+``(relations, features, variable-order signature, backend)``.
+
+* ``cofactors(vorder, features)`` — compute-on-miss cached *unscaled*
+  cofactors over the factorized join (scaled variants derive lazily via
+  ``Cofactors.rescale``, the paper's §4.2 view algebra, so one cache entry
+  serves every scaling).
+* ``append(name, delta)``  — batch row update.  Joins distribute over
+  union — ``(R ∪ ΔR) ⋈ S = (R ⋈ S) ∪ (ΔR ⋈ S)`` — so every cache entry
+  covering ``name`` is maintained by computing the delta cofactors against
+  the *pre-merge* catalog (relation ``name`` replaced by ``delta``) and
+  folding them in with ``Cofactors.__add__`` (Prop. 4.1 union
+  commutativity).  Cost is O(delta factorization), never a rescan of the
+  historical data.
+* ``put(rel)``             — catalog mutation: overwriting a relation
+  **invalidates** every cache entry that references it (deltas are unions;
+  arbitrary replacement is not).  Entries over unrelated relations survive.
+* ``column_moments(col)``  — cached per-column (sum, max|x|, count) over the
+  union of relations containing the column, maintained under ``append``
+  (sum/count accumulate, max folds) so feature scaling never rescans the
+  historical data either.
+
+Cache versioning: ``version`` increments on every catalog mutation; every
+mutation re-stamps the entries it keeps valid (``append`` after folding the
+delta, ``put`` for entries over untouched relations), and lookups recompute
+on any version mismatch — a backstop against invalidation-rule bugs.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .relation import Relation, composite_key, sort_merge_join
 
+if TYPE_CHECKING:  # avoid a circular import at runtime (factorize -> store)
+    from .factorize import Cofactors
+    from .variable_order import VariableOrder
+
 __all__ = ["Store"]
 
 
+@dataclasses.dataclass
+class _CacheEntry:
+    cofactors: "Cofactors"  # unscaled aggregates; treat as immutable
+    relations: frozenset  # relation names the entry's join covers
+    version: int  # store version the entry is valid at
+
+
 class Store:
-    """Catalog of named relations with natural-join materialization."""
+    """Catalog of named relations with natural-join materialization and an
+    incrementally-maintained cofactor cache."""
 
     def __init__(self, relations: Optional[Sequence[Relation]] = None) -> None:
         self._relations: Dict[str, Relation] = {}
+        self._cofactor_cache: Dict[tuple, _CacheEntry] = {}
+        # signature -> VariableOrder, kept so maintenance can re-run the engine
+        self._vorders: Dict[tuple, "VariableOrder"] = {}
+        # col -> (sum, max|x|, count) over the union of relations with col
+        self._moments: Dict[str, Tuple[float, float, int]] = {}
+        self.version = 0
         for rel in relations or ():
             self.put(rel)
 
     # -- catalog -------------------------------------------------------------
     def put(self, rel: Relation) -> None:
+        """Insert or replace a relation.  Replacement is an arbitrary
+        mutation, so cache entries covering the name are invalidated."""
+        old = self._relations.get(rel.name)
         self._relations[rel.name] = rel
+        self.version += 1
+        self._invalidate(rel.name)
+        for entry in self._cofactor_cache.values():  # survivors stay valid
+            entry.version = self.version
+        for attr in set(rel.attributes) | set(old.attributes if old else ()):
+            self._moments.pop(attr, None)
 
     def get(self, name: str) -> Relation:
         return self._relations[name]
@@ -43,6 +99,154 @@ class Store:
 
     def total_rows(self) -> int:
         return sum(r.num_rows for r in self._relations.values())
+
+    # -- incremental updates ---------------------------------------------------
+    def append(self, name: str, delta: Relation) -> Relation:
+        """Append the rows of ``delta`` to relation ``name`` (batch update).
+
+        ``delta`` must carry the same key/value attribute sets as the stored
+        relation (its own ``name`` is ignored).  Cached cofactor entries
+        whose join covers ``name`` are maintained in place: the delta
+        cofactors are computed against the pre-merge catalog and summed in
+        (see module docstring); entries over other relations are untouched.
+        Returns the merged relation now in the catalog.
+        """
+        if name not in self._relations:
+            raise KeyError(f"append target {name!r} not in catalog")
+        base = self._relations[name]
+        merged = base.concat(delta)  # validates attribute sets first
+
+        if delta.num_rows:
+            delta_named = dataclasses.replace(
+                delta,
+                name=name,
+                keys=dict(delta.keys),
+                values=dict(delta.values),
+                domains=dict(delta.domains),
+            )
+            # one delta factorization per (vorder, backend) over the union
+            # of cached feature sets; entries derive via project — entries
+            # differing only in features don't pay the join again.
+            groups: Dict[tuple, List[tuple]] = {}
+            for key, entry in self._cofactor_cache.items():
+                if name in entry.relations:
+                    sig, feats, backend = key
+                    groups.setdefault((sig, backend), []).append(key)
+            for (sig, backend), keys in groups.items():
+                feats_union = list(
+                    dict.fromkeys(f for k in keys for f in k[1])
+                )
+                delta_cof = self._delta_cofactors(
+                    name, delta_named, sig, feats_union, backend
+                )
+                for key in keys:
+                    entry = self._cofactor_cache[key]
+                    entry.cofactors = entry.cofactors + delta_cof.project(
+                        list(key[1])
+                    )
+            for attr, (s, mx, cnt) in list(self._moments.items()):
+                if attr not in delta_named.attributes:
+                    continue
+                col = delta_named.column(attr).astype(np.float64)
+                self._moments[attr] = (
+                    s + float(col.sum()),
+                    max(mx, float(np.abs(col).max())),
+                    cnt + len(col),
+                )
+        self._relations[name] = merged
+        self.version += 1
+        for entry in self._cofactor_cache.values():
+            entry.version = self.version
+        return merged
+
+    def column_moments(self, col: str) -> Tuple[float, float, int]:
+        """(sum, max|x|, count) of ``col`` over the union of relations that
+        contain it — computed once, then maintained under ``append`` and
+        invalidated by ``put``.  The feature-scaling building block
+        (``compute_scale_factors`` reads avg = sum/count and max|x| from
+        here, so warm retrains never rescan the historical data)."""
+        if col in self._moments:
+            return self._moments[col]
+        chunks = [
+            rel.column(col).astype(np.float64)
+            for rel in self._relations.values()
+            if col in rel.values or col in rel.keys
+        ]
+        if not chunks:
+            raise ValueError(f"column {col} not found in any relation")
+        allv = np.concatenate(chunks)
+        out = (float(allv.sum()), float(np.abs(allv).max()), len(allv))
+        self._moments[col] = out
+        return out
+
+    def _delta_cofactors(
+        self,
+        name: str,
+        delta: Relation,
+        vorder_sig: tuple,
+        features: List[str],
+        backend: str,
+    ) -> "Cofactors":
+        """Cofactors of the join with relation ``name`` replaced by the
+        delta rows — the additive update term for one cache entry."""
+        from .factorize import FactorizedEngine
+
+        vorder = self._vorders[vorder_sig]
+        rels = [
+            delta if rn == name else self._relations[rn]
+            for rn in dict.fromkeys(vorder.relations())
+        ]
+        delta_store = Store(rels)
+        return FactorizedEngine(
+            delta_store, vorder, features, backend=backend
+        ).cofactors()
+
+    # -- cofactor cache --------------------------------------------------------
+    def cofactors(
+        self,
+        vorder: "VariableOrder",
+        features: Sequence[str],
+        backend: str = "jax",
+        refresh: bool = False,
+    ) -> "Cofactors":
+        """Cached *unscaled* cofactors over the factorized join of
+        ``vorder`` for ``features``.  Computes on miss; appends maintain the
+        entry incrementally; ``refresh=True`` forces a from-scratch
+        recompute (and re-seeds the cache).  Do not mutate the result —
+        derive scaled views with ``Cofactors.rescale``."""
+        from .factorize import FactorizedEngine
+
+        sig = vorder.signature()
+        key = (sig, tuple(features), backend)
+        entry = self._cofactor_cache.get(key)
+        if (
+            entry is not None
+            and not refresh
+            and entry.version == self.version  # backstop vs invalidation bugs
+        ):
+            return entry.cofactors
+        cof = FactorizedEngine(
+            self, vorder, list(features), backend=backend
+        ).cofactors()
+        self._vorders[sig] = vorder
+        self._cofactor_cache[key] = _CacheEntry(
+            cofactors=cof,
+            relations=frozenset(vorder.relations()),
+            version=self.version,
+        )
+        return cof
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"entries": len(self._cofactor_cache), "version": self.version}
+
+    def _invalidate(self, name: str) -> None:
+        stale = [
+            k
+            for k, e in self._cofactor_cache.items()
+            if name in e.relations
+        ]
+        for k in stale:
+            del self._cofactor_cache[k]
 
     # -- natural join (the noPre path) ----------------------------------------
     def materialize_join(
@@ -90,8 +294,12 @@ def _join_pair(left: Relation, right: Relation) -> Relation:
     for a, c in right.values.items():
         if a not in values:
             values[a] = c[ir]
+    # merge domains per attribute with max: the join key above was built with
+    # max(left, right), so keeping a smaller domain here would desynchronize
+    # later composite_key calls on the joined relation.
     domains = dict(right.domains)
-    domains.update(left.domains)
+    for a, d in left.domains.items():
+        domains[a] = max(d, domains.get(a, 0))
     return Relation(
         name=f"({left.name}⋈{right.name})",
         keys=keys,

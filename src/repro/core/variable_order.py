@@ -76,6 +76,16 @@ class VariableOrder:
             out.extend(ch.relations())
         return out
 
+    def signature(self) -> tuple:
+        """Hashable structural identity of this (sub)tree — the cache key
+        component used by ``Store``'s cofactor cache.  Two orders with the
+        same shape, names and relation leaves share a signature."""
+        return (
+            self.name,
+            self.relation,
+            tuple(ch.signature() for ch in self.children),
+        )
+
     def find_leaves(self) -> List["VariableOrder"]:
         """Paper's ``findLeaves``: all relation-leaf nodes."""
         if self.is_relation:

@@ -59,22 +59,26 @@ def segment_gram(
     num_groups: int,
     bm: int | None = None,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> jnp.ndarray:
     """Per-group Gram for any [M, K] + int seg [M]; fp32 [G, K, K].
 
     Pads rows with out-of-range segment id (one-hot row of zeros ⇒ no
     contribution).  If the [G, K, K] accumulator would exceed the VMEM
-    budget, groups are processed in chunks with ids rebased per chunk.
+    budget (``vmem_budget``, default ``VMEM_ACC_BYTES``; override only to
+    force the chunked path, e.g. in tests), groups are processed in chunks
+    with ids rebased per chunk.
     """
     if interpret is None:
         interpret = not on_tpu()
+    budget = min(vmem_budget or VMEM_ACC_BYTES, VMEM_ACC_BYTES)
     m, k = x.shape
     bm = bm or min(SEG_BM, _round_up(max(m, 1), 8))
     mp = _round_up(max(m, 1), bm)
     xp = jnp.zeros((mp, k), dtype=x.dtype).at[:m, :].set(x)
 
     # -1 leaves room for the +1 out-of-chunk pad group in the chunked path
-    g_chunk = max(1, min(num_groups, VMEM_ACC_BYTES // max(k * k * 4, 1) - 1))
+    g_chunk = max(1, min(num_groups, budget // max(k * k * 4, 1) - 1))
     if g_chunk >= num_groups:
         segp = jnp.full((mp, 1), num_groups, dtype=jnp.int32)
         segp = segp.at[:m, 0].set(seg.astype(jnp.int32))

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..models import model as model_lib
 from ..models.layers import apply_norm
 from ..models.model import _apply_block  # same block code as the assembly
@@ -40,9 +41,13 @@ from ..models.model import _apply_block  # same block code as the assembly
 __all__ = ["pipeline_loss_fn", "make_pp_loss_for_mesh"]
 
 
-def _run_periods(params_periods, x, cfg, positions):
-    """Apply this stage's stacked periods (scan, rematted like forward)."""
-    aux0 = jnp.zeros((), jnp.float32)
+def _run_periods(params_periods, x, cfg, positions, vary=()):
+    """Apply this stage's stacked periods (scan, rematted like forward).
+
+    The aux accumulator is [1]-shaped, not scalar: rank-0 floats crossing
+    the shard_map linearization boundary break the pinned JAX's transpose
+    (scalar residuals get all-axes names; see ``_pvary``)."""
+    aux0 = _pvary(jnp.zeros((1,), jnp.float32), vary)
 
     def period_fn(carry, pp):
         h, aux = carry
@@ -59,12 +64,21 @@ def _run_periods(params_periods, x, cfg, positions):
 
 def _pvary(x, axes):
     """Mark a constant as varying over the manual axes (shard_map vma typing
-    requires scan carries to have consistent varying sets)."""
+    requires scan carries to have consistent varying sets).  Older JAX (the
+    pinned 0.4.x) has no vma typing at all — there the marking is a no-op."""
     if not axes:
         return x
     if hasattr(jax.lax, "pvary"):
         return jax.lax.pvary(x, tuple(axes))
-    return jax.lax.pcast(x, tuple(axes), to="varying")  # newer spelling
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, tuple(axes), to="varying")  # newer spelling
+    # pre-vma JAX (pinned 0.4.x): no varying annotation exists.  Tie the
+    # constant to the manual axes with a zero-valued axis_index term so it
+    # enters the shard_map jaxpr as a device-dependent value rather than a
+    # captured constant — the old transpose machinery mishandles rank-0
+    # constant scan carries (_SpecError on the cotangent).
+    bump = sum(jax.lax.axis_index(a) for a in axes) * 0
+    return x + bump.astype(x.dtype)
 
 
 def pipeline_loss_fn(params, batch, cfg, *, stages: int, microbatches: int,
@@ -94,7 +108,12 @@ def pipeline_loss_fn(params, batch, cfg, *, stages: int, microbatches: int,
             logits, jnp.maximum(labels_mb, 0)[..., None], axis=-1
         )[..., 0]
         mask = (labels_mb >= 0).astype(jnp.float32)
-        return jnp.sum((logz - tgt) * mask), jnp.sum(mask)
+        # [1]-shaped sums — keep every float accumulator rank ≥ 1 inside the
+        # shard_map body (scalar residuals break the pinned JAX transpose)
+        return (
+            jnp.sum((logz - tgt) * mask).reshape(1),
+            jnp.sum(mask).reshape(1),
+        )
 
     def tick(carry, t):
         buf, loss_sum, tok_sum, aux_sum = carry
@@ -104,13 +123,13 @@ def pipeline_loss_fn(params, batch, cfg, *, stages: int, microbatches: int,
         injected = jnp.take(params["embed"], mb_tokens[inj_idx], axis=0)
         injected = injected.astype(cfg.dtype)
         x = jnp.where(stage == 0, injected, buf)
-        y, aux = _run_periods(params["periods"], x, cfg, positions)
+        y, aux = _run_periods(params["periods"], x, cfg, positions, vary)
         # last stage: microbatch (t - stages + 1) finishes at tick t
         out_idx = jnp.clip(t - (stages - 1), 0, m - 1)
         lsum, ntok = head_loss(y, mb_labels[out_idx])
         valid = (
             (stage == stages - 1) & (t >= stages - 1) & (t - (stages - 1) < m)
-        ).astype(jnp.float32)
+        ).astype(jnp.float32).reshape(1)
         loss_sum = loss_sum + valid * lsum
         tok_sum = tok_sum + valid * ntok
         aux_sum = aux_sum + aux / ticks
@@ -119,7 +138,7 @@ def pipeline_loss_fn(params, batch, cfg, *, stages: int, microbatches: int,
 
     vary = tuple(all_axes) or (axis,)
     buf0 = _pvary(jnp.zeros((b // m, s, d), cfg.dtype), vary)
-    zero = _pvary(jnp.zeros((), jnp.float32), vary)
+    zero = _pvary(jnp.zeros((1,), jnp.float32), vary)
     (buf, loss_sum, tok_sum, aux_sum), _ = jax.lax.scan(
         tick, (buf0, zero, zero, zero), jnp.arange(ticks)
     )
@@ -130,7 +149,7 @@ def pipeline_loss_fn(params, batch, cfg, *, stages: int, microbatches: int,
     nm = model_lib.num_moe_layers(cfg)
     ce = loss_sum / jnp.maximum(tok_sum, 1.0)
     total = ce + (cfg.router_aux * aux_sum / nm if nm else 0.0)
-    return total
+    return total[0]  # rank-1 accumulators squeeze only at the very end
 
 
 def _stage_slice_specs(params_abs, mesh: Mesh, policy, axis: str = "pod"):
@@ -181,7 +200,7 @@ def make_pp_loss_for_mesh(cfg, mesh: Mesh, policy, batch_abs,
     batch_specs_ = jax.tree.map(lambda s: s.spec, batch_sh)
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(param_specs, batch_specs_),
         out_specs=P(),

@@ -1,0 +1,341 @@
+"""Incremental cofactor maintenance: Store.append, the cofactor cache,
+streaming/grouped accumulation, and the warm-retrain path.
+
+The correctness anchor everywhere is Prop. 4.1 union commutativity: joins
+distribute over union, so the cofactors after an append must equal a
+from-scratch recompute — the delta path is checked against that oracle at
+fp64 tolerance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    VERSIONS,
+    cofactors_factorized,
+    cofactors_grouped,
+    cofactors_materialized,
+    cofactors_streaming,
+    design_matrix,
+    compute_scale_factors,
+    linear_regression,
+)
+from repro.core.distributed import incremental_sharded_cofactors
+from repro.core.relation import Relation
+from repro.data.synthetic import favorita_like, figure1_schema
+
+RNG = np.random.default_rng(7)
+
+
+def _sales_delta(n_rows, n_dates=8, n_stores=4, n_items=6, rng=RNG):
+    return Relation.from_columns(
+        "delta",
+        {
+            "date": rng.integers(0, n_dates, n_rows).astype(np.int32),
+            "store_nbr": rng.integers(0, n_stores, n_rows).astype(np.int32),
+            "item_nbr": rng.integers(0, n_items, n_rows).astype(np.int32),
+        },
+        {
+            "unit_sales": rng.normal(10, 2, n_rows),
+            "onpromotion": rng.integers(0, 2, n_rows).astype(np.float64),
+        },
+    )
+
+
+@pytest.fixture()
+def favorita():
+    return favorita_like(n_dates=8, n_stores=4, n_items=6, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Store.append + cache maintenance
+# ---------------------------------------------------------------------------
+
+def test_append_merges_rows_and_domains(favorita):
+    store = favorita.store
+    before = store.get("SalesF").num_rows
+    merged = store.append("SalesF", _sales_delta(13))
+    assert merged.num_rows == before + 13
+    assert store.get("SalesF").num_rows == before + 13
+    # domains survive the merge (delta ids are within existing domains here)
+    assert store.get("SalesF").domains["date"] == 8
+
+
+def test_append_requires_same_attributes(favorita):
+    bad = Relation.from_columns("d", {"date": [0]}, {"unit_sales": [1.0]})
+    with pytest.raises(ValueError):
+        favorita.store.append("SalesF", bad)
+    with pytest.raises(KeyError):
+        favorita.store.append("NoSuchRelation", _sales_delta(1))
+
+
+def test_append_delta_equals_scratch_recompute(favorita):
+    """Acceptance criterion: the delta path == from-scratch at fp64 tol."""
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")  # seed the cache
+    for n in (17, 5, 29):  # repeated appends fold repeatedly
+        b.store.append("SalesF", _sales_delta(n))
+    warm = b.store.cofactors(b.vorder, cols, backend="numpy")
+    cold = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+
+
+def test_append_to_dimension_relation_maintains_cache(favorita):
+    """Appending to a *dimension* relation multiplies out differently than a
+    fact append — the delta join must still be exact."""
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    # a second transactions batch for existing (date, store) pairs
+    delta = Relation.from_columns(
+        "d",
+        {"date": [0, 1, 2], "store_nbr": [0, 1, 2]},
+        {"transactions": [111.0, 222.0, 333.0]},
+    )
+    b.store.append("Transactions", delta)
+    warm = b.store.cofactors(b.vorder, cols, backend="numpy")
+    cold = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+
+
+def test_interleaved_appends_to_different_relations(favorita):
+    """ΔR then ΔS: the second delta must see the already-merged first one."""
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    b.store.append("SalesF", _sales_delta(11))
+    b.store.append(
+        "Transactions",
+        Relation.from_columns(
+            "d",
+            {"date": [3], "store_nbr": [3]},
+            {"transactions": [999.0]},
+        ),
+    )
+    b.store.append("SalesF", _sales_delta(4))
+    warm = b.store.cofactors(b.vorder, cols, backend="numpy")
+    cold = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+
+
+def test_cache_hit_and_put_invalidation(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    c1 = b.store.cofactors(b.vorder, cols, backend="numpy")
+    assert b.store.cache_info()["entries"] == 1
+    c2 = b.store.cofactors(b.vorder, cols, backend="numpy")
+    assert c2 is c1  # cache hit, no recompute
+    # overwriting a covered relation invalidates (arbitrary mutation)
+    b.store.put(b.store.get("Oil"))
+    assert b.store.cache_info()["entries"] == 0
+    c3 = b.store.cofactors(b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(c3.matrix(), c1.matrix(), rtol=1e-12)
+
+
+def test_put_unrelated_relation_keeps_cache(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    b.store.put(
+        Relation.from_columns("Unrelated", {"zz": [0]}, {"w": [1.0]})
+    )
+    assert b.store.cache_info()["entries"] == 1
+
+
+def test_cache_keyed_by_features_and_backend(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    b.store.cofactors(b.vorder, cols[:2], backend="numpy")
+    b.store.cofactors(b.vorder, cols, backend="jax")
+    assert b.store.cache_info()["entries"] == 3
+
+
+def test_append_maintains_all_cache_entries(favorita):
+    """Multiple live entries (feature subsets share one delta factorization
+    via project) must all stay exact after an append."""
+    b = favorita
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    b.store.cofactors(b.vorder, cols[:2], backend="numpy")
+    b.store.append("SalesF", _sales_delta(9))
+    for feats in (cols, cols[:2]):
+        warm = b.store.cofactors(b.vorder, feats, backend="numpy")
+        cold = cofactors_factorized(b.store, b.vorder, feats, backend="numpy")
+        np.testing.assert_allclose(
+            warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+        )
+
+
+def test_column_moments_maintained_under_append(favorita):
+    """Scale factors from maintained moments == recompute on a fresh store."""
+    from repro.core.store import Store
+
+    b = favorita
+    for f in b.features + [b.label]:
+        b.store.column_moments(f)  # seed the moments cache
+    b.store.append("SalesF", _sales_delta(21))
+    factors = compute_scale_factors(b.store, b.features, b.label)
+    fresh = Store(b.store.relations())  # same data, no caches
+    expect = compute_scale_factors(fresh, b.features, b.label)
+    for col in b.features + [b.label]:
+        np.testing.assert_allclose(factors.avg[col], expect.avg[col],
+                                   rtol=1e-12)
+        np.testing.assert_allclose(factors.max[col], expect.max[col],
+                                   rtol=1e-12)
+    # put() drops the affected columns' moments
+    b.store.put(b.store.get("SalesF"))
+    factors2 = compute_scale_factors(b.store, b.features, b.label)
+    np.testing.assert_allclose(
+        factors2.avg[b.label], expect.avg[b.label], rtol=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# warm retrain (regression wiring) + lazy rescale
+# ---------------------------------------------------------------------------
+
+def test_warm_retrain_after_append_matches_cold(favorita):
+    b = favorita
+    cfg = VERSIONS["closed"]  # deterministic solver: exact comparison
+    linear_regression(
+        b.store, b.vorder, b.features, b.label, config=cfg,
+        backend="numpy", use_cache=True,
+    )
+    b.store.append("SalesF", _sales_delta(25))
+    warm = linear_regression(
+        b.store, b.vorder, b.features, b.label, config=cfg,
+        backend="numpy", use_cache=True,
+    )
+    cold = linear_regression(
+        b.store, b.vorder, b.features, b.label, config=cfg, backend="numpy"
+    )
+    np.testing.assert_allclose(warm.theta, cold.theta, rtol=1e-8, atol=1e-8)
+
+
+def test_rescale_matches_engine_scaled_compute(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    factors = compute_scale_factors(b.store, b.features, b.label)
+    direct = cofactors_factorized(
+        b.store, b.vorder, cols, backend="numpy", scale=factors
+    )
+    lazy = cofactors_factorized(
+        b.store, b.vorder, cols, backend="numpy"
+    ).rescale(factors)
+    np.testing.assert_allclose(
+        lazy.matrix(), direct.matrix(), rtol=1e-9, atol=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming / grouped accumulation
+# ---------------------------------------------------------------------------
+
+def test_streaming_equals_oracle(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    joined = b.store.materialize_join()
+    z = design_matrix(joined, cols)
+    for chunk_rows in (1, 7, 64, 10_000):  # incl. single-row and one-shot
+        stream = cofactors_streaming(z, cols, chunk_rows=chunk_rows)
+        np.testing.assert_allclose(stream.count, z.shape[0])
+        np.testing.assert_allclose(
+            stream.lin, z.sum(0), rtol=5e-4, atol=1e-2
+        )
+        np.testing.assert_allclose(
+            stream.quad, z.T @ z, rtol=5e-4, atol=1e-2
+        )
+
+
+def test_streaming_materialized_path(favorita):
+    b = favorita
+    cols = b.features + [b.label]
+    one_shot = cofactors_materialized(b.store, cols)
+    streamed = cofactors_materialized(b.store, cols, chunk_rows=19)
+    np.testing.assert_allclose(
+        streamed.matrix(), one_shot.matrix(), rtol=5e-4, atol=1e-2
+    )
+
+
+def test_streaming_empty_and_iterable_inputs():
+    cols = ["a", "b"]
+    empty = cofactors_streaming(iter(()), cols)
+    assert empty.count == 0.0
+    chunks = [RNG.normal(size=(5, 2)), RNG.normal(size=(3, 2))]
+    cof = cofactors_streaming(iter(chunks), cols)
+    z = np.concatenate(chunks, 0)
+    np.testing.assert_allclose(cof.quad, z.T @ z, rtol=5e-4, atol=1e-3)
+    with pytest.raises(ValueError):
+        cofactors_streaming(z, cols)  # matrix input needs chunk_rows
+    with pytest.raises(ValueError):
+        cofactors_streaming(z, cols, chunk_rows=-5)  # must not fold 0 chunks
+    with pytest.raises(ValueError):  # wrong width must not broadcast
+        cofactors_streaming(iter([RNG.normal(size=(4, 1))]), cols)
+
+
+def test_grouped_sums_to_global():
+    z = RNG.normal(size=(50, 3))
+    seg = RNG.integers(0, 6, 50)
+    groups = cofactors_grouped(z, seg, 6, ["a", "b", "c"])
+    total = groups[0]
+    for g in groups[1:]:
+        total = total + g
+    np.testing.assert_allclose(total.count, 50)
+    np.testing.assert_allclose(total.quad, z.T @ z, rtol=5e-4, atol=1e-2)
+    oracle = cofactors_grouped(z, seg, 6, ["a", "b", "c"], use_kernel=False)
+    for got, exp in zip(groups, oracle):
+        np.testing.assert_allclose(got.quad, exp.quad, rtol=5e-4, atol=1e-2)
+
+
+def test_grouped_out_of_range_segments_dropped_on_both_paths():
+    """Negative / too-large segment ids contribute to no group, matching the
+    kernel's zero-one-hot-row semantics."""
+    z = RNG.normal(size=(6, 2))
+    seg = np.array([0, -1, 1, 5, 0, 2])  # -1 and 5 out of range for G=3
+    feats = ["a", "b"]
+    kern = cofactors_grouped(z, seg, 3, feats, use_kernel=True)
+    host = cofactors_grouped(z, seg, 3, feats, use_kernel=False)
+    assert [c.count for c in host] == [2.0, 1.0, 1.0]
+    for got, exp in zip(kern, host):
+        np.testing.assert_allclose(got.count, exp.count)
+        np.testing.assert_allclose(got.quad, exp.quad, rtol=5e-4, atol=1e-3)
+
+
+def test_incremental_sharded_cofactors_host_path():
+    z = RNG.normal(size=(40, 3))
+    base = cofactors_streaming(z, ["a", "b", "c"], chunk_rows=40,
+                               use_kernel=False)
+    delta = RNG.normal(size=(9, 3))
+    out = incremental_sharded_cofactors(base, delta)
+    full = np.concatenate([z, delta], 0)
+    np.testing.assert_allclose(out.quad, full.T @ full, rtol=1e-6, atol=1e-4)
+    # empty delta is the identity
+    same = incremental_sharded_cofactors(out, np.zeros((0, 3)))
+    assert same is out
+
+
+# ---------------------------------------------------------------------------
+# figure-1 schema sanity (second schema shape through the same machinery)
+# ---------------------------------------------------------------------------
+
+def test_append_fig1_schema():
+    b = figure1_schema()
+    cols = b.features + [b.label]
+    b.store.cofactors(b.vorder, cols, backend="numpy")
+    delta = Relation.from_columns(
+        "d", {"P": [0, 1]}, {"Sale": [5.0, 6.0]}
+    )
+    b.store.append("Sales", delta)
+    warm = b.store.cofactors(b.vorder, cols, backend="numpy")
+    cold = cofactors_factorized(b.store, b.vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )

@@ -84,6 +84,26 @@ def test_segment_gram_group_chunking():
     )
 
 
+@pytest.mark.parametrize("budget", [40, 100, 200])
+def test_segment_gram_forced_chunking_matches_unchunked(budget):
+    """Drive the g_chunk < num_groups branch directly with a tiny VMEM
+    budget: the rebased-id chunked result must match the one-shot path
+    and the oracle."""
+    m, k, g = 57, 3, 10  # k*k*4 = 36 bytes/group: budget 40 -> 1 grp/chunk
+    x = rand((m, k), jnp.float32)
+    seg = jax.random.randint(KEY, (m,), 0, g)
+    chunked = ops.segment_gram(x, seg, g, vmem_budget=budget)
+    unchunked = ops.segment_gram(x, seg, g)
+    np.testing.assert_allclose(
+        np.asarray(chunked), np.asarray(unchunked), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(chunked),
+        np.asarray(ref.segment_gram_ref(x, seg, g)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
 # ---------------------------------------------------------------------------
 # moments
 # ---------------------------------------------------------------------------

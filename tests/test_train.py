@@ -110,8 +110,10 @@ def test_compressed_psum_matches_mean():
     from functools import partial
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
+
     @partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
     )
     def fn(gs, es):
