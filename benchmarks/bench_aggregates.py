@@ -66,8 +66,11 @@ def run(fanouts=(4, 8, 16, 32)) -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(fanouts=(4, 8))
+    else:
+        run()
 
 
 if __name__ == "__main__":

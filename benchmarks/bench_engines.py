@@ -69,8 +69,11 @@ def run(scales=((32, 8, 16), (64, 16, 32), (96, 24, 48))) -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(scales=((16, 4, 8),))
+    else:
+        run()
 
 
 if __name__ == "__main__":

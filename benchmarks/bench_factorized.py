@@ -21,7 +21,7 @@ from .common import emit
 
 
 def run(n_dates: int = 384, n_stores: int = 64, n_items: int = 96,
-        sales_fraction: float = 0.9) -> list:
+        sales_fraction: float = 0.9, versions=None) -> list:
     """Scale matters: the paper's effect (cofactors decouple GD cost from
     data size) only shows once the join is large relative to the p×p
     matrix.  ~2M join rows here (the Kaggle original has 125M).  Each
@@ -32,7 +32,7 @@ def run(n_dates: int = 384, n_stores: int = 64, n_items: int = 96,
         sales_fraction=sales_fraction,
     )
     rows = []
-    for key in ("v1", "v2", "v3", "v4", "v5", "v6", "closed"):
+    for key in versions or ("v1", "v2", "v3", "v4", "v5", "v6", "closed"):
         cfg = VERSIONS[key]
         res = None
         for _ in range(2):  # second run = warm jit caches
@@ -66,8 +66,12 @@ def run(n_dates: int = 384, n_stores: int = 64, n_items: int = 96,
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(n_dates=16, n_stores=4, n_items=8, sales_fraction=0.5,
+            versions=("v1", "v2", "closed"))
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -118,8 +118,11 @@ def run(
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(n_dates=32, n_stores=8, n_items=16, n_batches=2, delta_rows=200)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -18,10 +18,11 @@ from repro.kernels import ref
 from .common import emit, timeit
 
 
-def run() -> list:
+def run(gram_shapes=((4096, 16), (65536, 16), (65536, 64)),
+        seg_shapes=((65536, 16, 64),), attn_shapes=((8, 1024, 64),)) -> list:
     rows = []
     key = jax.random.key(0)
-    for m, k in ((4096, 16), (65536, 16), (65536, 64)):
+    for m, k in gram_shapes:
         x = jax.random.normal(key, (m, k), jnp.float32)
         gram = jax.jit(ref.gram_ref)
         t = timeit(lambda: jax.block_until_ready(gram(x)), repeats=5)
@@ -35,7 +36,7 @@ def run() -> list:
                 "arith_intensity": flops / (4.0 * (m * k + k * k)),
             }
         )
-    for m, k, g in ((65536, 16, 64),):
+    for m, k, g in seg_shapes:
         x = jax.random.normal(key, (m, k), jnp.float32)
         seg = jax.random.randint(key, (m,), 0, g)
         sg = jax.jit(lambda x, s: ref.segment_gram_ref(x, s, g))
@@ -50,7 +51,7 @@ def run() -> list:
                 "arith_intensity": flops / (4.0 * (m * k + g * k * k)),
             }
         )
-    for bh, s, d in ((8, 1024, 64),):
+    for bh, s, d in attn_shapes:
         q = jax.random.normal(key, (bh, s, d), jnp.float32)
         fl = jax.jit(lambda q: ref.flash_ref(q, q, q, causal=True))
         t = timeit(lambda: jax.block_until_ready(fl(q)), repeats=3)
@@ -68,8 +69,15 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(
+            gram_shapes=((4096, 16),),
+            seg_shapes=((4096, 16, 16),),
+            attn_shapes=((2, 256, 64),),
+        )
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -19,11 +19,11 @@ from repro.train import TrainHParams, init_state, make_train_step
 from .common import emit, timeit
 
 
-def run() -> list:
+def run(archs=None) -> list:
     rows = []
     key = jax.random.key(0)
     B, S = 2, 64
-    for name in sorted(ARCHS):
+    for name in archs if archs is not None else sorted(ARCHS):
         cfg = get_config(name, smoke=True)
         hp = TrainHParams(total_steps=10, warmup_steps=0)
         state = init_state(key, cfg, hp)
@@ -63,8 +63,11 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(archs=sorted(ARCHS)[:2])
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -12,14 +12,14 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.polynomial import expand_monomials, polynomial_cofactors
-from repro.core import cofactors_materialized, design_matrix
+from repro.core import design_matrix
 from repro.data.synthetic import favorita_like
 
 from .common import emit, timeit
 
 
-def run(degrees=(1, 2, 3)) -> list:
-    bundle = favorita_like(48, 12, 24)
+def run(degrees=(1, 2, 3), scale=(48, 12, 24)) -> list:
+    bundle = favorita_like(*scale)
     cols = bundle.features + [bundle.label]
     joined = bundle.store.materialize_join()
     z = design_matrix(joined, cols)
@@ -68,8 +68,11 @@ def run(degrees=(1, 2, 3)) -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(degrees=(1, 2), scale=(16, 4, 8))
+    else:
+        run()
 
 
 if __name__ == "__main__":

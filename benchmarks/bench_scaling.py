@@ -21,14 +21,14 @@ from repro.data.synthetic import favorita_like
 from .common import emit, timeit
 
 
-def run() -> list:
-    bundle = favorita_like(96, 24, 48)
+def run(scale=(96, 24, 48), partitions=(1, 2, 4, 8, 16)) -> list:
+    bundle = favorita_like(*scale)
     cols = bundle.features + [bundle.label]
     joined = bundle.store.materialize_join()
     z = design_matrix(joined, cols)
     rows = []
     base = None
-    for parts in (1, 2, 4, 8, 16):
+    for parts in partitions:
         t = timeit(
             lambda: partitioned_cofactors_host(z, cols, parts), repeats=3
         )
@@ -58,8 +58,11 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
-    run()
+def main(smoke: bool = False) -> None:
+    if smoke:
+        run(scale=(24, 6, 12), partitions=(1, 2, 4))
+    else:
+        run()
 
 
 if __name__ == "__main__":

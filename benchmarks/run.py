@@ -1,4 +1,4 @@
-"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``.
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run [--smoke]``.
 
 One module per paper table/figure (+ substrate benches):
 
@@ -7,22 +7,35 @@ One module per paper table/figure (+ substrate benches):
   figure23_aggregates          — Figs. 2–3 (COUNT / SUM over factorization)
   union_commutativity_scaling  — Prop. 4.1 as the distribution rule
   incremental_retrain_after_append — retrain cost after appends (AC/DC)
+  categorical_vs_onehot        — sparse categorical cofactors vs one-hot
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
 
-JSON mirrors land in benchmarks/results/.
+``--smoke`` runs every suite at tiny fixed-seed sizes (< 2 min total) —
+the CI benchmark-smoke job's mode.  JSON mirrors land in
+benchmarks/results/, plus a ``summary.json`` with per-suite status.
+
+Exit code is non-zero when ANY suite raises (each failure prints its full
+traceback); CI gates on it.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
+import traceback
+
+from .common import RESULTS_DIR
 
 
-def main() -> int:
+def default_suites():
     from . import (
         bench_aggregates,
+        bench_categorical,
         bench_engines,
         bench_factorized,
         bench_incremental,
@@ -32,28 +45,64 @@ def main() -> int:
         bench_scaling,
     )
 
-    suites = [
+    return [
         ("table2 (factorized versions)", bench_factorized.main),
         ("figure9 (engine comparison)", bench_engines.main),
         ("figures2-3 (aggregates)", bench_aggregates.main),
         ("union commutativity scaling", bench_scaling.main),
         ("incremental retrain after append", bench_incremental.main),
+        ("categorical vs one-hot", bench_categorical.main),
         ("polynomial extension", bench_polynomial.main),
         ("kernel hotspots", bench_kernels.main),
         ("lm smoke steps", bench_lm.main),
     ]
-    failures = 0
+
+
+def run_suites(suites, smoke: bool = False) -> int:
+    """Run each (name, fn) suite; fn takes ``smoke``.  Failures never stop
+    the sweep but always fail the run: every exception is reported with a
+    full traceback, recorded in summary.json, and turned into exit code 1."""
+    summary = []
     for name, fn in suites:
         t0 = time.perf_counter()
         print(f"\n#### {name}")
         try:
-            fn()
-            print(f"#### {name}: ok ({time.perf_counter() - t0:.1f}s)")
-        except Exception as e:  # keep the suite going; report at the end
-            failures += 1
-            print(f"#### {name}: FAILED — {e!r}")
-    print(f"\n[benchmarks] {len(suites) - failures}/{len(suites)} suites ok")
+            fn(smoke=smoke)
+            dt = time.perf_counter() - t0
+            print(f"#### {name}: ok ({dt:.1f}s)")
+            summary.append({"suite": name, "status": "ok", "seconds": dt})
+        except Exception:
+            dt = time.perf_counter() - t0
+            traceback.print_exc()
+            print(f"#### {name}: FAILED ({dt:.1f}s)")
+            summary.append(
+                {
+                    "suite": name,
+                    "status": "failed",
+                    "seconds": dt,
+                    "error": traceback.format_exc(limit=20),
+                }
+            )
+    failures = sum(1 for s in summary if s["status"] != "ok")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "summary.json"), "w") as f:
+        json.dump({"smoke": smoke, "suites": summary}, f, indent=2)
+    print(
+        f"\n[benchmarks] {len(summary) - failures}/{len(summary)} suites ok"
+        + (" (smoke)" if smoke else "")
+    )
     return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny fixed-seed sizes for CI gating (< 2 min total)",
+    )
+    args = parser.parse_args(argv)
+    return run_suites(default_suites(), smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -9,10 +9,20 @@ Layering (paper section in parentheses):
 * ``gd``                        — BGD on cofactor matrices (§4.4)
 * ``scaling``                   — feature scaling + θ rescale (§3.3, §4.2)
 * ``regression``                — the full pipeline + Table-2 versions (§4.5)
+* ``categorical``               — sparse categorical cofactors (AC/DC-style)
+* ``glm``                       — logistic/Poisson over the compressed join
 * ``polynomial``                — beyond-paper degree-d extension (§6 outlook)
 * ``distributed``               — union-commutativity as data parallelism
 """
 
+from .categorical import (
+    CatCofactors,
+    SparseCounts,
+    cat_cofactors_factorized,
+    cat_cofactors_from_arrays,
+    cat_cofactors_materialized,
+    onehot_design_matrix,
+)
 from .cofactor import (
     Cofactors,
     cofactors_factorized,
@@ -24,8 +34,18 @@ from .cofactor import (
     design_matrix,
     iter_design_chunks,
 )
-from .factorize import FactorizedEngine
+from .factorize import FactorizedEngine, GroupedView, grouped_cofactors_factorized
 from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
+from .glm import (
+    CompressedDesign,
+    GLMConfig,
+    GLMResult,
+    compressed_design_factorized,
+    compressed_design_materialized,
+    fit_glm,
+    fit_glm_onehot,
+    glm_regression,
+)
 from .regression import (
     VERSIONS,
     RegressionConfig,
@@ -48,22 +68,38 @@ from .variable_order import (
 )
 
 __all__ = [
+    "CatCofactors",
     "Cofactors",
+    "CompressedDesign",
     "Dictionary",
     "FactorizedEngine",
     "GDConfig",
     "GDResult",
+    "GLMConfig",
+    "GLMResult",
+    "GroupedView",
     "INTERCEPT",
     "Relation",
     "RegressionConfig",
     "RegressionResult",
     "ScaleFactors",
+    "SparseCounts",
     "Store",
     "VariableOrder",
     "VERSIONS",
     "bgd_cofactor",
     "bgd_data",
+    "cat_cofactors_factorized",
+    "cat_cofactors_from_arrays",
+    "cat_cofactors_materialized",
     "cofactors_factorized",
+    "compressed_design_factorized",
+    "compressed_design_materialized",
+    "fit_glm",
+    "fit_glm_onehot",
+    "glm_regression",
+    "grouped_cofactors_factorized",
+    "onehot_design_matrix",
     "cofactors_from_matrix",
     "cofactors_grouped",
     "cofactors_materialized",

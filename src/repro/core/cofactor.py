@@ -24,6 +24,12 @@ Streaming / incremental paths (union commutativity, Prop. 4.1):
   u·u^T carry count/lin/quad together); the groups sum back to the global
   cofactors with ``__add__`` — the same algebra ``Store.append`` and the
   distributed reduction use.
+
+Categorical features (AC/DC-style sparse group-by blocks instead of
+one-hot columns) live in ``repro.core.categorical``; GLMs over the
+compressed join in ``repro.core.glm``.  Both build on the same grouped
+aggregates — ``FactorizedEngine(group_by=...)`` on the factorized side,
+``segment_gram`` on the materialized side.
 """
 
 from __future__ import annotations

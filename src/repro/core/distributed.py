@@ -26,7 +26,7 @@ cofactors with ``Cofactors.__add__`` — no rescan of the historical data.
 from __future__ import annotations
 
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,13 +34,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from .categorical import CatCofactors, SparseCounts, cat_cofactors_from_arrays
 from .factorize import Cofactors
 
 __all__ = [
     "sharded_gram",
     "sharded_cofactors",
+    "sharded_cat_cofactors",
     "partitioned_cofactors_host",
     "incremental_sharded_cofactors",
+    "incremental_sharded_cat_cofactors",
 ]
 
 
@@ -127,6 +130,134 @@ def incremental_sharded_cofactors(
         delta = partitioned_cofactors_host(z_delta, base.features, 1)
     else:
         delta = sharded_cofactors(z_delta, base.features, mesh, data_axes)
+    return base + delta
+
+
+def sharded_cat_cofactors(
+    x_cont: np.ndarray,
+    cat_ids: np.ndarray,
+    cont: Sequence[str],
+    cat: Sequence[str],
+    domains: dict,
+    mesh: Mesh,
+    data_axes: Sequence[str] = ("data",),
+) -> CatCofactors:
+    """Categorical cofactors with rows sharded over the mesh's data axes.
+
+    Same union-commutativity as ``sharded_cofactors``, extended to the
+    grouped blocks: every shard computes its dense per-category blocks with
+    the one-hot-matmul formulation of the ``segment_gram`` kernel (one-hot
+    of a [rows, D] *shard*, never of the global design matrix), and one
+    psum per block family reduces them.  Rows are padded to a shard
+    multiple with id −1 — an all-zero one-hot row — so padding contributes
+    nothing, mirroring the kernel's out-of-range trick.
+    """
+    cont, cat = list(cont), list(cat)
+    axes = tuple(data_axes)
+    nshards = 1
+    for a in axes:
+        nshards *= mesh.shape[a]
+    m, k = x_cont.shape
+    pad = (-m) % nshards
+    ind = np.concatenate([np.ones(m), np.zeros(pad)])[:, None]
+    xz = np.concatenate([x_cont, np.zeros((pad, k))], axis=0)
+    u = np.concatenate([ind, xz], axis=1).astype(np.float32)
+    for i, c in enumerate(cat):
+        if len(cat_ids) == 0:
+            continue
+        lo, hi = int(cat_ids[:, i].min()), int(cat_ids[:, i].max())
+        if lo < 0 or hi >= int(domains[c]):
+            raise ValueError(
+                f"category ids of {c!r} span [{lo}, {hi}], outside domain "
+                f"[0, {int(domains[c])}) — out-of-range one-hot rows are "
+                "all zeros and would be silently dropped (negative ids are "
+                "reserved for internal shard padding)"
+            )
+    ids = np.concatenate(
+        [cat_ids, np.full((pad, len(cat)), -1)], axis=0
+    ).astype(np.int32)
+    doms = [int(domains[c]) for c in cat]
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None)),
+        out_specs=P(),
+    )
+    def _fn(u_local, ids_local):
+        rows = u_local.shape[0]
+        onehots = [
+            (
+                ids_local[:, i, None]
+                == jax.lax.broadcasted_iota(jnp.int32, (rows, d), 1)
+            ).astype(jnp.float32)
+            for i, d in enumerate(doms)
+        ]
+        blocks = [u_local.T @ u_local]
+        blocks += [oh.T @ u_local for oh in onehots]  # [D_c, 1+k] each
+        for i in range(len(doms)):
+            for j in range(i + 1, len(doms)):
+                blocks.append(onehots[i].T @ onehots[j])
+        return tuple(jax.lax.psum(b, axes) for b in blocks)
+
+    sharding = NamedSharding(mesh, P(axes, None))
+    out = _fn(
+        jax.device_put(jnp.asarray(u), sharding),
+        jax.device_put(jnp.asarray(ids), sharding),
+    )
+    out = [np.asarray(b, dtype=np.float64) for b in out]
+    gram, rest = out[0], out[1:]
+    cat_count = {c: rest[i][:, 0] for i, c in enumerate(cat)}
+    cat_cont = {c: rest[i][:, 1:] for i, c in enumerate(cat)}
+    pair_blocks = rest[len(cat):]
+    cat_cat = {}
+    idx = 0
+    for i in range(len(cat)):
+        for j in range(i + 1, len(cat)):
+            cat_cat[(cat[i], cat[j])] = SparseCounts.from_dense(
+                pair_blocks[idx]
+            )
+            idx += 1
+    return CatCofactors(
+        count=float(gram[0, 0]),
+        lin=gram[0, 1:],
+        quad=gram[1:, 1:],
+        cont=cont,
+        cat=cat,
+        domains={c: int(domains[c]) for c in cat},
+        cat_count=cat_count,
+        cat_cont=cat_cont,
+        cat_cat=cat_cat,
+    )
+
+
+def incremental_sharded_cat_cofactors(
+    base: CatCofactors,
+    x_delta: np.ndarray,
+    ids_delta: np.ndarray,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+) -> CatCofactors:
+    """Fold appended rows into existing categorical cofactors — the
+    categorical twin of ``incremental_sharded_cofactors`` (same precision
+    trade-off: mesh path accumulates fp32, host path fp64).  Unseen
+    category ids in the delta grow the domains: the delta blocks are built
+    at the grown size and ``__add__`` zero-pads ``base`` up to match."""
+    if x_delta.shape[0] == 0:
+        return base
+    domains = {
+        c: max(base.domains[c], int(ids_delta[:, i].max()) + 1)
+        for i, c in enumerate(base.cat)
+    }
+    if mesh is None:
+        delta = cat_cofactors_from_arrays(
+            x_delta, ids_delta, base.cont, base.cat, domains
+        )
+    else:
+        delta = sharded_cat_cofactors(
+            x_delta, ids_delta, base.cont, base.cat, domains,
+            mesh, data_axes,
+        )
     return base + delta
 
 

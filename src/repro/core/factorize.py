@@ -45,7 +45,13 @@ from .relation import composite_key, sort_merge_join
 from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
 
-__all__ = ["Cofactors", "FactorizedEngine", "cofactors_factorized"]
+__all__ = [
+    "Cofactors",
+    "FactorizedEngine",
+    "GroupedView",
+    "cofactors_factorized",
+    "grouped_cofactors_factorized",
+]
 
 
 @dataclasses.dataclass
@@ -127,6 +133,34 @@ class Cofactors:
 
 
 @dataclasses.dataclass
+class GroupedView:
+    """Root view of a GROUP BY evaluation: one row per distinct combination
+    of the group attributes' *original dictionary ids* (not engine-internal
+    ids), carrying that group's degree-≤2 aggregates.
+
+    ``keys[attr][r]`` is the dictionary id of group row ``r`` for ``attr``;
+    ``count``/``lin``/``quad`` are the per-group cofactor entries in the
+    engine's requested feature order.  Summing the rows reproduces the
+    global (ungrouped) cofactors — the same union-commutativity that makes
+    these blocks composable under ``__add__`` and sharded reductions.
+    """
+
+    keys: Dict[str, np.ndarray]  # attr -> attribute values [N] (float64)
+    count: np.ndarray  # [N]
+    lin: np.ndarray  # [N, k]
+    quad: np.ndarray  # [N, k, k]
+    features: List[str]
+
+    @property
+    def num_groups(self) -> int:
+        return int(self.count.shape[0])
+
+    def ids(self, attr: str) -> np.ndarray:
+        """Group keys of a dictionary-encoded attribute as int64 ids."""
+        return self.keys[attr].astype(np.int64)
+
+
+@dataclasses.dataclass
 class _View:
     """One factorized view Q_A: keyed aggregate tensors (see module doc)."""
 
@@ -157,6 +191,7 @@ class FactorizedEngine:
         backend: str = "jax",
         dtype=None,
         scale=None,  # Optional[ScaleFactors] — lazy view rescaling (§4.2)
+        group_by: Sequence[str] = (),
     ) -> None:
         validate(vorder, store)
         self.store = store
@@ -168,7 +203,20 @@ class FactorizedEngine:
         self.xp = jnp if backend == "jax" else np
         self.dtype = dtype or (jnp.float32 if backend == "jax" else np.float64)
         self.scale = scale
+        self.group_by = list(group_by)
+        overlap = set(self.group_by) & set(self.features)
+        if overlap:
+            raise ValueError(
+                f"attributes {sorted(overlap)} cannot be both a feature and "
+                "a group-by key — declare them one or the other"
+            )
         self._encode_attributes()
+        missing = set(self.group_by) - set(self.domains)
+        if missing:
+            raise ValueError(
+                f"group-by attributes {sorted(missing)} occur in no relation "
+                "of the variable order"
+            )
 
     # -- dictionary encoding (global, per attribute) --------------------------
     def _encode_attributes(self) -> None:
@@ -193,6 +241,8 @@ class FactorizedEngine:
 
     # -- public API ------------------------------------------------------------
     def cofactors(self) -> Cofactors:
+        if self.group_by:
+            raise ValueError("use grouped_cofactors() when group_by is set")
         view = self._process(self.vorder)
         if view.num_rows != 1:
             raise AssertionError(
@@ -208,6 +258,34 @@ class FactorizedEngine:
             count=count,
             lin=lin[perm],
             quad=quad[np.ix_(perm, perm)],
+            features=list(self.features),
+        )
+
+    def grouped_cofactors(self) -> GroupedView:
+        """Per-group cofactors, grouped by the ``group_by`` attributes —
+        the SQL ``GROUP BY`` pushed through the factorization.
+
+        Group attributes are carried as view keys all the way to the root
+        instead of being aggregated out at their variable-order node, so the
+        cost stays O(factorization size) and the flat join never
+        materializes.  Keys are translated from engine-internal ids back to
+        the store's dictionary ids, making the result stable under appends
+        (new rows never renumber existing categories)."""
+        if not self.group_by:
+            raise ValueError("group_by is empty — use cofactors()")
+        view = self._process(self.vorder)
+        perm = [view.feats.index(f) for f in self.features]
+        lin = np.asarray(view.l, dtype=np.float64)[:, perm]
+        quad = np.asarray(view.q, dtype=np.float64)[:, perm][:, :, perm]
+        keys = {
+            a: self.attr_values[a][np.asarray(view.keys[a])].astype(np.float64)
+            for a in self.group_by
+        }
+        return GroupedView(
+            keys=keys,
+            count=np.asarray(view.c, dtype=np.float64),
+            lin=lin,
+            quad=quad,
             features=list(self.features),
         )
 
@@ -234,9 +312,10 @@ class FactorizedEngine:
         for other in child_views[1:]:
             view = self._combine(view, other)
         if node.name == INTERCEPT:
-            if view.keys:
+            if set(view.keys) != set(self.group_by):
+                extra = sorted(set(view.keys) - set(self.group_by))
                 raise AssertionError(
-                    f"attributes {sorted(view.keys)} survive to the intercept — "
+                    f"attributes {extra} survive to the intercept — "
                     "variable order misses nodes for them"
                 )
             return view
@@ -316,7 +395,11 @@ class FactorizedEngine:
                 f"variable {attr} does not occur in any relation below its "
                 "node — invalid variable order"
             )
-        remaining = sorted(set(view.keys) - {attr})
+        # GROUP BY attributes are never aggregated out: they stay among the
+        # grouping keys (the group-by below still compresses duplicates), so
+        # every ancestor view — and ultimately the root — is keyed by them.
+        drop = set() if attr in self.group_by else {attr}
+        remaining = sorted(set(view.keys) - drop)
         n = view.num_rows
         if remaining:
             doms = [self.domains[a] for a in remaining]
@@ -357,3 +440,25 @@ def cofactors_factorized(
     return FactorizedEngine(
         store, vorder, features, backend=backend, dtype=dtype, scale=scale
     ).cofactors()
+
+
+def grouped_cofactors_factorized(
+    store: Store,
+    vorder: VariableOrder,
+    features: Sequence[str],
+    group_by: Sequence[str],
+    backend: str = "jax",
+    dtype=None,
+    scale=None,
+) -> GroupedView:
+    """Convenience wrapper: GROUP BY ``group_by`` cofactors over the
+    factorized join — the building block of the categorical algebra."""
+    return FactorizedEngine(
+        store,
+        vorder,
+        features,
+        backend=backend,
+        dtype=dtype,
+        scale=scale,
+        group_by=group_by,
+    ).grouped_cofactors()

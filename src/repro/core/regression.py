@@ -79,23 +79,38 @@ VERSIONS: Dict[str, RegressionConfig] = {
 class RegressionResult:
     theta: np.ndarray  # in ORIGINAL units: [intercept, features..., label=-1]
     theta_conv: np.ndarray  # in scaled units
-    factors: ScaleFactors
+    factors: Optional[ScaleFactors]  # None on the categorical path
     iterations: int
     seconds_scale: float
     seconds_cofactor: float
     seconds_gd: float
     config: RegressionConfig
+    names: Optional[List[str]] = None  # categorical path: assembled θ layout
 
     @property
     def seconds_total(self) -> float:
         return self.seconds_scale + self.seconds_cofactor + self.seconds_gd
 
     def evaluate(
-        self, store: Store, features: Sequence[str], label: str
+        self,
+        store: Store,
+        features: Sequence[str],
+        label: str,
+        categorical: Sequence[str] = (),
     ) -> Dict[str, float]:
         """Average absolute / relative error over the joined data (paper §5)."""
         joined = store.materialize_join()
-        x = design_matrix(joined, features)
+        if categorical:
+            from .categorical import onehot_design_matrix
+
+            x, _ = onehot_design_matrix(
+                joined,
+                [f for f in features if f not in categorical],
+                list(categorical),
+                {c: store.attr_domain(c) for c in categorical},
+            )
+        else:
+            x = design_matrix(joined, features)
         y = joined.column(label).astype(np.float64)
         pred = predict(x, self.theta)
         abs_err = np.abs(y - pred)
@@ -117,6 +132,7 @@ def linear_regression(
     backend: str = "jax",
     use_kernel: bool = False,
     use_cache: bool = False,
+    categorical: Sequence[str] = (),
 ) -> RegressionResult:
     """The paper's ``linearRegression(...)`` pipeline.
 
@@ -129,11 +145,25 @@ def linear_regression(
     (regardless of ``backend``): unscaled quad entries grow with data
     magnitude and ``rescale`` is a cancelling difference, so a long-lived
     fp32 accumulator would leak rounding error into the leading digits.
+
+    ``categorical`` declares a subset of ``features`` as categorical: their
+    cofactor blocks become group-by aggregates (sparse, one-hot-free — see
+    ``repro.core.categorical``) and θ gains one coefficient per category in
+    ``RegressionResult.names`` order.  Routed through the closed-form or
+    BGD solver on the assembled matrix; features are used unscaled (one-hot
+    columns are already in [0, 1]; pair with ``solver='closed_form'`` —
+    the default ``VERSIONS['closed']`` — unless the continuous columns are
+    pre-scaled).
     """
     cfg = config or VERSIONS["v1"]
     features = list(features)
     if cfg.factorized and vorder is None:
         raise ValueError("factorized mode requires a variable order")
+    if categorical:
+        return _linear_regression_categorical(
+            store, vorder, features, label, cfg, backend,
+            list(categorical), use_cache, use_kernel,
+        )
 
     t0 = time.perf_counter()
     factors = compute_scale_factors(store, features, label, use_kernel=use_kernel)
@@ -181,4 +211,61 @@ def linear_regression(
         seconds_cofactor=t2 - t1,
         seconds_gd=t3 - t2,
         config=cfg,
+    )
+
+
+def _linear_regression_categorical(
+    store: Store,
+    vorder: Optional[VariableOrder],
+    features: List[str],
+    label: str,
+    cfg: RegressionConfig,
+    backend: str,
+    categorical: List[str],
+    use_cache: bool,
+    use_kernel: bool,
+) -> RegressionResult:
+    """Least squares with categorical features over the sparse cofactor
+    algebra: assemble the one-hot cofactor matrix from grouped aggregates
+    (never the one-hot data) and hand it to the same solvers."""
+    from .categorical import cat_cofactors_factorized, cat_cofactors_materialized
+
+    missing = set(categorical) - set(features)
+    if missing:
+        raise ValueError(
+            f"categorical attributes {sorted(missing)} not in features"
+        )
+    cont = [f for f in features if f not in categorical] + [label]
+
+    t0 = time.perf_counter()
+    if cfg.factorized:
+        if use_cache:
+            cof = store.cat_cofactors(vorder, cont, categorical, backend="numpy")
+        else:
+            cof = cat_cofactors_factorized(
+                store, vorder, cont, categorical, backend=backend
+            )
+    else:
+        cof = cat_cofactors_materialized(
+            store, cont, categorical, use_kernel=use_kernel
+        )
+    mat, names = cof.regression_matrix(label)
+    t1 = time.perf_counter()
+    if cfg.solver == "closed_form":
+        theta = solve_cofactor(mat, ridge=cfg.ridge)
+        iters = 0
+    else:
+        res: GDResult = bgd_cofactor(mat, cfg.gd())
+        theta, iters = res.theta, res.iterations
+    t2 = time.perf_counter()
+    return RegressionResult(
+        theta=theta,
+        theta_conv=theta,  # unscaled path: converged θ IS the final θ
+        factors=None,
+        iterations=iters,
+        seconds_scale=0.0,
+        seconds_cofactor=t1 - t0,
+        seconds_gd=t2 - t1,
+        config=cfg,
+        names=names,
     )

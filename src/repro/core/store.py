@@ -52,7 +52,7 @@ __all__ = ["Store"]
 
 @dataclasses.dataclass
 class _CacheEntry:
-    cofactors: "Cofactors"  # unscaled aggregates; treat as immutable
+    cofactors: object  # Cofactors | CatCofactors — unscaled; treat as immutable
     relations: frozenset  # relation names the entry's join covers
     version: int  # store version the entry is valid at
 
@@ -64,6 +64,10 @@ class Store:
     def __init__(self, relations: Optional[Sequence[Relation]] = None) -> None:
         self._relations: Dict[str, Relation] = {}
         self._cofactor_cache: Dict[tuple, _CacheEntry] = {}
+        # categorical entries live in their own cache: the key includes the
+        # categorical signature (cont tuple, cat tuple) and the delta
+        # maintenance runs the grouped engine instead of the plain one.
+        self._cat_cache: Dict[tuple, _CacheEntry] = {}
         # signature -> VariableOrder, kept so maintenance can re-run the engine
         self._vorders: Dict[tuple, "VariableOrder"] = {}
         # col -> (sum, max|x|, count) over the union of relations with col
@@ -80,8 +84,7 @@ class Store:
         self._relations[rel.name] = rel
         self.version += 1
         self._invalidate(rel.name)
-        for entry in self._cofactor_cache.values():  # survivors stay valid
-            entry.version = self.version
+        self._restamp()  # survivors stay valid
         for attr in set(rel.attributes) | set(old.attributes if old else ()):
             self._moments.pop(attr, None)
 
@@ -99,6 +102,22 @@ class Store:
 
     def total_rows(self) -> int:
         return sum(r.num_rows for r in self._relations.values())
+
+    def attr_domain(self, attr: str) -> int:
+        """Dictionary-domain size of a key attribute: the max declared
+        domain over all relations carrying it (``concat`` merges domains
+        with max, so this is stable under append)."""
+        doms = [
+            rel.domains[attr]
+            for rel in self._relations.values()
+            if attr in rel.domains
+        ]
+        if not doms:
+            raise ValueError(
+                f"attribute {attr!r} is not a dictionary-encoded key in any "
+                "relation"
+            )
+        return max(doms)
 
     # -- incremental updates ---------------------------------------------------
     def append(self, name: str, delta: Relation) -> Relation:
@@ -144,6 +163,32 @@ class Store:
                     entry.cofactors = entry.cofactors + delta_cof.project(
                         list(key[1])
                     )
+            # categorical entries: same union algebra, grouped engine, and
+            # the same delta-sharing scheme as above — one delta pass per
+            # (vorder, backend) over the union feature sets, entries derive
+            # via ``CatCofactors.project``.  The delta carries the delta's
+            # (possibly larger) domains; ``__add__`` zero-pads, so unseen
+            # category ids appended here grow the cached blocks in place.
+            cat_groups: Dict[tuple, List[tuple]] = {}
+            for key, entry in self._cat_cache.items():
+                if name in entry.relations:
+                    sig, cont, cat, backend = key
+                    cat_groups.setdefault((sig, backend), []).append(key)
+            for (sig, backend), keys in cat_groups.items():
+                cont_union = list(
+                    dict.fromkeys(f for k in keys for f in k[1])
+                )
+                cat_union = list(
+                    dict.fromkeys(c for k in keys for c in k[2])
+                )
+                delta_cof = self._delta_cat_cofactors(
+                    name, delta_named, sig, cont_union, cat_union, backend
+                )
+                for key in keys:
+                    entry = self._cat_cache[key]
+                    entry.cofactors = entry.cofactors + delta_cof.project(
+                        list(key[1]), list(key[2])
+                    )
             for attr, (s, mx, cnt) in list(self._moments.items()):
                 if attr not in delta_named.attributes:
                     continue
@@ -155,8 +200,7 @@ class Store:
                 )
         self._relations[name] = merged
         self.version += 1
-        for entry in self._cofactor_cache.values():
-            entry.version = self.version
+        self._restamp()
         return merged
 
     def column_moments(self, col: str) -> Tuple[float, float, int]:
@@ -201,6 +245,28 @@ class Store:
             delta_store, vorder, features, backend=backend
         ).cofactors()
 
+    def _delta_cat_cofactors(
+        self,
+        name: str,
+        delta: Relation,
+        vorder_sig: tuple,
+        cont: List[str],
+        cat: List[str],
+        backend: str,
+    ):
+        """Categorical delta term: grouped cofactors of the join with
+        relation ``name`` replaced by the delta rows."""
+        from .categorical import cat_cofactors_factorized
+
+        vorder = self._vorders[vorder_sig]
+        rels = [
+            delta if rn == name else self._relations[rn]
+            for rn in dict.fromkeys(vorder.relations())
+        ]
+        return cat_cofactors_factorized(
+            Store(rels), vorder, cont, cat, backend=backend
+        )
+
     # -- cofactor cache --------------------------------------------------------
     def cofactors(
         self,
@@ -236,17 +302,59 @@ class Store:
         )
         return cof
 
+    def cat_cofactors(
+        self,
+        vorder: "VariableOrder",
+        cont: Sequence[str],
+        cat: Sequence[str],
+        backend: str = "numpy",
+        refresh: bool = False,
+    ):
+        """Cached categorical cofactors over the factorized join — the
+        categorical twin of :meth:`cofactors`.  The cache key includes the
+        categorical signature (which attributes are declared categorical, in
+        order), so continuous and categorical entries over the same join
+        never alias, and ``append`` maintains both kinds incrementally.
+        Returns a ``repro.core.categorical.CatCofactors``; do not mutate."""
+        from .categorical import cat_cofactors_factorized
+
+        sig = vorder.signature()
+        key = (sig, tuple(cont), tuple(cat), backend)
+        entry = self._cat_cache.get(key)
+        if (
+            entry is not None
+            and not refresh
+            and entry.version == self.version
+        ):
+            return entry.cofactors
+        cof = cat_cofactors_factorized(
+            self, vorder, list(cont), list(cat), backend=backend
+        )
+        self._vorders[sig] = vorder
+        self._cat_cache[key] = _CacheEntry(
+            cofactors=cof,
+            relations=frozenset(vorder.relations()),
+            version=self.version,
+        )
+        return cof
+
     def cache_info(self) -> Dict[str, int]:
-        return {"entries": len(self._cofactor_cache), "version": self.version}
+        return {
+            "entries": len(self._cofactor_cache),
+            "cat_entries": len(self._cat_cache),
+            "version": self.version,
+        }
+
+    def _restamp(self) -> None:
+        for cache in (self._cofactor_cache, self._cat_cache):
+            for entry in cache.values():
+                entry.version = self.version
 
     def _invalidate(self, name: str) -> None:
-        stale = [
-            k
-            for k, e in self._cofactor_cache.items()
-            if name in e.relations
-        ]
-        for k in stale:
-            del self._cofactor_cache[k]
+        for cache in (self._cofactor_cache, self._cat_cache):
+            stale = [k for k, e in cache.items() if name in e.relations]
+            for k in stale:
+                del cache[k]
 
     # -- natural join (the noPre path) ----------------------------------------
     def materialize_join(

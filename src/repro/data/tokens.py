@@ -18,7 +18,7 @@ production input pipeline needs and this one honours:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

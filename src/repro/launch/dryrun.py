@@ -30,14 +30,14 @@ import json
 import re
 import time
 import traceback
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import sharding as shd
 from repro.configs import ARCHS, SHAPES, get_config, input_specs
-from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import RooflineTerms, collective_bytes, model_flops, total_collective_bytes
 from repro.models import model as model_lib
 from repro.train.train_step import TrainHParams, init_state, make_train_step

@@ -22,7 +22,6 @@ Softmax runs in fp32 regardless of activation dtype.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Tuple
 
 import jax

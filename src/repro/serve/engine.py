@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ error feedback) so convergence behaviour is testable off-mesh.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Sequence, Tuple
 
 import jax

@@ -23,7 +23,6 @@ import signal
 import time
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
-import jax
 import numpy as np
 
 from .checkpoint import Checkpointer

@@ -25,9 +25,8 @@ subprocess).
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,57 @@
+"""The benchmark runner must gate: any raising suite → non-zero exit."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import run as run_mod
+from benchmarks.run import run_suites
+
+
+@pytest.fixture(autouse=True)
+def isolated_results_dir(tmp_path, monkeypatch):
+    """Redirect summary.json away from benchmarks/results/ so test runs
+    never clobber real benchmark artifacts."""
+    monkeypatch.setattr(run_mod, "RESULTS_DIR", str(tmp_path))
+    return tmp_path
+
+
+def _ok(smoke=False):
+    pass
+
+
+def _boom(smoke=False):
+    raise RuntimeError("intentional benchmark failure")
+
+
+def test_all_green_exits_zero():
+    assert run_suites([("a", _ok), ("b", _ok)], smoke=True) == 0
+
+
+def test_any_failure_exits_nonzero(capsys):
+    code = run_suites([("good", _ok), ("bad", _boom)], smoke=True)
+    assert code == 1
+    out = capsys.readouterr().out
+    assert "bad: FAILED" in out
+    assert "1/2 suites ok" in out
+
+
+def test_failure_recorded_in_summary_artifact(isolated_results_dir):
+    run_suites([("bad", _boom)], smoke=True)
+    with open(os.path.join(isolated_results_dir, "summary.json")) as f:
+        summary = json.load(f)
+    assert summary["smoke"] is True
+    (suite,) = summary["suites"]
+    assert suite["status"] == "failed"
+    assert "intentional benchmark failure" in suite["error"]
+
+
+def test_smoke_flag_reaches_suites():
+    seen = {}
+
+    def probe(smoke=False):
+        seen["smoke"] = smoke
+
+    assert run_suites([("probe", probe)], smoke=True) == 0
+    assert seen["smoke"] is True

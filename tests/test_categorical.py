@@ -1,0 +1,301 @@
+"""Categorical cofactor algebra: sparse group-by blocks vs one-hot oracle."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    VERSIONS,
+    linear_regression,
+    solve_cofactor,
+)
+from repro.core.categorical import (
+    SparseCounts,
+    cat_cofactors_factorized,
+    cat_cofactors_from_arrays,
+    cat_cofactors_materialized,
+    onehot_design_matrix,
+)
+from repro.core.distributed import (
+    incremental_sharded_cat_cofactors,
+    sharded_cat_cofactors,
+)
+from repro.core.relation import Relation
+from repro.data.synthetic import favorita_like, figure1_schema
+
+CONT = ["transactions", "onpromotion", "unit_sales"]
+CAT = ["store_nbr", "item_nbr"]
+
+
+@pytest.fixture(scope="module")
+def favorita():
+    return favorita_like(n_dates=8, n_stores=4, n_items=6, seed=3)
+
+
+def _oracle_matrix(bundle, cont, cat):
+    joined = bundle.store.materialize_join()
+    doms = {c: bundle.store.attr_domain(c) for c in cat}
+    x, names = onehot_design_matrix(joined, cont, cat, doms)
+    z = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
+    return z.T @ z, ["intercept"] + names
+
+
+def test_factorized_matches_onehot_oracle(favorita):
+    cof = cat_cofactors_factorized(favorita.store, favorita.vorder, CONT, CAT)
+    oracle, names = _oracle_matrix(favorita, CONT, CAT)
+    np.testing.assert_allclose(cof.matrix(), oracle, rtol=1e-10, atol=1e-10)
+    assert cof.column_names() == names
+    # sparse representation is strictly smaller than the dense matrix
+    assert cof.nnz() < cof.num_params**2
+
+
+def test_materialized_and_kernel_paths_match(favorita):
+    host = cat_cofactors_materialized(favorita.store, CONT, CAT)
+    kern = cat_cofactors_materialized(
+        favorita.store, CONT, CAT, use_kernel=True
+    )
+    oracle, _ = _oracle_matrix(favorita, CONT, CAT)
+    np.testing.assert_allclose(host.matrix(), oracle, rtol=1e-10, atol=1e-10)
+    # kernel path accumulates fp32
+    np.testing.assert_allclose(kern.matrix(), oracle, rtol=1e-4, atol=1e-2)
+
+
+def test_figure1_single_categorical():
+    b = figure1_schema()
+    cof = cat_cofactors_factorized(
+        b.store, b.vorder, ["Inventory", "Sale"], ["L"]
+    )
+    oracle, _ = _oracle_matrix(b, ["Inventory", "Sale"], ["L"])
+    np.testing.assert_allclose(cof.matrix(), oracle, rtol=1e-10, atol=1e-10)
+
+
+def test_union_commutativity_with_domain_growth(favorita):
+    """__add__ pads smaller domains — an append introducing unseen category
+    ids must extend the blocks without disturbing existing entries."""
+    joined = favorita.store.materialize_join()
+    x = np.stack([joined.column(f).astype(float) for f in CONT], axis=1)
+    ids = np.stack([joined.column(c).astype(np.int64) for c in CAT], axis=1)
+    doms = {c: favorita.store.attr_domain(c) for c in CAT}
+    half = x.shape[0] // 2
+    small = {c: int(ids[:half, i].max()) + 1 for i, c in enumerate(CAT)}
+    a = cat_cofactors_from_arrays(x[:half], ids[:half], CONT, CAT, small)
+    b = cat_cofactors_from_arrays(x[half:], ids[half:], CONT, CAT, doms)
+    whole = cat_cofactors_from_arrays(x, ids, CONT, CAT, doms)
+    np.testing.assert_allclose(
+        (a + b).matrix(), whole.matrix(), rtol=1e-12, atol=1e-12
+    )
+
+
+def test_sparse_counts_coalesce():
+    coo = SparseCounts(
+        np.array([0, 1, 0]), np.array([2, 0, 2]), np.array([1.0, 2.0, 3.0]),
+        (2, 3),
+    )
+    total = coo + coo
+    dense = total.to_dense()
+    assert dense[0, 2] == 8.0 and dense[1, 0] == 4.0
+    assert total.nnz == 2  # duplicates coalesced
+
+
+def test_store_cat_cache_maintained_under_append(favorita):
+    b = favorita_like(n_dates=8, n_stores=4, n_items=6, seed=3)
+    cached = b.store.cat_cofactors(b.vorder, CONT, CAT)
+    info = b.store.cache_info()
+    assert info["cat_entries"] == 1
+    rng = np.random.default_rng(0)
+    n = 40
+    delta = Relation.from_columns(
+        "d",
+        {
+            "date": rng.integers(0, 8, n).astype(np.int32),
+            "store_nbr": rng.integers(0, 4, n).astype(np.int32),
+            "item_nbr": rng.integers(0, 6, n).astype(np.int32),
+        },
+        {
+            "unit_sales": rng.normal(10, 2, n),
+            "onpromotion": rng.integers(0, 2, n).astype(np.float64),
+        },
+    )
+    b.store.append("SalesF", delta)
+    maintained = b.store.cat_cofactors(b.vorder, CONT, CAT)
+    fresh = b.store.cat_cofactors(b.vorder, CONT, CAT, refresh=True)
+    np.testing.assert_allclose(
+        maintained.matrix(), fresh.matrix(), rtol=1e-9, atol=1e-9
+    )
+    assert maintained.count == cached.count + n
+
+
+def test_store_cat_cache_shared_delta_across_entries():
+    """Multiple categorical entries over the same (vorder, backend) share
+    one delta factorization — including entries whose cat order reverses a
+    stored pair (exercises the project() transpose)."""
+    b = favorita_like(n_dates=8, n_stores=4, n_items=6, seed=3)
+    b.store.cat_cofactors(b.vorder, CONT, ["store_nbr", "item_nbr"])
+    b.store.cat_cofactors(b.vorder, CONT[:2], ["item_nbr", "store_nbr"])
+    b.store.cat_cofactors(b.vorder, ["unit_sales"], ["item_nbr"])
+    assert b.store.cache_info()["cat_entries"] == 3
+    rng = np.random.default_rng(5)
+    n = 30
+    delta = Relation.from_columns(
+        "d",
+        {
+            "date": rng.integers(0, 8, n).astype(np.int32),
+            "store_nbr": rng.integers(0, 4, n).astype(np.int32),
+            "item_nbr": rng.integers(0, 6, n).astype(np.int32),
+        },
+        {
+            "unit_sales": rng.normal(10, 2, n),
+            "onpromotion": rng.integers(0, 2, n).astype(np.float64),
+        },
+    )
+    b.store.append("SalesF", delta)
+    for cont, cat in [
+        (CONT, ["store_nbr", "item_nbr"]),
+        (CONT[:2], ["item_nbr", "store_nbr"]),
+        (["unit_sales"], ["item_nbr"]),
+    ]:
+        maintained = b.store.cat_cofactors(b.vorder, cont, cat)
+        fresh = b.store.cat_cofactors(b.vorder, cont, cat, refresh=True)
+        np.testing.assert_allclose(
+            maintained.matrix(), fresh.matrix(), rtol=1e-9, atol=1e-9
+        )
+
+
+def test_store_cat_cache_invalidated_by_put(favorita):
+    b = favorita_like(n_dates=6, n_stores=3, n_items=4, seed=1)
+    b.store.cat_cofactors(b.vorder, CONT, CAT)
+    assert b.store.cache_info()["cat_entries"] == 1
+    b.store.put(b.store.get("SalesF"))  # arbitrary replacement
+    assert b.store.cache_info()["cat_entries"] == 0
+
+
+def test_linear_regression_categorical_matches_dense(favorita):
+    feats = ["transactions", "store_nbr", "item_nbr"]
+    res = linear_regression(
+        favorita.store, favorita.vorder, feats, "unit_sales",
+        config=VERSIONS["closed"], categorical=CAT, backend="numpy",
+    )
+    joined = favorita.store.materialize_join()
+    doms = {c: favorita.store.attr_domain(c) for c in CAT}
+    x, _ = onehot_design_matrix(joined, ["transactions"], CAT, doms)
+    y = joined.column("unit_sales").astype(np.float64)
+    z = np.concatenate([np.ones((x.shape[0], 1)), x, y[:, None]], axis=1)
+    theta = solve_cofactor(z.T @ z, ridge=res.config.ridge)
+    np.testing.assert_allclose(res.theta, theta, rtol=1e-8, atol=1e-8)
+    assert res.names[-1] == "unit_sales"
+    # warm path off the store cache agrees
+    res2 = linear_regression(
+        favorita.store, favorita.vorder, feats, "unit_sales",
+        config=VERSIONS["closed"], categorical=CAT, use_cache=True,
+    )
+    np.testing.assert_allclose(res2.theta, res.theta, rtol=1e-9)
+
+
+def test_sharded_cat_cofactors_match_host(favorita):
+    joined = favorita.store.materialize_join()
+    cont = ["transactions", "unit_sales"]
+    x = np.stack([joined.column(f).astype(float) for f in cont], axis=1)
+    ids = np.stack([joined.column(c).astype(np.int64) for c in CAT], axis=1)
+    doms = {c: favorita.store.attr_domain(c) for c in CAT}
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = sharded_cat_cofactors(x, ids, cont, CAT, doms, mesh)
+    host = cat_cofactors_from_arrays(x, ids, cont, CAT, doms)
+    np.testing.assert_allclose(sh.matrix(), host.matrix(), rtol=1e-4, atol=1e-2)
+    # incremental fold reproduces the whole
+    half = x.shape[0] // 2
+    base = cat_cofactors_from_arrays(x[:half], ids[:half], cont, CAT, doms)
+    inc = incremental_sharded_cat_cofactors(base, x[half:], ids[half:])
+    np.testing.assert_allclose(inc.matrix(), host.matrix(), rtol=1e-9)
+    # empty delta is a no-op
+    same = incremental_sharded_cat_cofactors(
+        inc, np.zeros((0, 2)), np.zeros((0, 2), dtype=np.int64)
+    )
+    assert same is inc
+
+
+def test_incremental_fold_grows_domains(favorita):
+    """A delta carrying category ids beyond the base domains must extend
+    the blocks (zero-padded), not crash or silently drop rows."""
+    joined = favorita.store.materialize_join()
+    cont = ["transactions", "unit_sales"]
+    x = np.stack([joined.column(f).astype(float) for f in cont], axis=1)
+    ids = np.stack([joined.column(c).astype(np.int64) for c in CAT], axis=1)
+    doms = {c: favorita.store.attr_domain(c) for c in CAT}
+    base = cat_cofactors_from_arrays(x, ids, cont, CAT, doms)
+    x_new = np.array([[100.0, 9.0], [200.0, 8.0]])
+    ids_new = np.array(
+        [[doms[CAT[0]] + 1, 0], [0, doms[CAT[1]]]], dtype=np.int64
+    )
+    grown = incremental_sharded_cat_cofactors(base, x_new, ids_new)
+    big = {
+        CAT[0]: doms[CAT[0]] + 2,
+        CAT[1]: doms[CAT[1]] + 1,
+    }
+    whole = cat_cofactors_from_arrays(
+        np.concatenate([x, x_new]), np.concatenate([ids, ids_new]),
+        cont, CAT, big,
+    )
+    assert grown.domains == big
+    np.testing.assert_allclose(
+        grown.matrix(), whole.matrix(), rtol=1e-12, atol=1e-12
+    )
+    # too-small domains fail loudly on both explicit paths
+    with pytest.raises(ValueError, match="outside domain"):
+        cat_cofactors_from_arrays(x_new, ids_new, cont, CAT, doms)
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="outside domain"):
+        sharded_cat_cofactors(x_new, ids_new, cont, CAT, doms, mesh)
+    # negative ids (the sharded path's internal padding sentinel) must be
+    # rejected too: np.add.at would wrap them into the LAST category
+    ids_neg = np.array([[-1, 0]], dtype=np.int64)
+    with pytest.raises(ValueError, match="outside domain"):
+        cat_cofactors_from_arrays(x_new[:1], ids_neg, cont, CAT, doms)
+    with pytest.raises(ValueError, match="outside domain"):
+        sharded_cat_cofactors(x_new[:1], ids_neg, cont, CAT, doms, mesh)
+
+
+def test_grouped_view_sums_to_global(favorita):
+    from repro.core import cofactors_factorized, grouped_cofactors_factorized
+
+    cols = ["transactions", "unit_sales"]
+    g = grouped_cofactors_factorized(
+        favorita.store, favorita.vorder, cols, ["store_nbr"], backend="numpy"
+    )
+    tot = cofactors_factorized(
+        favorita.store, favorita.vorder, cols, backend="numpy"
+    )
+    np.testing.assert_allclose(g.count.sum(), tot.count)
+    np.testing.assert_allclose(g.lin.sum(0), tot.lin, rtol=1e-10)
+    np.testing.assert_allclose(g.quad.sum(0), tot.quad, rtol=1e-10)
+
+
+def test_random_schemas_sparse_equals_onehot():
+    """Deterministic mirror of the hypothesis property in test_property.py
+    (which needs the optional hypothesis dependency): sparse categorical
+    cofactors == one-hot Gram on random acyclic snowflakes."""
+    from repro.data.synthetic import random_acyclic_schema
+
+    for seed in range(10):
+        b = random_acyclic_schema(seed, n_branches=(seed % 3) + 1)
+        cat = ["k0"] + [f"k{i + 1}" for i in range(len(b.features) // 2)]
+        cont = b.features + [b.label]
+        sparse = cat_cofactors_factorized(
+            b.store, b.vorder, cont, cat, backend="numpy"
+        )
+        joined = b.store.materialize_join()
+        doms = {c: b.store.attr_domain(c) for c in cat}
+        x, _ = onehot_design_matrix(joined, cont, cat, doms)
+        z = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
+        np.testing.assert_allclose(
+            sparse.matrix(), z.T @ z, rtol=1e-9, atol=1e-9
+        )
+
+
+def test_group_by_feature_overlap_rejected(favorita):
+    from repro.core import FactorizedEngine
+
+    with pytest.raises(ValueError, match="both a feature and"):
+        FactorizedEngine(
+            favorita.store, favorita.vorder, ["store_nbr"],
+            group_by=["store_nbr"],
+        )

@@ -26,6 +26,10 @@ from repro.core import (
     cofactors_materialized,
     design_matrix,
 )
+from repro.core.categorical import (
+    cat_cofactors_factorized,
+    onehot_design_matrix,
+)
 from repro.core.polynomial import polynomial_cofactors
 from repro.data.synthetic import random_acyclic_schema
 from repro.data.tokens import TokenPipeline
@@ -102,6 +106,29 @@ def test_projection_commutativity_random(bundle):
     np.testing.assert_allclose(
         sub.matrix(), direct.matrix(), rtol=5e-4, atol=1e-3
     )
+
+
+@SET
+@given(bundle=schema_params)
+def test_categorical_sparse_equals_onehot_oracle(bundle):
+    """The sparse categorical cofactor matrix — assembled from grouped
+    aggregates, never from one-hot columns — equals the Gram of the dense
+    one-hot design matrix on ANY random acyclic join.  The join keys (k0
+    and the branch keys) double as the categorical features; the value
+    columns stay continuous."""
+    cat = ["k0"] + [f"k{i + 1}" for i in range(len(bundle.features) // 2)]
+    cont = bundle.features + [bundle.label]
+    sparse = cat_cofactors_factorized(
+        bundle.store, bundle.vorder, cont, cat, backend="numpy"
+    )
+    joined = bundle.store.materialize_join()
+    doms = {c: bundle.store.attr_domain(c) for c in cat}
+    x, names = onehot_design_matrix(joined, cont, cat, doms)
+    z = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
+    np.testing.assert_allclose(
+        sparse.matrix(), z.T @ z, rtol=1e-9, atol=1e-9
+    )
+    assert sparse.column_names() == ["intercept"] + names
 
 
 @SET
