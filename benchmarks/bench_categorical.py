@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import solve_cofactor
 from repro.core.categorical import (
     cat_cofactors_factorized,
+    cat_cofactors_per_pass,
     onehot_design_matrix,
 )
 from repro.core.glm import (
@@ -30,7 +31,7 @@ from repro.core.glm import (
     fit_glm,
     fit_glm_onehot,
 )
-from repro.data.synthetic import favorita_like
+from repro.data.synthetic import favorita_like, many_cat_schema
 
 from .common import emit, timeit
 
@@ -116,11 +117,75 @@ def run(n_categories=(16, 64, 128, 256), n_dates: int = 48,
     return rows
 
 
+def run_sweep(
+    n_cats=(2, 4, 8, 16),
+    domain: int = 24,
+    n_rows: int = 3000,
+    repeats: int = 3,
+) -> list:
+    """Sweep the NUMBER of categorical attributes: fused single-pass plan
+    vs the per-pass baseline (one traversal per attribute + pair).
+
+    The per-pass path runs 1 + n + n(n−1)/2 full engine traversals; the
+    fused plan runs exactly one, sharing the join descent and the
+    per-node view cache across the whole batch, so its time should stay
+    roughly flat in |cat| while the baseline grows quadratically.
+    Acceptance target: ≥ 2x at |cat| = 8.
+    """
+    rows = []
+    for n in n_cats:
+        bundle = many_cat_schema(
+            n_cat=n, domain=domain, n_rows=n_rows, seed=11
+        )
+        store, vorder = bundle.store, bundle.vorder
+        cat = [f"c{i}" for i in range(n)]
+        cont = ["x", "y"]
+
+        t_fused = timeit(
+            lambda: cat_cofactors_factorized(store, vorder, cont, cat),
+            repeats=repeats,
+        )
+        t_pp = timeit(
+            lambda: cat_cofactors_per_pass(store, vorder, cont, cat),
+            repeats=repeats,
+        )
+        stats = {}
+        fused = cat_cofactors_factorized(store, vorder, cont, cat,
+                                         stats=stats)
+        per_pass = cat_cofactors_per_pass(store, vorder, cont, cat)
+        np.testing.assert_allclose(  # the fused plan changes nothing
+            fused.matrix(), per_pass.matrix(), rtol=1e-12, atol=1e-12
+        )
+        assert stats["passes"] == 1, stats
+        rows.append(
+            {
+                "n_cat": n,
+                "params": fused.num_params,
+                "passes_fused": stats["passes"],
+                "node_visits_fused": stats["node_visits"],
+                "passes_per_pass": 1 + n + n * (n - 1) // 2,
+                "fused_s": t_fused,
+                "per_pass_s": t_pp,
+                "speedup_vs_per_pass": t_pp / max(t_fused, 1e-9),
+            }
+        )
+    emit("categorical_fused_sweep", rows)
+    at8 = [r for r in rows if r["n_cat"] == 8]
+    if at8:
+        print(
+            f"-- fused single-pass vs per-pass at |cat| = 8: "
+            f"{at8[0]['speedup_vs_per_pass']:.2f}x (target >= 2)"
+        )
+    return rows
+
+
 def main(smoke: bool = False) -> None:
     if smoke:
         run(n_categories=(8, 32), n_dates=12, n_stores=4, repeats=1)
+        run_sweep(n_cats=(2, 4), domain=8, n_rows=400, repeats=1)
     else:
         run()
+        run_sweep()
 
 
 if __name__ == "__main__":

@@ -17,15 +17,13 @@ point of maintaining cofactors close to the data.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import VERSIONS, RegressionConfig, linear_regression
 from repro.core.relation import Relation
 from repro.data.synthetic import favorita_like
 
-from .common import emit
+from .common import emit, stopwatch
 
 
 def _delta(rng, n_rows, n_dates, n_stores, n_items):
@@ -71,29 +69,30 @@ def run(
     for batch in range(n_batches):
         delta = _delta(rng, delta_rows, n_dates, n_stores, n_items)
 
-        t0 = time.perf_counter()
-        bundle.store.append("SalesF", delta)  # pays delta maintenance
-        res_inc = linear_regression(
-            bundle.store, bundle.vorder, bundle.features, bundle.label,
-            use_cache=True, **kw,
-        )
-        t_inc = time.perf_counter() - t0
+        with stopwatch() as sw_inc:
+            bundle.store.append("SalesF", delta)  # pays delta maintenance
+            res_inc = linear_regression(
+                bundle.store, bundle.vorder, bundle.features, bundle.label,
+                use_cache=True, **kw,
+            )
 
-        t0 = time.perf_counter()
-        res_fact = linear_regression(
-            bundle.store, bundle.vorder, bundle.features, bundle.label, **kw
-        )
-        t_fact = time.perf_counter() - t0
+        with stopwatch() as sw_fact:
+            res_fact = linear_regression(
+                bundle.store, bundle.vorder, bundle.features, bundle.label,
+                **kw,
+            )
 
-        t0 = time.perf_counter()
-        res_nopre = linear_regression(
-            bundle.store, None, bundle.features, bundle.label,
-            config=RegressionConfig(
-                name="noPre closed", factorized=False, solver="closed_form",
-                theta0_mode="exact",
-            ),
+        with stopwatch() as sw_nopre:
+            res_nopre = linear_regression(
+                bundle.store, None, bundle.features, bundle.label,
+                config=RegressionConfig(
+                    name="noPre closed", factorized=False,
+                    solver="closed_form", theta0_mode="exact",
+                ),
+            )
+        t_inc, t_fact, t_nopre = (
+            sw_inc.seconds, sw_fact.seconds, sw_nopre.seconds
         )
-        t_nopre = time.perf_counter() - t0
 
         np.testing.assert_allclose(  # maintained path stays correct
             res_inc.theta, res_fact.theta, rtol=1e-6, atol=1e-6

@@ -1,4 +1,11 @@
-"""Shared benchmark utilities: timing, CSV emission, result directory."""
+"""Shared benchmark utilities: timing, CSV emission, result directory.
+
+Every suite's timing/emission scaffolding lives here — ``timeit`` for
+median-of-repeats micro timings, ``stopwatch`` for one-shot phase timings
+(the manual ``t0 = perf_counter(); ...; dt = perf_counter() - t0`` pattern
+that used to be copy-pasted across suites), ``emit`` for the CSV print +
+JSON artifact every suite produces.
+"""
 
 from __future__ import annotations
 
@@ -16,11 +23,33 @@ def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
         fn()
     times = []
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
+        with stopwatch() as sw:
+            fn()
+        times.append(sw.seconds)
     times.sort()
     return times[len(times) // 2]
+
+
+class stopwatch:
+    """One-shot wall-clock context manager:
+
+        with stopwatch() as sw:
+            work()
+        rows.append({"work_s": sw.seconds})
+
+    ``seconds`` is set on exit — including an exception exit, so a failing
+    suite still reports how long it ran.
+    """
+
+    seconds: float = float("nan")
+
+    def __enter__(self) -> "stopwatch":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.seconds = time.perf_counter() - self._t0
+        return False
 
 
 def emit(name: str, rows: List[Dict]) -> None:

@@ -1,0 +1,171 @@
+"""Benchmark regression detector: diff a results directory against a baseline.
+
+``python -m benchmarks.compare --baseline DIR --new DIR [--threshold 0.5]``
+
+Compares two benchmark artifact directories (each as produced by
+``benchmarks.run``: per-suite ``*.json`` row dumps plus ``summary.json``):
+
+* a suite that was ``ok`` in the baseline but ``failed`` in the new run is
+  always a regression;
+* every numeric field ending in ``_s`` (wall seconds) in a per-suite row is
+  a regression when  ``new > base * (1 + threshold) + slack``  — the
+  relative threshold absorbs shared-runner noise, the absolute ``slack``
+  keeps micro-timings (sub-ms rows where 2x is measurement jitter) quiet;
+* fields ending in ``_speedup`` / ``speedup_vs_*`` regress when the new
+  value drops below ``base / (1 + threshold)`` (they are
+  bigger-is-better).
+
+Exit code 1 on any regression, 0 otherwise.  A missing/empty baseline
+directory exits 0 with a notice — the first nightly run has nothing to
+compare against.  The nightly workflow downloads the previous successful
+run's artifact as the baseline and gates on this script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+DEFAULT_THRESHOLD = 0.5
+DEFAULT_SLACK_S = 0.05
+
+
+def _is_time_field(name: str) -> bool:
+    return name.endswith("_s")
+
+
+def _is_speedup_field(name: str) -> bool:
+    return name.endswith("_speedup") or "speedup_vs_" in name
+
+
+def _row_key(row: Dict, idx: int) -> str:
+    """Stable label for a row: its first non-float fields, else its index."""
+    parts = [
+        f"{k}={row[k]}"
+        for k in row
+        if isinstance(row[k], (int, str)) and not isinstance(row[k], bool)
+    ][:3]
+    return ",".join(parts) if parts else f"row{idx}"
+
+
+def compare_suite_rows(
+    name: str,
+    base_rows: List[Dict],
+    new_rows: List[Dict],
+    threshold: float,
+    slack: float,
+) -> List[str]:
+    """Regressions between two row lists (matched positionally — suites
+    emit a fixed sweep order)."""
+    out = []
+    for idx, (b, n) in enumerate(zip(base_rows, new_rows)):
+        label = _row_key(n, idx)
+        for field, bv in b.items():
+            nv = n.get(field)
+            if not isinstance(bv, (int, float)) or isinstance(bv, bool):
+                continue
+            if not isinstance(nv, (int, float)) or isinstance(nv, bool):
+                continue
+            if _is_time_field(field):
+                if nv > bv * (1.0 + threshold) + slack:
+                    out.append(
+                        f"{name}[{label}].{field}: {bv:.4g}s -> {nv:.4g}s "
+                        f"(+{(nv / max(bv, 1e-12) - 1) * 100:.0f}%)"
+                    )
+            elif _is_speedup_field(field):
+                if nv < bv / (1.0 + threshold) and bv - nv > 1e-9:
+                    out.append(
+                        f"{name}[{label}].{field}: {bv:.3g}x -> {nv:.3g}x"
+                    )
+    return out
+
+
+def compare_dirs(
+    baseline: str,
+    new: str,
+    threshold: float = DEFAULT_THRESHOLD,
+    slack: float = DEFAULT_SLACK_S,
+) -> int:
+    """Compare two artifact dirs; print a report; return the exit code."""
+    base_summary = os.path.join(baseline, "summary.json")
+    if not os.path.isfile(base_summary):
+        print(
+            f"[compare] no baseline summary at {base_summary} — "
+            "nothing to compare (first run?)"
+        )
+        return 0
+    new_summary = os.path.join(new, "summary.json")
+    if not os.path.isfile(new_summary):
+        print(f"[compare] new run has no summary at {new_summary}")
+        return 1
+    with open(base_summary) as f:
+        base = json.load(f)
+    with open(new_summary) as f:
+        cur = json.load(f)
+
+    regressions: List[str] = []
+    base_status = {s["suite"]: s["status"] for s in base.get("suites", [])}
+    for s in cur.get("suites", []):
+        if base_status.get(s["suite"]) == "ok" and s["status"] != "ok":
+            regressions.append(
+                f"suite {s['suite']!r}: ok in baseline, "
+                f"{s['status']} in new run"
+            )
+
+    compared = 0
+    for path in sorted(glob.glob(os.path.join(new, "*.json"))):
+        fname = os.path.basename(path)
+        if fname == "summary.json":
+            continue
+        bpath = os.path.join(baseline, fname)
+        if not os.path.isfile(bpath):
+            print(f"[compare] {fname}: new suite, no baseline — skipped")
+            continue
+        with open(bpath) as f:
+            base_rows = json.load(f)
+        with open(path) as f:
+            new_rows = json.load(f)
+        if not (isinstance(base_rows, list) and isinstance(new_rows, list)):
+            continue
+        compared += 1
+        regressions.extend(
+            compare_suite_rows(
+                fname[: -len(".json")], base_rows, new_rows, threshold, slack
+            )
+        )
+
+    if regressions:
+        print(
+            f"[compare] {len(regressions)} regression(s) vs baseline "
+            f"(threshold +{threshold * 100:.0f}%, slack {slack}s):"
+        )
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print(
+        f"[compare] no regressions across {compared} suite file(s) "
+        f"(threshold +{threshold * 100:.0f}%)"
+    )
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--baseline", required=True,
+                        help="baseline results directory (previous artifact)")
+    parser.add_argument("--new", required=True,
+                        help="fresh results directory to gate")
+    parser.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                        help="relative slowdown tolerated before failing")
+    parser.add_argument("--slack", type=float, default=DEFAULT_SLACK_S,
+                        help="absolute seconds ignored on top of threshold")
+    args = parser.parse_args(argv)
+    return compare_dirs(args.baseline, args.new, args.threshold, args.slack)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

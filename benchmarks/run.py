@@ -26,10 +26,9 @@ import argparse
 import json
 import os
 import sys
-import time
 import traceback
 
-from .common import RESULTS_DIR
+from .common import RESULTS_DIR, stopwatch
 
 
 def default_suites():
@@ -64,22 +63,22 @@ def run_suites(suites, smoke: bool = False) -> int:
     full traceback, recorded in summary.json, and turned into exit code 1."""
     summary = []
     for name, fn in suites:
-        t0 = time.perf_counter()
         print(f"\n#### {name}")
         try:
-            fn(smoke=smoke)
-            dt = time.perf_counter() - t0
-            print(f"#### {name}: ok ({dt:.1f}s)")
-            summary.append({"suite": name, "status": "ok", "seconds": dt})
+            with stopwatch() as sw:
+                fn(smoke=smoke)
+            print(f"#### {name}: ok ({sw.seconds:.1f}s)")
+            summary.append(
+                {"suite": name, "status": "ok", "seconds": sw.seconds}
+            )
         except Exception:
-            dt = time.perf_counter() - t0
             traceback.print_exc()
-            print(f"#### {name}: FAILED ({dt:.1f}s)")
+            print(f"#### {name}: FAILED ({sw.seconds:.1f}s)")
             summary.append(
                 {
                     "suite": name,
                     "status": "failed",
-                    "seconds": dt,
+                    "seconds": sw.seconds,
                     "error": traceback.format_exc(limit=20),
                 }
             )

@@ -21,6 +21,7 @@ from .categorical import (
     cat_cofactors_factorized,
     cat_cofactors_from_arrays,
     cat_cofactors_materialized,
+    cat_cofactors_per_pass,
     onehot_design_matrix,
 )
 from .cofactor import (
@@ -34,7 +35,13 @@ from .cofactor import (
     design_matrix,
     iter_design_chunks,
 )
-from .factorize import FactorizedEngine, GroupedView, grouped_cofactors_factorized
+from .factorize import (
+    AggregateBlock,
+    AggregateQuery,
+    FactorizedEngine,
+    GroupedView,
+    grouped_cofactors_factorized,
+)
 from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
 from .glm import (
     CompressedDesign,
@@ -68,6 +75,8 @@ from .variable_order import (
 )
 
 __all__ = [
+    "AggregateBlock",
+    "AggregateQuery",
     "CatCofactors",
     "Cofactors",
     "CompressedDesign",
@@ -92,6 +101,7 @@ __all__ = [
     "cat_cofactors_factorized",
     "cat_cofactors_from_arrays",
     "cat_cofactors_materialized",
+    "cat_cofactors_per_pass",
     "cofactors_factorized",
     "compressed_design_factorized",
     "compressed_design_materialized",

@@ -15,14 +15,22 @@ grouped arrays plus a sparse co-occurrence tensor, **without ever
 materializing the [m, Σ D_c] one-hot design matrix**.  Nonzeros of the c×d
 block are bounded by the join size (and usually far below D_c·D_d).
 
-Three computation paths, mirroring ``cofactor.py``'s engine matrix:
+Four computation paths, mirroring ``cofactor.py``'s engine matrix:
 
-* ``cat_cofactors_factorized``   — one factorized GROUP BY pass per block
-  family via ``FactorizedEngine(group_by=...)``; O(factorization), the flat
-  join never materializes.
+* ``cat_cofactors_factorized``   — ONE fused multi-output engine pass: the
+  ungrouped Gram block, every GROUP BY c vector and every GROUP BY (c, d)
+  co-occurrence ride a single traversal of the variable order
+  (``FactorizedEngine.run_batch``), sharing the join descent and the
+  per-node view cache AC/DC-style; O(factorization), the flat join never
+  materializes, and cofactor time is roughly flat in |cat|.
+* ``cat_cofactors_per_pass``     — the pre-fusion baseline: one grouped
+  engine traversal per categorical attribute plus one per pair
+  (O(1 + |cat| + |cat|²) passes).  Kept as the benchmark baseline and the
+  equivalence oracle for the fused plan.
 * ``cat_cofactors_materialized`` — flat join, then grouped Gram blocks via
-  the Pallas ``segment_gram`` kernel (``use_kernel=True``) or fp64 host
-  scatters; the "noPre-but-not-one-hot" middle path.
+  the Pallas ``segment_gram`` kernel (``use_kernel=True``, one fused
+  multi-segment pass over all categorical columns) or fp64 host scatters;
+  the "noPre-but-not-one-hot" middle path.
 * ``onehot_design_matrix`` + ``cofactors_from_matrix`` — the fully dense
   one-hot baseline, used as the oracle in tests and the slow side of
   ``benchmarks/bench_categorical.py``.
@@ -40,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .factorize import FactorizedEngine
+from .factorize import AggregateQuery, FactorizedEngine
 from .relation import Relation
 from .store import Store
 from .variable_order import VariableOrder
@@ -51,6 +59,7 @@ __all__ = [
     "cat_cofactors_factorized",
     "cat_cofactors_from_arrays",
     "cat_cofactors_materialized",
+    "cat_cofactors_per_pass",
     "onehot_design_matrix",
 ]
 
@@ -297,6 +306,21 @@ def _store_domains(store: Store, cat: Sequence[str]) -> Dict[str, int]:
     return {c: store.attr_domain(c) for c in cat}
 
 
+def _checked_ids(g, attr: str, dom: int) -> np.ndarray:
+    """Group ids of ``attr`` with the same loud out-of-domain rejection as
+    the from-arrays/sharded paths — np.add.at would wrap negatives into the
+    LAST category."""
+    ids = g.ids(attr)
+    if len(ids):
+        lo, hi = int(ids.min()), int(ids.max())
+        if lo < 0 or hi >= dom:
+            raise ValueError(
+                f"category ids of {attr!r} span [{lo}, {hi}], outside "
+                f"domain [0, {dom})"
+            )
+    return ids
+
+
 def cat_cofactors_factorized(
     store: Store,
     vorder: VariableOrder,
@@ -304,35 +328,101 @@ def cat_cofactors_factorized(
     cat: Sequence[str],
     backend: str = "numpy",
     domains: Optional[Dict[str, int]] = None,
+    stats: Optional[Dict[str, int]] = None,
 ) -> CatCofactors:
-    """Categorical cofactors over the **factorized** join.
+    """Categorical cofactors over the **factorized** join — ONE fused pass.
 
-    One ungrouped engine pass yields the continuous block; one GROUP BY c
-    pass per categorical attribute yields its counts and continuous sums;
-    one GROUP BY (c, d) pass per pair yields the sparse co-occurrence
-    counts.  Every pass is O(factorization size) — the flat join and the
-    one-hot matrix never exist.  ``domains`` overrides the store-derived
-    domain sizes (used by the incremental delta path, where the delta
-    relation may not cover the full dictionary).
+    The whole cofactor batch — the ungrouped continuous Gram block, one
+    GROUP BY c count/Σx query per categorical attribute (degree 1: no
+    per-group quad tensors), and one GROUP BY (c, d) count query per pair
+    (degree 0: counts only) — is issued as a single multi-output plan, so
+    the engine traverses the variable order exactly once and every subtree
+    below the referenced attributes is evaluated once and shared across
+    outputs.  O(factorization size); the flat join and the one-hot matrix
+    never exist; cofactor time is roughly flat in |cat| instead of
+    quadratic.  ``domains`` overrides the store-derived domain sizes (used
+    by the incremental delta path, where the delta relation may not cover
+    the full dictionary).  ``stats``, when given, receives the engine's
+    ``passes``/``node_visits`` counters — the audit trail of the
+    single-pass claim.
     """
     cont = list(cont)
     cat = list(cat)
     k = len(cont)
     doms = dict(domains) if domains is not None else _store_domains(store, cat)
-    base = FactorizedEngine(store, vorder, cont, backend=backend).cofactors()
+    engine = FactorizedEngine(store, vorder, cont, backend=backend)
+    queries = [AggregateQuery("base", (), 2)]
+    queries += [AggregateQuery(f"g:{c}", (c,), 1) for c in cat]
+    pairs = [
+        (cat[i], cat[j])
+        for i in range(len(cat))
+        for j in range(i + 1, len(cat))
+    ]
+    queries += [AggregateQuery(f"p:{c}|{d_}", (c, d_), 0) for c, d_ in pairs]
+    out = engine.run_batch(queries)
+    if stats is not None:
+        stats["passes"] = engine.passes
+        stats["node_visits"] = engine.node_visits
 
-    def _checked_ids(g, attr: str) -> np.ndarray:
-        ids = g.ids(attr)
-        if len(ids):
-            lo, hi = int(ids.min()), int(ids.max())
-            if lo < 0 or hi >= doms[attr]:
-                # same loud rejection as the from-arrays/sharded paths —
-                # np.add.at would wrap negatives into the LAST category
-                raise ValueError(
-                    f"category ids of {attr!r} span [{lo}, {hi}], outside "
-                    f"domain [0, {doms[attr]})"
-                )
-        return ids
+    base = out["base"]
+    perm = [base.features.index(f) for f in cont]
+    lin = base.lin[0][perm]
+    quad = base.quad[0][np.ix_(perm, perm)]
+
+    cat_count: Dict[str, np.ndarray] = {}
+    cat_cont: Dict[str, np.ndarray] = {}
+    for c in cat:
+        g = out[f"g:{c}"]
+        gperm = [g.features.index(f) for f in cont]
+        ids = _checked_ids(g, c, doms[c])
+        counts = np.zeros(doms[c], dtype=np.float64)
+        sums = np.zeros((doms[c], k), dtype=np.float64)
+        np.add.at(counts, ids, g.count)
+        np.add.at(sums, ids, g.lin[:, gperm])
+        cat_count[c] = counts
+        cat_cont[c] = sums
+
+    cat_cat: Dict[Tuple[str, str], SparseCounts] = {}
+    for c, d_ in pairs:
+        g = out[f"p:{c}|{d_}"]
+        cat_cat[(c, d_)] = coalesce_counts(
+            _checked_ids(g, c, doms[c]),
+            _checked_ids(g, d_, doms[d_]),
+            g.count,
+            (doms[c], doms[d_]),
+        )
+    return CatCofactors(
+        count=float(base.count[0]),
+        lin=lin,
+        quad=quad,
+        cont=cont,
+        cat=cat,
+        domains=doms,
+        cat_count=cat_count,
+        cat_cont=cat_cont,
+        cat_cat=cat_cat,
+    )
+
+
+def cat_cofactors_per_pass(
+    store: Store,
+    vorder: VariableOrder,
+    cont: Sequence[str],
+    cat: Sequence[str],
+    backend: str = "numpy",
+    domains: Optional[Dict[str, int]] = None,
+) -> CatCofactors:
+    """The pre-fusion baseline: one ungrouped engine pass for the continuous
+    block, one GROUP BY c traversal per categorical attribute, one
+    GROUP BY (c, d) traversal per pair — O(1 + |cat| + |cat|²) full
+    traversals of the same factorization the fused plan covers once.  Kept
+    as the benchmark baseline and the equivalence oracle for
+    :func:`cat_cofactors_factorized` (they must match to 1e-12)."""
+    cont = list(cont)
+    cat = list(cat)
+    k = len(cont)
+    doms = dict(domains) if domains is not None else _store_domains(store, cat)
+    base = FactorizedEngine(store, vorder, cont, backend=backend).cofactors()
 
     cat_count: Dict[str, np.ndarray] = {}
     cat_cont: Dict[str, np.ndarray] = {}
@@ -340,7 +430,7 @@ def cat_cofactors_factorized(
         g = FactorizedEngine(
             store, vorder, cont, backend=backend, group_by=[c]
         ).grouped_cofactors()
-        ids = _checked_ids(g, c)
+        ids = _checked_ids(g, c, doms[c])
         counts = np.zeros(doms[c], dtype=np.float64)
         sums = np.zeros((doms[c], k), dtype=np.float64)
         np.add.at(counts, ids, g.count)
@@ -356,7 +446,9 @@ def cat_cofactors_factorized(
                 store, vorder, [], backend=backend, group_by=[c, d_]
             ).grouped_cofactors()
             cat_cat[(c, d_)] = coalesce_counts(
-                _checked_ids(g, c), _checked_ids(g, d_), g.count,
+                _checked_ids(g, c, doms[c]),
+                _checked_ids(g, d_, doms[d_]),
+                g.count,
                 (doms[c], doms[d_]),
             )
     return CatCofactors(
@@ -383,11 +475,12 @@ def cat_cofactors_from_arrays(
     """Categorical cofactors of already-extracted columns: ``x_cont`` is the
     [m, k] continuous matrix, ``cat_ids`` the [m, n_cat] dictionary ids.
 
-    With ``use_kernel=True`` the per-category blocks run through the Pallas
-    ``segment_gram`` kernel — u = [1, x] makes one fused grouped pass carry
-    counts and continuous sums together — and the pair blocks reuse it on a
-    composite segment id.  The fp64 host path (`np.add.at`) is the oracle.
-    Never builds a one-hot column.
+    With ``use_kernel=True`` the per-category blocks of ALL categorical
+    attributes run through the Pallas ``multi_segment_gram`` kernel in one
+    fused pass — u = [1, x] makes each grouped block carry counts and
+    continuous sums together, and the batched kernel streams u from memory
+    once instead of once per attribute.  The fp64 host path (`np.add.at`)
+    is the oracle.  Never builds a one-hot column.
     """
     cont = list(cont)
     cat = list(cat)
@@ -410,40 +503,35 @@ def cat_cofactors_from_arrays(
     ones = np.ones((m, 1), dtype=np.float64)
     u = np.concatenate([ones, x_cont.astype(np.float64)], axis=1)
 
-    def _grouped_counts_sums(seg, num):
-        """([num] counts, [num, k] continuous sums) per group.
-
-        Kernel path: one fused ``segment_gram`` pass over u = [1, x] —
-        row 0 of each [1+k, 1+k] block carries count and sums together.
-        Host path: bincount + scatter-add, O(m·k) — the full per-group
-        Gram would build an O(m·k²) temporary only to read row 0.
-        """
-        if use_kernel:
-            import jax.numpy as jnp
-
-            from repro.kernels import ops as kops
-
-            blocks = np.asarray(
-                kops.segment_gram(
-                    jnp.asarray(u, dtype=jnp.float32),
-                    jnp.asarray(seg, dtype=jnp.int32),
-                    num,
-                ),
-                dtype=np.float64,
-            )
-            return blocks[:, 0, 0], blocks[:, 0, 1:]
-        counts = np.bincount(seg, minlength=num).astype(np.float64)
-        sums = np.zeros((num, k), dtype=np.float64)
-        np.add.at(sums, seg, x_cont.astype(np.float64))
-        return counts, sums
-
     gram = u.T @ u
     cat_count: Dict[str, np.ndarray] = {}
     cat_cont: Dict[str, np.ndarray] = {}
-    for i, c in enumerate(cat):
-        cat_count[c], cat_cont[c] = _grouped_counts_sums(
-            cat_ids[:, i], domains[c]
+    if use_kernel and cat:
+        # one fused multi-segment pass over u = [1, x]: every attribute's
+        # grouped block comes out of a single data-chunk stream — row 0 of
+        # each [1+k, 1+k] block carries count and continuous sums together.
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+
+        blocks = kops.multi_segment_gram(
+            jnp.asarray(u, dtype=jnp.float32),
+            jnp.asarray(cat_ids, dtype=jnp.int32),
+            [int(domains[c]) for c in cat],
         )
+        for i, c in enumerate(cat):
+            blk = np.asarray(blocks[i], dtype=np.float64)
+            cat_count[c] = blk[:, 0, 0]
+            cat_cont[c] = blk[:, 0, 1:]
+    else:
+        # host path: bincount + scatter-add, O(m·k) — the full per-group
+        # Gram would build an O(m·k²) temporary only to read row 0.
+        for i, c in enumerate(cat):
+            seg, num = cat_ids[:, i], int(domains[c])
+            cat_count[c] = np.bincount(seg, minlength=num).astype(np.float64)
+            sums = np.zeros((num, k), dtype=np.float64)
+            np.add.at(sums, seg, x_cont.astype(np.float64))
+            cat_cont[c] = sums
     cat_cat: Dict[Tuple[str, str], SparseCounts] = {}
     for i in range(len(cat)):
         for j in range(i + 1, len(cat)):

@@ -145,12 +145,17 @@ def sharded_cat_cofactors(
     """Categorical cofactors with rows sharded over the mesh's data axes.
 
     Same union-commutativity as ``sharded_cofactors``, extended to the
-    grouped blocks: every shard computes its dense per-category blocks with
-    the one-hot-matmul formulation of the ``segment_gram`` kernel (one-hot
-    of a [rows, D] *shard*, never of the global design matrix), and one
-    psum per block family reduces them.  Rows are padded to a shard
-    multiple with id −1 — an all-zero one-hot row — so padding contributes
-    nothing, mirroring the kernel's out-of-range trick.
+    grouped blocks: every shard builds ONE concatenated multi-hot block
+    H = [onehot(c₁) | … | onehot(c_n)] over its local rows (a [rows, ΣD]
+    *shard* slice, never the global design matrix) and evaluates the whole
+    categorical batch with two fused matmuls — H^T·[1|x] carries every
+    per-category count/Σx block and H^T·H every cat×cat co-occurrence
+    block — mirroring the engine's single-pass multi-output plan.  Three
+    psums total (Gram, H^T·u, H^T·H) reduce the shards, independent of
+    |cat|, where the pre-fusion formulation paid one matmul + psum per
+    attribute plus one per pair.  Rows are padded to a shard multiple with
+    id −1 — an all-zero one-hot row — so padding contributes nothing,
+    mirroring the kernel's out-of-range trick.
     """
     cont, cat = list(cont), list(cat)
     axes = tuple(data_axes)
@@ -177,47 +182,51 @@ def sharded_cat_cofactors(
         [cat_ids, np.full((pad, len(cat)), -1)], axis=0
     ).astype(np.int32)
     doms = [int(domains[c]) for c in cat]
+    offs = np.concatenate([[0], np.cumsum(doms)]).astype(int)
 
     @partial(
         shard_map,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes, None)),
-        out_specs=P(),
+        out_specs=(P(), P(), P()),
     )
     def _fn(u_local, ids_local):
         rows = u_local.shape[0]
-        onehots = [
-            (
-                ids_local[:, i, None]
-                == jax.lax.broadcasted_iota(jnp.int32, (rows, d), 1)
-            ).astype(jnp.float32)
-            for i, d in enumerate(doms)
-        ]
-        blocks = [u_local.T @ u_local]
-        blocks += [oh.T @ u_local for oh in onehots]  # [D_c, 1+k] each
-        for i in range(len(doms)):
-            for j in range(i + 1, len(doms)):
-                blocks.append(onehots[i].T @ onehots[j])
-        return tuple(jax.lax.psum(b, axes) for b in blocks)
+        hot = jnp.concatenate(
+            [
+                (
+                    ids_local[:, i, None]
+                    == jax.lax.broadcasted_iota(jnp.int32, (rows, d), 1)
+                ).astype(jnp.float32)
+                for i, d in enumerate(doms)
+            ],
+            axis=1,
+        )  # [rows, ΣD] — n_cat ones per (unpadded) row
+        gram = u_local.T @ u_local
+        hu = hot.T @ u_local  # every [D_c, 1+k] block, one matmul
+        hh = hot.T @ hot  # every cat×cat block, one matmul
+        return (
+            jax.lax.psum(gram, axes),
+            jax.lax.psum(hu, axes),
+            jax.lax.psum(hh, axes),
+        )
 
     sharding = NamedSharding(mesh, P(axes, None))
-    out = _fn(
+    gram, hu, hh = _fn(
         jax.device_put(jnp.asarray(u), sharding),
         jax.device_put(jnp.asarray(ids), sharding),
     )
-    out = [np.asarray(b, dtype=np.float64) for b in out]
-    gram, rest = out[0], out[1:]
-    cat_count = {c: rest[i][:, 0] for i, c in enumerate(cat)}
-    cat_cont = {c: rest[i][:, 1:] for i, c in enumerate(cat)}
-    pair_blocks = rest[len(cat):]
+    gram = np.asarray(gram, dtype=np.float64)
+    hu = np.asarray(hu, dtype=np.float64)
+    hh = np.asarray(hh, dtype=np.float64)
+    cat_count = {c: hu[offs[i] : offs[i + 1], 0] for i, c in enumerate(cat)}
+    cat_cont = {c: hu[offs[i] : offs[i + 1], 1:] for i, c in enumerate(cat)}
     cat_cat = {}
-    idx = 0
     for i in range(len(cat)):
         for j in range(i + 1, len(cat)):
             cat_cat[(cat[i], cat[j])] = SparseCounts.from_dense(
-                pair_blocks[idx]
+                hh[offs[i] : offs[i + 1], offs[j] : offs[j + 1]]
             )
-            idx += 1
     return CatCofactors(
         count=float(gram[0, 0]),
         lin=gram[0, 1:],

@@ -27,6 +27,22 @@ and aggregating out a feature variable with values x extends the blocks by
 remaining key attributes.  The degree-≤2 bound of the paper's
 ``WHERE deg <= 2`` filter is enforced *structurally* by this algebra.
 
+Multi-output plans (AC/DC-style, Abo Khamis et al. 2018): the engine is
+split into a **plan** layer and an **executor** layer so that a *batch* of
+aggregate queries — the ungrouped Gram block, every ``GROUP BY c`` vector,
+every ``GROUP BY (c, d)`` co-occurrence — shares ONE traversal of the
+variable order.  Each :class:`AggregateQuery` names the group attributes it
+carries to the root and the monomial degree it needs; the executor memoizes
+per-node partial views keyed by ``(node, live-query-subset)``, where the
+live subset of a query at a node is its group attributes intersected with
+the node's subtree variables.  Below the deepest node that mentions any
+group attribute, every query degenerates to the same ungrouped subtree view
+— computed once and reused across all outputs (FDB's shared-subtree
+caching, Bakibayev et al. 2012).  ``passes`` counts executor traversals
+(one per :meth:`FactorizedEngine.run_batch` call, regardless of batch
+size); ``node_visits`` counts distinct ``(node, live-subset)`` view
+evaluations — the unit the benchmark sweeps report.
+
 Complexity is O(size of the factorization), as in the paper.  Structural
 index work (joins, group ids) runs on host numpy — the query-executor role —
 and all value math is vectorized (jnp by default; numpy backend available
@@ -36,16 +52,18 @@ for float64 oracle computations).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from .relation import composite_key, sort_merge_join
+from .relation import composite_key, group_key, sort_merge_join
 from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
 
 __all__ = [
+    "AggregateBlock",
+    "AggregateQuery",
     "Cofactors",
     "FactorizedEngine",
     "GroupedView",
@@ -132,6 +150,47 @@ class Cofactors:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class AggregateQuery:
+    """One output of a multi-output aggregate plan.
+
+    ``group_by``  : attributes carried (as keys) to the root — the SQL
+                    ``GROUP BY`` list.  Empty for global aggregates.
+    ``degree``    : highest monomial degree this output reads —
+                    0 = counts only, 1 = counts + Σx_f, 2 = full Gram block.
+                    Lower degrees skip the corresponding block algebra, so a
+                    ``GROUP BY (c, d)`` co-occurrence query never pays for
+                    [N, k, k] tensors it would throw away.
+    """
+
+    name: str
+    group_by: Tuple[str, ...] = ()
+    degree: int = 2
+
+
+@dataclasses.dataclass
+class AggregateBlock:
+    """One query's output: per-group aggregates keyed by the query's group
+    attributes' *original dictionary values* (stable under appends).
+
+    ``lin``/``quad`` are present only up to the query's declared degree.
+    """
+
+    keys: Dict[str, np.ndarray]  # attr -> attribute values [N] (float64)
+    count: np.ndarray  # [N]
+    lin: Optional[np.ndarray]  # [N, k] if degree >= 1
+    quad: Optional[np.ndarray]  # [N, k, k] if degree == 2
+    features: List[str]
+
+    @property
+    def num_groups(self) -> int:
+        return int(self.count.shape[0])
+
+    def ids(self, attr: str) -> np.ndarray:
+        """Group keys of a dictionary-encoded attribute as int64 ids."""
+        return self.keys[attr].astype(np.int64)
+
+
 @dataclasses.dataclass
 class GroupedView:
     """Root view of a GROUP BY evaluation: one row per distinct combination
@@ -162,17 +221,34 @@ class GroupedView:
 
 @dataclasses.dataclass
 class _View:
-    """One factorized view Q_A: keyed aggregate tensors (see module doc)."""
+    """One factorized view Q_A: keyed aggregate tensors (see module doc).
+    ``l``/``q`` are ``None`` above the view's evaluation degree."""
 
     keys: Dict[str, np.ndarray]  # attr -> int32 ids [N]
     c: object  # [N]
-    l: object  # [N, k]
-    q: object  # [N, k, k]
+    l: object  # [N, k] | None
+    q: object  # [N, k, k] | None
     feats: List[str]
+    degree: int
 
     @property
     def num_rows(self) -> int:
         return int(self.c.shape[0])
+
+
+@dataclasses.dataclass
+class _BatchPlan:
+    """The analysis product of the plan layer: which ``(node, live-subset)``
+    views the executor must evaluate, and at which degree.
+
+    ``subtree_vars[id(node)]`` — attribute-node names in the subtree.
+    ``need[id(node)][sig]``    — max degree over queries whose live subset
+                                 at the node equals ``sig``.
+    """
+
+    queries: List[AggregateQuery]
+    subtree_vars: Dict[int, FrozenSet[str]]
+    need: Dict[int, Dict[FrozenSet[str], int]]
 
 
 class FactorizedEngine:
@@ -181,6 +257,11 @@ class FactorizedEngine:
     ``backend='jax'`` uses jnp (float32 by default) — the compiled columnar
     path.  ``backend='numpy'`` uses float64 host math — the exact oracle used
     in tests.
+
+    Instrumentation: ``passes`` counts executor traversals (one per
+    :meth:`run_batch`, however many queries the batch carries) and
+    ``node_visits`` counts ``(node, live-subset)`` view evaluations — the
+    currency the single-pass claim is audited in.
     """
 
     def __init__(
@@ -204,18 +285,23 @@ class FactorizedEngine:
         self.dtype = dtype or (jnp.float32 if backend == "jax" else np.float64)
         self.scale = scale
         self.group_by = list(group_by)
-        overlap = set(self.group_by) & set(self.features)
-        if overlap:
-            raise ValueError(
-                f"attributes {sorted(overlap)} cannot be both a feature and "
-                "a group-by key — declare them one or the other"
-            )
+        self.passes = 0
+        self.node_visits = 0
+        self._check_group_attrs(self.group_by)
         self._encode_attributes()
         missing = set(self.group_by) - set(self.domains)
         if missing:
             raise ValueError(
                 f"group-by attributes {sorted(missing)} occur in no relation "
                 "of the variable order"
+            )
+
+    def _check_group_attrs(self, group_by: Sequence[str]) -> None:
+        overlap = set(group_by) & set(self.features)
+        if overlap:
+            raise ValueError(
+                f"attributes {sorted(overlap)} cannot be both a feature and "
+                "a group-by key — declare them one or the other"
             )
 
     # -- dictionary encoding (global, per attribute) --------------------------
@@ -243,21 +329,17 @@ class FactorizedEngine:
     def cofactors(self) -> Cofactors:
         if self.group_by:
             raise ValueError("use grouped_cofactors() when group_by is set")
-        view = self._process(self.vorder)
-        if view.num_rows != 1:
+        blk = self.run_batch([AggregateQuery("__cof__", (), 2)])["__cof__"]
+        if blk.num_groups != 1:
             raise AssertionError(
-                f"root view must have exactly one row, got {view.num_rows} — "
-                "invalid variable order"
+                f"root view must have exactly one row, got {blk.num_groups} "
+                "— invalid variable order"
             )
-        count = float(np.asarray(view.c)[0])
-        lin = np.asarray(view.l, dtype=np.float64)[0]
-        quad = np.asarray(view.q, dtype=np.float64)[0]
-        # reorder engine traversal order -> requested feature order
-        perm = [view.feats.index(f) for f in self.features]
+        perm = [blk.features.index(f) for f in self.features]
         return Cofactors(
-            count=count,
-            lin=lin[perm],
-            quad=quad[np.ix_(perm, perm)],
+            count=float(blk.count[0]),
+            lin=blk.lin[0][perm],
+            quad=blk.quad[0][np.ix_(perm, perm)],
             features=list(self.features),
         )
 
@@ -273,21 +355,38 @@ class FactorizedEngine:
         (new rows never renumber existing categories)."""
         if not self.group_by:
             raise ValueError("group_by is empty — use cofactors()")
-        view = self._process(self.vorder)
-        perm = [view.feats.index(f) for f in self.features]
-        lin = np.asarray(view.l, dtype=np.float64)[:, perm]
-        quad = np.asarray(view.q, dtype=np.float64)[:, perm][:, :, perm]
-        keys = {
-            a: self.attr_values[a][np.asarray(view.keys[a])].astype(np.float64)
-            for a in self.group_by
-        }
+        blk = self.run_batch(
+            [AggregateQuery("__grp__", tuple(self.group_by), 2)]
+        )["__grp__"]
+        perm = [blk.features.index(f) for f in self.features]
         return GroupedView(
-            keys=keys,
-            count=np.asarray(view.c, dtype=np.float64),
-            lin=lin,
-            quad=quad,
+            keys=blk.keys,
+            count=blk.count,
+            lin=blk.lin[:, perm],
+            quad=blk.quad[:, perm][:, :, perm],
             features=list(self.features),
         )
+
+    def run_batch(
+        self, queries: Sequence[AggregateQuery]
+    ) -> Dict[str, AggregateBlock]:
+        """Evaluate a batch of aggregate queries in ONE shared traversal.
+
+        Plan phase: per node, collect the distinct live query subsets and
+        the max degree each must be evaluated at.  Execute phase: memoized
+        bottom-up evaluation — queries whose live subsets coincide at a
+        node share that node's view, so subtrees below all referenced group
+        attributes are computed exactly once for the whole batch.
+        """
+        queries = list(queries)
+        plan = self._plan(queries)
+        self.passes += 1
+        cache: Dict[Tuple[int, FrozenSet[str]], _View] = {}
+        out: Dict[str, AggregateBlock] = {}
+        for q in queries:
+            view = self._execute(self.vorder, frozenset(q.group_by), plan, cache)
+            out[q.name] = self._to_block(view, q)
+        return out
 
     def sum_product(self, attrs: Sequence[str]) -> float:
         """Generic SUM(Π attrs) over the join (paper Fig. 2/3 aggregates):
@@ -303,27 +402,116 @@ class FactorizedEngine:
         i, j = (cof.features.index(a) for a in attrs)
         return float(cof.quad[i, j])
 
-    # -- bottom-up evaluation ----------------------------------------------------
-    def _process(self, node: VariableOrder) -> _View:
-        if node.is_relation:
-            return self._leaf_view(node.relation)
-        child_views = [self._process(ch) for ch in node.children]
-        view = child_views[0]
-        for other in child_views[1:]:
-            view = self._combine(view, other)
-        if node.name == INTERCEPT:
-            if set(view.keys) != set(self.group_by):
-                extra = sorted(set(view.keys) - set(self.group_by))
-                raise AssertionError(
-                    f"attributes {extra} survive to the intercept — "
-                    "variable order misses nodes for them"
+    # -- plan layer -------------------------------------------------------------
+    def _plan(self, queries: Sequence[AggregateQuery]) -> _BatchPlan:
+        names = set()
+        for q in queries:
+            if q.name in names:
+                raise ValueError(f"duplicate query name {q.name!r}")
+            names.add(q.name)
+            if q.degree not in (0, 1, 2):
+                raise ValueError(f"query {q.name!r}: degree must be 0, 1 or 2")
+            self._check_group_attrs(q.group_by)
+            missing = set(q.group_by) - set(self.domains)
+            if missing:
+                raise ValueError(
+                    f"query {q.name!r}: group-by attributes "
+                    f"{sorted(missing)} occur in no relation of the "
+                    "variable order"
                 )
-            return view
-        if node.name in self.features:
-            view = self._extend_with_feature(view, node.name)
-        return self._aggregate_out(view, node.name)
 
-    def _leaf_view(self, rel_name: str) -> _View:
+        subtree_vars: Dict[int, FrozenSet[str]] = {}
+
+        def walk(node: VariableOrder) -> FrozenSet[str]:
+            acc: set = set()
+            if not node.is_relation and node.name != INTERCEPT:
+                acc.add(node.name)
+            for ch in node.children:
+                acc |= walk(ch)
+            out = frozenset(acc)
+            subtree_vars[id(node)] = out
+            return out
+
+        walk(self.vorder)
+
+        need: Dict[int, Dict[FrozenSet[str], int]] = {}
+
+        def record(node: VariableOrder) -> None:
+            at_node = need.setdefault(id(node), {})
+            sub = subtree_vars[id(node)]
+            for q in queries:
+                sig = frozenset(q.group_by) & sub
+                at_node[sig] = max(at_node.get(sig, -1), q.degree)
+            for ch in node.children:
+                record(ch)
+
+        record(self.vorder)
+        return _BatchPlan(
+            queries=list(queries), subtree_vars=subtree_vars, need=need
+        )
+
+    # -- executor: memoized bottom-up evaluation ---------------------------------
+    def _execute(
+        self,
+        node: VariableOrder,
+        keep: FrozenSet[str],
+        plan: _BatchPlan,
+        cache: Dict[Tuple[int, FrozenSet[str]], _View],
+    ) -> _View:
+        memo_key = (id(node), keep)
+        hit = cache.get(memo_key)
+        if hit is not None:
+            return hit
+        degree = plan.need[id(node)][keep]
+        self.node_visits += 1
+        if node.is_relation:
+            view = self._leaf_view(node.relation, degree)
+        else:
+            child_views = [
+                self._execute(
+                    ch, keep & plan.subtree_vars[id(ch)], plan, cache
+                )
+                for ch in node.children
+            ]
+            view = child_views[0]
+            for other in child_views[1:]:
+                view = self._combine(view, other, degree)
+            if node.name == INTERCEPT:
+                if set(view.keys) != keep:
+                    extra = sorted(set(view.keys) - keep)
+                    raise AssertionError(
+                        f"attributes {extra} survive to the intercept — "
+                        "variable order misses nodes for them"
+                    )
+            else:
+                if node.name in self.features and degree >= 1:
+                    view = self._extend_with_feature(view, node.name, degree)
+                view = self._aggregate_out(view, node.name, keep, degree)
+        cache[memo_key] = view
+        return view
+
+    def _to_block(self, view: _View, q: AggregateQuery) -> AggregateBlock:
+        keys = {
+            a: self.attr_values[a][np.asarray(view.keys[a])].astype(np.float64)
+            for a in q.group_by
+        }
+        count = np.asarray(view.c, dtype=np.float64)
+        lin = quad = None
+        if q.degree >= 1:
+            # the view may have been evaluated at a higher degree for a
+            # sibling query — slice what this query declared it reads.
+            lin = np.asarray(view.l, dtype=np.float64)
+        if q.degree == 2:
+            quad = np.asarray(view.q, dtype=np.float64)
+        return AggregateBlock(
+            keys=keys,
+            count=count,
+            lin=lin,
+            quad=quad,
+            features=list(view.feats),
+        )
+
+    def _leaf_view(self, rel_name: str, degree: int) -> _View:
         rel = self.store.get(rel_name)
         n = rel.num_rows
         keys = {a: self.encoded[(rel_name, a)] for a in rel.attributes}
@@ -331,12 +519,13 @@ class FactorizedEngine:
         return _View(
             keys=keys,
             c=xp.ones((n,), dtype=dt),
-            l=xp.zeros((n, 0), dtype=dt),
-            q=xp.zeros((n, 0, 0), dtype=dt),
+            l=xp.zeros((n, 0), dtype=dt) if degree >= 1 else None,
+            q=xp.zeros((n, 0, 0), dtype=dt) if degree == 2 else None,
             feats=[],
+            degree=degree,
         )
 
-    def _combine(self, v1: _View, v2: _View) -> _View:
+    def _combine(self, v1: _View, v2: _View, degree: int) -> _View:
         xp = self.xp
         shared = sorted(set(v1.keys) & set(v2.keys))
         if shared:
@@ -353,23 +542,26 @@ class FactorizedEngine:
             if a not in keys:
                 keys[a] = c[i2]
         c1 = xp.take(v1.c, i1, axis=0)
-        l1 = xp.take(v1.l, i1, axis=0)
-        q1 = xp.take(v1.q, i1, axis=0)
         c2 = xp.take(v2.c, i2, axis=0)
-        l2 = xp.take(v2.l, i2, axis=0)
-        q2 = xp.take(v2.q, i2, axis=0)
-
         c = c1 * c2
-        l = xp.concatenate([l1 * c2[:, None], c1[:, None] * l2], axis=1)
-        cross = l1[:, :, None] * l2[:, None, :]
-        top = xp.concatenate([q1 * c2[:, None, None], cross], axis=2)
-        bot = xp.concatenate(
-            [xp.swapaxes(cross, 1, 2), q2 * c1[:, None, None]], axis=2
-        )
-        q = xp.concatenate([top, bot], axis=1)
-        return _View(keys=keys, c=c, l=l, q=q, feats=v1.feats + v2.feats)
+        l = q = None
+        if degree >= 1:
+            l1 = xp.take(v1.l, i1, axis=0)
+            l2 = xp.take(v2.l, i2, axis=0)
+            l = xp.concatenate([l1 * c2[:, None], c1[:, None] * l2], axis=1)
+            if degree == 2:
+                q1 = xp.take(v1.q, i1, axis=0)
+                q2 = xp.take(v2.q, i2, axis=0)
+                cross = l1[:, :, None] * l2[:, None, :]
+                top = xp.concatenate([q1 * c2[:, None, None], cross], axis=2)
+                bot = xp.concatenate(
+                    [xp.swapaxes(cross, 1, 2), q2 * c1[:, None, None]], axis=2
+                )
+                q = xp.concatenate([top, bot], axis=1)
+        feats = v1.feats + v2.feats if degree >= 1 else []
+        return _View(keys=keys, c=c, l=l, q=q, feats=feats, degree=degree)
 
-    def _extend_with_feature(self, view: _View, attr: str) -> _View:
+    def _extend_with_feature(self, view: _View, attr: str, degree: int) -> _View:
         xp, dt = self.xp, self.dtype
         if attr not in view.keys:
             raise AssertionError(f"feature {attr} not present below its node")
@@ -379,31 +571,46 @@ class FactorizedEngine:
         if self.scale is not None:
             vals = self.scale.transform(attr, vals)
         x = xp.asarray(vals, dtype=dt)
-        c, l, q = view.c, view.l, view.q
+        c, l = view.c, view.l
         l_new = xp.concatenate([(x * c)[:, None], l], axis=1)
-        xl = x[:, None] * l
-        top = xp.concatenate([(x * x * c)[:, None, None], xl[:, None, :]], axis=2)
-        bot = xp.concatenate([xl[:, :, None], q], axis=2)
-        q_new = xp.concatenate([top, bot], axis=1)
+        q_new = None
+        if degree == 2:
+            xl = x[:, None] * l
+            top = xp.concatenate(
+                [(x * x * c)[:, None, None], xl[:, None, :]], axis=2
+            )
+            bot = xp.concatenate([xl[:, :, None], view.q], axis=2)
+            q_new = xp.concatenate([top, bot], axis=1)
         return _View(
-            keys=view.keys, c=view.c, l=l_new, q=q_new, feats=[attr] + view.feats
+            keys=view.keys,
+            c=view.c,
+            l=l_new,
+            q=q_new,
+            feats=[attr] + view.feats,
+            degree=degree,
         )
 
-    def _aggregate_out(self, view: _View, attr: str) -> _View:
+    def _aggregate_out(
+        self, view: _View, attr: str, keep: FrozenSet[str], degree: int
+    ) -> _View:
         if attr not in view.keys:
             raise AssertionError(
                 f"variable {attr} does not occur in any relation below its "
                 "node — invalid variable order"
             )
-        # GROUP BY attributes are never aggregated out: they stay among the
+        # live group attributes are never aggregated out: they stay among the
         # grouping keys (the group-by below still compresses duplicates), so
         # every ancestor view — and ultimately the root — is keyed by them.
-        drop = set() if attr in self.group_by else {attr}
+        drop = set() if attr in keep else {attr}
         remaining = sorted(set(view.keys) - drop)
         n = view.num_rows
         if remaining:
             doms = [self.domains[a] for a in remaining]
-            key = composite_key([view.keys[a] for a in remaining], doms)
+            # group_key, not composite_key: a view keyed by many wide
+            # attributes (fact tables with ≫8 categorical keys) overflows
+            # the strict mixed-radix product, and a GROUP BY only needs
+            # within-call injectivity.
+            key = group_key([view.keys[a] for a in remaining], doms)
             uniq, first, inv = np.unique(
                 key, return_index=True, return_inverse=True
             )
@@ -415,9 +622,11 @@ class FactorizedEngine:
             num = 1
             keys = {}
         c = self._segment_sum(view.c, seg, num)
-        l = self._segment_sum(view.l, seg, num)
-        q = self._segment_sum(view.q, seg, num)
-        return _View(keys=keys, c=c, l=l, q=q, feats=view.feats)
+        l = self._segment_sum(view.l, seg, num) if degree >= 1 else None
+        q = self._segment_sum(view.q, seg, num) if degree == 2 else None
+        return _View(
+            keys=keys, c=c, l=l, q=q, feats=view.feats, degree=degree
+        )
 
     def _segment_sum(self, data, seg, num: int):
         if self.backend == "jax":

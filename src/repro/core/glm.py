@@ -68,6 +68,12 @@ class GLMConfig:
     gd_alpha0: float = 0.5  # α on the per-row-normalized gradient (gd)
     gd_eps: float = 1e-7  # mean-|gradient| stopping threshold (gd)
     gd_max_iter: int = 100_000
+    # "fp32": plain fp32 reductions.  "pairs": fp32 compute with the NLL
+    # and gradient reductions accumulated in two-float (hi, lo) pairs —
+    # ~fp64-precision sums without native fp64 (TPUs have none), closing
+    # the gap to IRLS on large compressed designs where the fp32 NLL floor
+    # stalls the bold-driver accept test.
+    gd_accum: str = "fp32"
 
 
 @dataclasses.dataclass
@@ -372,6 +378,37 @@ def _fit_irls(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     )
 
 
+def _two_sum(a, b):
+    """Knuth's error-free transformation: s + err == a + b exactly."""
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def _pairwise_sum2(v):
+    """Compensated pairwise reduction of ``v`` along axis 0.
+
+    Returns an (hi, lo) two-float pair whose exact sum carries ~2× the
+    significand of one float — the mixed-precision accumulator for the GD
+    solver (fp32 per-element compute, fp64-grade sums).  The tree has
+    ⌈log₂ G⌉ statically-unrolled levels; each level's exact two-sum errors
+    accumulate in ``lo`` (they are ~eps·|terms|, so their own fp32 sum is
+    harmless)."""
+    import jax.numpy as jnp
+
+    hi = v
+    lo = jnp.zeros_like(v)
+    while hi.shape[0] > 1:
+        if hi.shape[0] % 2:
+            hi = jnp.concatenate([hi, jnp.zeros_like(hi[:1])], axis=0)
+            lo = jnp.concatenate([lo, jnp.zeros_like(lo[:1])], axis=0)
+        s, e = _two_sum(hi[0::2], hi[1::2])
+        lo = lo[0::2] + lo[1::2] + e
+        hi = s
+    return hi[0], lo[0]
+
+
 def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     """On-device GD via ``lax.while_loop``, mirroring ``gd.py``'s driver
     but adapted to a non-quadratic objective: the bold-driver α decision
@@ -386,7 +423,15 @@ def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     before returning (one-hot coordinates need no scaling).  The ridge
     penalty applies to the *scaled* coefficients here, so with ridge > 0
     the GD optimum differs from IRLS's by O(ridge); IRLS is the accuracy
-    reference, GD the large-p path."""
+    reference, GD the large-p path.
+
+    With ``cfg.gd_accum == "pairs"`` the NLL and the dense gradient
+    reductions accumulate in two-float (hi, lo) pairs and the accept test
+    compares NLL *pairs*: near the optimum the true per-step decrease is
+    far below fp32 resolution of the total NLL, so the plain-fp32 gate
+    rejects genuinely improving steps and α collapses at the fp32 floor —
+    the pair comparison keeps resolving descent ~2³⁰× finer at the same
+    fp32 element compute."""
     import jax
     import jax.numpy as jnp
 
@@ -406,56 +451,78 @@ def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     ridge_vec = jnp.full((p,), cfg.ridge, dtype=jnp.float32).at[0].set(0.0)
     family = cfg.family
     has_cat = bool(design.cat_names)
+    if cfg.gd_accum not in ("fp32", "pairs"):
+        raise ValueError(f"unknown gd_accum {cfg.gd_accum!r}")
+    pairs = cfg.gd_accum == "pairs"
 
     def nll_grad(theta):
+        """Returns (nll_hi, nll_lo, g): the penalized NLL as a two-float
+        pair (lo ≡ 0 on the plain fp32 path) plus the gradient."""
         eta = theta[0] + cont @ theta[1 : 1 + k]
         if has_cat:
             eta = eta + jnp.take(theta, oid).sum(axis=1)
         if family == "logistic":
             grad_eta = counts * jax.nn.sigmoid(eta) - ysum
-            nll = jnp.sum(counts * jax.nn.softplus(eta) - ysum * eta)
+            terms = counts * jax.nn.softplus(eta) - ysum * eta
         else:
             mu = jnp.exp(jnp.minimum(eta, 30.0))
             grad_eta = counts * mu - ysum
-            nll = jnp.sum(counts * mu - ysum * eta)
+            terms = counts * mu - ysum * eta
         g = jnp.zeros((p,), dtype=theta.dtype)
-        g = g.at[0].set(grad_eta.sum())
-        g = g.at[1 : 1 + k].set(cont.T @ grad_eta)
+        if pairs:
+            nll_hi, nll_lo = _pairwise_sum2(terms)
+            g0_hi, g0_lo = _pairwise_sum2(grad_eta)
+            g = g.at[0].set(g0_hi + g0_lo)
+            if k:
+                gc_hi, gc_lo = _pairwise_sum2(cont * grad_eta[:, None])
+                g = g.at[1 : 1 + k].set(gc_hi + gc_lo)
+        else:
+            nll_hi, nll_lo = jnp.sum(terms), jnp.zeros((), terms.dtype)
+            g = g.at[0].set(grad_eta.sum())
+            g = g.at[1 : 1 + k].set(cont.T @ grad_eta)
         if has_cat:
             g = g.at[oid].add(grad_eta[:, None])
         g = g + ridge_vec * theta
-        nll = nll + 0.5 * cfg.ridge * jnp.sum(theta[1:] ** 2)
-        return nll, g
+        pen = 0.5 * cfg.ridge * jnp.sum(theta[1:] ** 2)
+        nll_hi, err = _two_sum(nll_hi, pen)
+        return nll_hi, nll_lo + err, g
 
     def cond(carry):
-        _, _, _, alpha, it, converged = carry
+        _, _, _, _, alpha, it, converged = carry
         return (~converged) & (it < cfg.gd_max_iter) & (alpha > 1e-15)
 
     def body(carry):
-        # carry holds (nll, g) AT theta, so each step costs ONE nll_grad:
-        # the candidate's evaluation becomes the next step's current one.
-        theta, nll, g, alpha, it, _ = carry
+        # carry holds (nll pair, g) AT theta, so each step costs ONE
+        # nll_grad: the candidate's evaluation becomes the next step's
+        # current one.
+        theta, nll_hi, nll_lo, g, alpha, it, _ = carry
         cand = theta - alpha * g / m
-        nll_c, g_c = nll_grad(cand)
-        ok = nll_c < nll
+        nh_c, nl_c, g_c = nll_grad(cand)
+        # pair comparison: (nh_c + nl_c) < (nh + nl) evaluated on the
+        # residuals so the lo parts are not absorbed by the hi rounding
+        ok = (nh_c - nll_hi) + (nl_c - nll_lo) < 0.0
         theta_new = jnp.where(ok, cand, theta)
-        nll_new = jnp.where(ok, nll_c, nll)
+        nh_new = jnp.where(ok, nh_c, nll_hi)
+        nl_new = jnp.where(ok, nl_c, nll_lo)
         g_new = jnp.where(ok, g_c, g)
         alpha_new = jnp.where(ok, alpha * 1.05, alpha / 3.0)
         converged = jnp.sum(jnp.abs(g_new)) / m < cfg.gd_eps
-        return theta_new, nll_new, g_new, alpha_new, it + 1, converged
+        return theta_new, nh_new, nl_new, g_new, alpha_new, it + 1, converged
 
     theta0 = jnp.zeros((p,), dtype=jnp.float32)
-    nll0, g0 = nll_grad(theta0)
+    nh0, nl0, g0 = nll_grad(theta0)
     carry = (
         theta0,
-        nll0,
+        nh0,
+        nl0,
         g0,
         jnp.asarray(cfg.gd_alpha0, jnp.float32),
         jnp.asarray(0, jnp.int32),
         jnp.asarray(False),
     )
-    theta, _, _, alpha, it, converged = jax.lax.while_loop(cond, body, carry)
+    theta, _, _, _, alpha, it, converged = jax.lax.while_loop(
+        cond, body, carry
+    )
     theta_np = np.asarray(theta, dtype=np.float64)
     if k:  # invert the internal scaling: η is identical by construction
         theta_np[0] -= float((theta_np[1 : 1 + k] / mx) @ avg)

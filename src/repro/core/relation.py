@@ -28,6 +28,7 @@ __all__ = [
     "Dictionary",
     "Relation",
     "composite_key",
+    "group_key",
     "sort_merge_join",
     "group_ids",
 ]
@@ -180,6 +181,38 @@ def composite_key(
     out = np.zeros_like(cols[0], dtype=np.int64)
     for col, dom in zip(cols, domains):
         out = out * max(int(dom), 1) + col.astype(np.int64)
+    return out
+
+
+def group_key(
+    cols: Sequence[np.ndarray], domains: Sequence[int]
+) -> np.ndarray:
+    """Injective-within-call key over multiple int columns.
+
+    Like :func:`composite_key`, but only guarantees that equal tuples get
+    equal codes *within this call* — the contract a GROUP BY needs — so
+    when the mixed-radix product would overflow int64 (views keyed by many
+    wide attributes, e.g. a fact table with 16 categorical keys) it
+    re-densifies the accumulated code to its observed uniques and keeps
+    packing.  After densification the accumulated size is bounded by the
+    row count, so ``rows · next_domain`` always fits int64.  NOT usable
+    for joins: two calls may assign different codes to the same tuple —
+    joins must keep :func:`composite_key` (their shared-attribute radix
+    products are small).
+    """
+    if not cols:
+        raise ValueError("group_key requires at least one column")
+    limit = np.iinfo(np.int64).max // 4
+    out = cols[0].astype(np.int64)
+    size = max(int(domains[0]), 1)
+    for col, dom in zip(cols[1:], domains[1:]):
+        dom = max(int(dom), 1)
+        if size > limit // dom:
+            uniq, inv = np.unique(out, return_inverse=True)
+            out = inv.astype(np.int64)
+            size = max(len(uniq), 1)
+        out = out * dom + col.astype(np.int64)
+        size *= dom
     return out
 
 

@@ -72,6 +72,12 @@ class Store:
         self._vorders: Dict[tuple, "VariableOrder"] = {}
         # col -> (sum, max|x|, count) over the union of relations with col
         self._moments: Dict[str, Tuple[float, float, int]] = {}
+        # cumulative engine traversals / (node, live-subset) evaluations
+        # spent on categorical cofactors (cold computes AND delta folds) —
+        # with the fused multi-output plan this grows by 1 pass per
+        # compute/fold, however many categorical attributes ride along.
+        self.cat_passes = 0
+        self.cat_node_visits = 0
         self.version = 0
         for rel in relations or ():
             self.put(rel)
@@ -254,8 +260,9 @@ class Store:
         cat: List[str],
         backend: str,
     ):
-        """Categorical delta term: grouped cofactors of the join with
-        relation ``name`` replaced by the delta rows."""
+        """Categorical delta term: the full fused cofactor batch of the join
+        with relation ``name`` replaced by the delta rows — ONE multi-output
+        engine traversal per fold, not one per attribute/pair."""
         from .categorical import cat_cofactors_factorized
 
         vorder = self._vorders[vorder_sig]
@@ -263,9 +270,13 @@ class Store:
             delta if rn == name else self._relations[rn]
             for rn in dict.fromkeys(vorder.relations())
         ]
-        return cat_cofactors_factorized(
-            Store(rels), vorder, cont, cat, backend=backend
+        stats: Dict[str, int] = {}
+        out = cat_cofactors_factorized(
+            Store(rels), vorder, cont, cat, backend=backend, stats=stats
         )
+        self.cat_passes += stats["passes"]
+        self.cat_node_visits += stats["node_visits"]
+        return out
 
     # -- cofactor cache --------------------------------------------------------
     def cofactors(
@@ -315,6 +326,9 @@ class Store:
         categorical signature (which attributes are declared categorical, in
         order), so continuous and categorical entries over the same join
         never alias, and ``append`` maintains both kinds incrementally.
+        Cold computes and delta folds both run the fused multi-output plan
+        — exactly one engine traversal each, audited by ``cat_passes`` /
+        ``cat_node_visits`` in :meth:`cache_info`.
         Returns a ``repro.core.categorical.CatCofactors``; do not mutate."""
         from .categorical import cat_cofactors_factorized
 
@@ -327,9 +341,12 @@ class Store:
             and entry.version == self.version
         ):
             return entry.cofactors
+        stats: Dict[str, int] = {}
         cof = cat_cofactors_factorized(
-            self, vorder, list(cont), list(cat), backend=backend
+            self, vorder, list(cont), list(cat), backend=backend, stats=stats
         )
+        self.cat_passes += stats["passes"]
+        self.cat_node_visits += stats["node_visits"]
         self._vorders[sig] = vorder
         self._cat_cache[key] = _CacheEntry(
             cofactors=cof,
@@ -343,6 +360,8 @@ class Store:
             "entries": len(self._cofactor_cache),
             "cat_entries": len(self._cat_cache),
             "version": self.version,
+            "cat_passes": self.cat_passes,
+            "cat_node_visits": self.cat_node_visits,
         }
 
     def _restamp(self) -> None:

@@ -14,6 +14,12 @@
                              reproduction target (see DESIGN.md §7).
 * ``random_acyclic_schema``— randomized star/snowflake schemas for property
                              tests (hypothesis drives the parameters).
+* ``many_cat_schema``      — a star schema with a configurable NUMBER of
+                             categorical key attributes (one dimension
+                             relation each), the axis
+                             ``benchmarks/bench_categorical.py`` sweeps to
+                             show the fused multi-output plan is flat in
+                             |cat| where the per-pass path is quadratic.
 """
 
 from __future__ import annotations
@@ -25,11 +31,12 @@ import numpy as np
 
 from repro.core.relation import Relation
 from repro.core.store import Store
-from repro.core.variable_order import VariableOrder
+from repro.core.variable_order import VariableOrder, variable_order_from_store
 
 __all__ = [
     "figure1_schema",
     "favorita_like",
+    "many_cat_schema",
     "random_acyclic_schema",
     "SchemaBundle",
 ]
@@ -237,6 +244,62 @@ def favorita_like(
         vorder=root,
         features=["date", "store_nbr", "item_nbr", "onpromotion"],
         label="unit_sales",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Many-categorical star schema (the |cat| sweep axis)
+# ---------------------------------------------------------------------------
+
+def many_cat_schema(
+    n_cat: int = 4,
+    domain: int = 16,
+    n_rows: int = 2000,
+    seed: int = 0,
+) -> SchemaBundle:
+    """Fact(c0..c{n-1}, x, y) ⋈ Dim_i(c_i, w_i) for i < n_cat.
+
+    Every c_i is a dictionary-encoded key with ``domain`` categories and
+    its own dimension relation, so a categorical cofactor batch over all
+    of them issues 1 + n_cat + C(n_cat, 2) aggregate outputs — the regime
+    where the fused single-pass plan's shared traversal beats the
+    per-attribute/per-pair passes quadratically.  The label ``y`` depends
+    on a per-category effect of every attribute plus ``x`` and noise, so
+    the swept models stay learnable.
+    """
+    rng = np.random.default_rng(seed)
+    keys = {
+        f"c{i}": rng.integers(0, domain, n_rows).astype(np.int32)
+        for i in range(n_cat)
+    }
+    effects = [rng.normal(0, 1.0, domain) for _ in range(n_cat)]
+    x = rng.normal(0, 2.0, n_rows)
+    y = 0.5 * x + rng.normal(0, 0.5, n_rows)
+    for i in range(n_cat):
+        y = y + effects[i][keys[f"c{i}"]]
+    rels = [
+        Relation.from_columns(
+            "Fact",
+            keys,
+            {"x": x, "y": y},
+            {f"c{i}": domain for i in range(n_cat)},
+        )
+    ]
+    for i in range(n_cat):
+        rels.append(
+            Relation.from_columns(
+                f"Dim{i}",
+                {f"c{i}": np.arange(domain, dtype=np.int32)},
+                {f"w{i}": rng.normal(0, 1.0, domain)},
+                {f"c{i}": domain},
+            )
+        )
+    store = Store(rels)
+    return SchemaBundle(
+        store=store,
+        vorder=variable_order_from_store(store),
+        features=["x"],
+        label="y",
     )
 
 

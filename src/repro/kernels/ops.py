@@ -18,10 +18,18 @@ from .moments import DEFAULT_BM as MOM_BM, moments_kernel_call
 from .segment_gram import (
     DEFAULT_BM as SEG_BM,
     VMEM_ACC_BYTES,
+    multi_segment_gram_kernel_call,
     segment_gram_kernel_call,
 )
 
-__all__ = ["gram", "segment_gram", "moments", "flash_attention", "on_tpu"]
+__all__ = [
+    "gram",
+    "segment_gram",
+    "multi_segment_gram",
+    "moments",
+    "flash_attention",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -97,6 +105,59 @@ def segment_gram(
         )
         outs.append(out[:gn])
     return jnp.concatenate(outs, axis=0)
+
+
+def multi_segment_gram(
+    x: jnp.ndarray,
+    segs: jnp.ndarray,
+    num_groups,
+    bm: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+):
+    """Per-group Grams for SEVERAL segment-id columns in one fused pass.
+
+    ``x`` is any [M, K]; ``segs`` is [M, n_seg] int with column ``i``'s ids
+    in ``[0, num_groups[i])``.  Returns a list of fp32 [G_i, K, K] — one
+    grouped Gram per segment column — while streaming the data block from
+    memory ONCE, instead of re-reading x per column as n_seg separate
+    ``segment_gram`` calls would.  Ids are offset into disjoint bands of a
+    single [ΣG, K, K] accumulator; padding rows get the out-of-range id ΣG
+    (zero one-hot row ⇒ no contribution).  If the fused accumulator would
+    exceed the VMEM budget, falls back to per-column ``segment_gram``
+    (which chunks groups internally) — correctness never depends on the
+    fused path fitting.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    budget = min(vmem_budget or VMEM_ACC_BYTES, VMEM_ACC_BYTES)
+    m, k = x.shape
+    num_groups = [int(g) for g in num_groups]
+    n_seg = segs.shape[1]
+    assert n_seg == len(num_groups), (segs.shape, num_groups)
+    if n_seg == 0:
+        return []
+    total = sum(num_groups)
+    if total * k * k * 4 > budget:
+        return [
+            segment_gram(
+                x, segs[:, i], num_groups[i],
+                bm=bm, interpret=interpret, vmem_budget=vmem_budget,
+            )
+            for i in range(n_seg)
+        ]
+    bm = bm or min(SEG_BM, _round_up(max(m, 1), 8))
+    mp = _round_up(max(m, 1), bm)
+    xp = jnp.zeros((mp, k), dtype=x.dtype).at[:m, :].set(x)
+    offs = np.concatenate([[0], np.cumsum(num_groups)]).astype(np.int32)
+    segp = jnp.full((mp, n_seg), total, dtype=jnp.int32)
+    segp = segp.at[:m, :].set(
+        segs.astype(jnp.int32) + jnp.asarray(offs[:-1])[None, :]
+    )
+    out = multi_segment_gram_kernel_call(
+        xp, segp, total, n_seg, bm=bm, interpret=interpret
+    )
+    return [out[offs[i] : offs[i + 1]] for i in range(n_seg)]
 
 
 def flash_attention(

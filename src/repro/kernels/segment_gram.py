@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["segment_gram_kernel_call"]
+__all__ = ["multi_segment_gram_kernel_call", "segment_gram_kernel_call"]
 
 DEFAULT_BM = 256
 VMEM_ACC_BYTES = 8 * 1024 * 1024
@@ -87,6 +87,85 @@ def segment_gram_kernel_call(
         in_specs=[
             pl.BlockSpec((bm, k), lambda mm: (mm, 0)),
             pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_groups, k, k), lambda mm: (0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_groups, k, k), jnp.float32),
+        interpret=interpret,
+    )(x, seg)
+
+
+def _multi_segment_gram_kernel(
+    x_ref, seg_ref, out_ref, *, num_groups: int, n_seg: int
+):
+    """Batched variant: ``n_seg`` segment-id columns share one read of x.
+
+    Each segment column's ids are pre-offset into a disjoint band of
+    ``[0, num_groups)``, so the *sum* of the per-column one-hots is a
+    multi-hot matrix H with ``n_seg`` ones per row — and H^T @ cross
+    scatters the SAME row-wise outer products into every column's group
+    band in one MXU matmul.  This is what makes cofactor extraction flat
+    in the number of categorical attributes: the data block streams from
+    HBM once, not once per attribute.
+    """
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # [bm, k]
+    seg = seg_ref[...]  # [bm, n_seg] int32, band-offset
+    bm, k = x.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, num_groups), 1)
+    hot = jnp.zeros((bm, num_groups), dtype=jnp.float32)
+    for i in range(n_seg):  # static unroll — n_seg is a Python int
+        hot += (seg[:, i, None] == iota).astype(jnp.float32)
+    cross = (x[:, :, None] * x[:, None, :]).reshape(bm, k * k)
+    acc = jax.lax.dot_general(
+        hot,
+        cross,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc.reshape(num_groups, k, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "n_seg", "bm", "interpret")
+)
+def multi_segment_gram_kernel_call(
+    x: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    n_seg: int,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call on padded inputs: x [M, K] (M % bm == 0), seg
+    [M, n_seg] int32 with each column's ids offset into its own band of
+    ``[0, num_groups)`` and padding rows set to ``num_groups`` (out of
+    range ⇒ zero one-hot row).  Returns fp32 [num_groups, K, K] — the
+    per-column grouped Grams concatenated along the group axis.  Use
+    ``ops.multi_segment_gram`` generally."""
+    m, k = x.shape
+    assert m % bm == 0, (m, bm)
+    assert seg.shape == (m, n_seg), (seg.shape, n_seg)
+    assert num_groups * k * k * 4 <= VMEM_ACC_BYTES, (
+        f"accumulator {num_groups}x{k}x{k} exceeds VMEM budget — "
+        "fall back to per-column chunked segment_gram in the wrapper"
+    )
+    nm = m // bm
+    kernel = functools.partial(
+        _multi_segment_gram_kernel, num_groups=num_groups, n_seg=n_seg
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, n_seg), lambda mm: (mm, 0)),
         ],
         out_specs=pl.BlockSpec(
             (num_groups, k, k), lambda mm: (0, 0, 0)

@@ -55,3 +55,89 @@ def test_smoke_flag_reaches_suites():
 
     assert run_suites([("probe", probe)], smoke=True) == 0
     assert seen["smoke"] is True
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.compare — the nightly regression detector
+# ---------------------------------------------------------------------------
+
+def _write_artifact(path, summary, suites):
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "summary.json"), "w") as f:
+        json.dump(summary, f)
+    for name, rows in suites.items():
+        with open(os.path.join(path, f"{name}.json"), "w") as f:
+            json.dump(rows, f)
+
+
+def test_compare_missing_baseline_is_ok(tmp_path):
+    from benchmarks.compare import compare_dirs
+
+    new = tmp_path / "new"
+    _write_artifact(str(new), {"suites": []}, {})
+    assert compare_dirs(str(tmp_path / "nope"), str(new)) == 0
+
+
+def test_compare_clean_run_passes(tmp_path):
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    rows = [{"size": 10, "fact_s": 1.0, "speedup_vs_onehot": 3.0}]
+    _write_artifact(str(tmp_path / "base"), summary, {"a": rows})
+    _write_artifact(str(tmp_path / "new"), summary, {"a": rows})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+
+
+def test_compare_detects_time_regression(tmp_path, capsys):
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    base = [{"size": 10, "fact_s": 1.0}]
+    slow = [{"size": 10, "fact_s": 2.0}]  # 2x > 1.5x threshold + slack
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    _write_artifact(str(tmp_path / "new"), summary, {"a": slow})
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "new"), 0.5) == 1
+    )
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_compare_tolerates_noise_within_threshold(tmp_path):
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    base = [{"size": 10, "fact_s": 1.0, "speedup_vs_onehot": 3.0}]
+    noisy = [{"size": 10, "fact_s": 1.3, "speedup_vs_onehot": 2.5}]
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    _write_artifact(str(tmp_path / "new"), summary, {"a": noisy})
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "new"), 0.5) == 0
+    )
+
+
+def test_compare_detects_new_suite_failure(tmp_path, capsys):
+    from benchmarks.compare import compare_dirs
+
+    ok = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    bad = {
+        "suites": [
+            {"suite": "a", "status": "failed", "seconds": 1.0, "error": "x"}
+        ]
+    }
+    _write_artifact(str(tmp_path / "base"), ok, {})
+    _write_artifact(str(tmp_path / "new"), bad, {})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 1
+    assert "ok in baseline" in capsys.readouterr().out
+
+
+def test_compare_micro_timings_stay_quiet(tmp_path):
+    """Sub-ms rows double all the time on shared runners — the absolute
+    slack must keep them below the gate."""
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": []}
+    base = [{"size": 1, "kernel_s": 0.0004}]
+    new = [{"size": 1, "kernel_s": 0.0011}]
+    _write_artifact(str(tmp_path / "base"), summary, {"k": base})
+    _write_artifact(str(tmp_path / "new"), summary, {"k": new})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0

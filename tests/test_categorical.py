@@ -270,17 +270,27 @@ def test_grouped_view_sums_to_global(favorita):
 
 
 def test_random_schemas_sparse_equals_onehot():
-    """Deterministic mirror of the hypothesis property in test_property.py
-    (which needs the optional hypothesis dependency): sparse categorical
-    cofactors == one-hot Gram on random acyclic snowflakes."""
+    """Deterministic mirror of the hypothesis properties in
+    test_property.py (which need the optional hypothesis dependency):
+    fused single-pass categorical cofactors == the per-pass path to 1e-12
+    == the one-hot Gram oracle on random acyclic snowflakes."""
+    from repro.core.categorical import cat_cofactors_per_pass
     from repro.data.synthetic import random_acyclic_schema
 
     for seed in range(10):
         b = random_acyclic_schema(seed, n_branches=(seed % 3) + 1)
         cat = ["k0"] + [f"k{i + 1}" for i in range(len(b.features) // 2)]
         cont = b.features + [b.label]
+        stats = {}
         sparse = cat_cofactors_factorized(
+            b.store, b.vorder, cont, cat, backend="numpy", stats=stats
+        )
+        assert stats["passes"] == 1
+        per_pass = cat_cofactors_per_pass(
             b.store, b.vorder, cont, cat, backend="numpy"
+        )
+        np.testing.assert_allclose(
+            sparse.matrix(), per_pass.matrix(), rtol=1e-12, atol=1e-12
         )
         joined = b.store.materialize_join()
         doms = {c: b.store.attr_domain(c) for c in cat}
@@ -299,3 +309,122 @@ def test_group_by_feature_overlap_rejected(favorita):
             favorita.store, favorita.vorder, ["store_nbr"],
             group_by=["store_nbr"],
         )
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-output plan (single-pass engine)
+# ---------------------------------------------------------------------------
+
+def test_fused_plan_is_single_pass_regardless_of_cat_count(favorita):
+    """Acceptance criterion: ONE engine traversal however many categorical
+    attributes (and pairs) the batch carries — audited by the engine's
+    pass counter threaded out through ``stats``."""
+    from repro.core.categorical import cat_cofactors_per_pass
+
+    for cat in (["store_nbr"], ["store_nbr", "item_nbr"],
+                ["store_nbr", "item_nbr", "date"]):
+        stats = {}
+        fused = cat_cofactors_factorized(
+            favorita.store, favorita.vorder, CONT, cat, stats=stats
+        )
+        assert stats["passes"] == 1, (cat, stats)
+        per_pass = cat_cofactors_per_pass(
+            favorita.store, favorita.vorder, CONT, cat
+        )
+        np.testing.assert_allclose(
+            fused.matrix(), per_pass.matrix(), rtol=1e-12, atol=1e-12
+        )
+
+
+def test_fused_plan_shares_subtrees(favorita):
+    """node_visits must grow far slower than the per-pass path's
+    O(passes × nodes): distinct (node, live-subset) views are the unit of
+    work, and subtrees below all referenced attributes are shared."""
+    from repro.core import AggregateQuery, FactorizedEngine
+
+    n_nodes = 1 + len(favorita.vorder.variables()) + len(
+        favorita.vorder.relations()
+    )
+    cat = ["store_nbr", "item_nbr", "date"]
+    queries = [AggregateQuery("base", (), 2)]
+    queries += [AggregateQuery(f"g{c}", (c,), 1) for c in cat]
+    queries += [
+        AggregateQuery(f"p{i}{j}", (cat[i], cat[j]), 0)
+        for i in range(3) for j in range(i + 1, 3)
+    ]
+    eng = FactorizedEngine(
+        favorita.store, favorita.vorder, CONT, backend="numpy"
+    )
+    eng.run_batch(queries)
+    assert eng.passes == 1
+    per_pass_visits = len(queries) * n_nodes
+    assert eng.node_visits < per_pass_visits
+    # re-running the same batch pays a second traversal (no cross-batch
+    # memoization) — the counter separates traversals from visits
+    eng.run_batch(queries)
+    assert eng.passes == 2
+
+
+def test_engine_pass_counters_on_store():
+    b = favorita_like(n_dates=6, n_stores=3, n_items=4, seed=2)
+    b.store.cat_cofactors(b.vorder, CONT, CAT)
+    info = b.store.cache_info()
+    assert info["cat_passes"] == 1
+    b.store.cat_cofactors(b.vorder, CONT, CAT)  # cache hit: no new pass
+    assert b.store.cache_info()["cat_passes"] == 1
+
+
+def test_fused_degree_trimming_matches_full(favorita):
+    """Degree-0/1 queries share views with the degree-2 base query — their
+    trimmed blocks must equal the separate full grouped evaluation."""
+    from repro.core import AggregateQuery, FactorizedEngine
+    from repro.core import grouped_cofactors_factorized
+
+    cols = ["transactions", "unit_sales"]
+    eng = FactorizedEngine(
+        favorita.store, favorita.vorder, cols, backend="numpy"
+    )
+    out = eng.run_batch(
+        [
+            AggregateQuery("base", (), 2),
+            AggregateQuery("g", ("store_nbr",), 1),
+            AggregateQuery("p", ("store_nbr", "item_nbr"), 0),
+        ]
+    )
+    full = grouped_cofactors_factorized(
+        favorita.store, favorita.vorder, cols, ["store_nbr"], backend="numpy"
+    )
+    g = out["g"]
+    order = np.argsort(g.ids("store_nbr"))
+    forder = np.argsort(full.ids("store_nbr"))
+    np.testing.assert_allclose(
+        g.count[order], full.count[forder], rtol=0, atol=0
+    )
+    perm = [g.features.index(f) for f in cols]
+    np.testing.assert_allclose(
+        g.lin[order][:, perm], full.lin[forder], rtol=1e-12
+    )
+    assert g.quad is None  # degree 1 never materializes [N, k, k]
+    p = out["p"]
+    assert p.lin is None and p.quad is None  # degree 0: counts only
+    np.testing.assert_allclose(p.count.sum(), out["base"].count[0])
+
+
+def test_many_categorical_attributes_fused():
+    """A fact table with 12 categorical keys: the fused plan still runs in
+    ONE pass, wide-key grouping does not overflow int64 (group_key
+    densification), and the result matches the one-hot oracle."""
+    from repro.data.synthetic import many_cat_schema
+
+    b = many_cat_schema(n_cat=12, domain=7, n_rows=150, seed=1)
+    cat = [f"c{i}" for i in range(12)]
+    stats = {}
+    fused = cat_cofactors_factorized(
+        b.store, b.vorder, ["x", "y"], cat, stats=stats
+    )
+    assert stats["passes"] == 1
+    joined = b.store.materialize_join()
+    doms = {c: b.store.attr_domain(c) for c in cat}
+    x, _ = onehot_design_matrix(joined, ["x", "y"], cat, doms)
+    z = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
+    np.testing.assert_allclose(fused.matrix(), z.T @ z, rtol=1e-9, atol=1e-9)

@@ -175,3 +175,51 @@ def test_flash_matches_model_chunked_path():
     np.testing.assert_allclose(
         np.asarray(out_pl), np.asarray(out_jnp), rtol=1e-4, atol=1e-4
     )
+
+
+@pytest.mark.parametrize("m", [5, 64, 200])
+@pytest.mark.parametrize("doms", [[3], [4, 7], [5, 2, 9]])
+def test_multi_segment_gram_matches_per_column(m, doms):
+    """The fused multi-column kernel == one segment_gram per column, while
+    streaming the data block once."""
+    k = 4
+    x = rand((m, k), jnp.float32)
+    segs = jnp.stack(
+        [
+            jax.random.randint(jax.random.key(i + 1), (m,), 0, d)
+            for i, d in enumerate(doms)
+        ],
+        axis=1,
+    )
+    outs = ops.multi_segment_gram(x, segs, doms)
+    assert len(outs) == len(doms)
+    for i, d in enumerate(doms):
+        expect = ref.segment_gram_ref(x, segs[:, i], d)
+        np.testing.assert_allclose(
+            np.asarray(outs[i]), np.asarray(expect), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_multi_segment_gram_vmem_fallback_matches_fused():
+    """Over-budget accumulators fall back to per-column (chunked)
+    segment_gram — same numbers either way."""
+    m, k, doms = 120, 3, [10, 6]
+    x = rand((m, k), jnp.float32)
+    segs = jnp.stack(
+        [
+            jax.random.randint(jax.random.key(i + 9), (m,), 0, d)
+            for i, d in enumerate(doms)
+        ],
+        axis=1,
+    )
+    fused = ops.multi_segment_gram(x, segs, doms)
+    tiny = ops.multi_segment_gram(x, segs, doms, vmem_budget=200)
+    for a, b in zip(fused, tiny):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_multi_segment_gram_empty_columns():
+    x = rand((10, 2), jnp.float32)
+    assert ops.multi_segment_gram(x, jnp.zeros((10, 0), jnp.int32), []) == []

@@ -28,6 +28,7 @@ from repro.core import (
 )
 from repro.core.categorical import (
     cat_cofactors_factorized,
+    cat_cofactors_per_pass,
     onehot_design_matrix,
 )
 from repro.core.polynomial import polynomial_cofactors
@@ -129,6 +130,37 @@ def test_categorical_sparse_equals_onehot_oracle(bundle):
         sparse.matrix(), z.T @ z, rtol=1e-9, atol=1e-9
     )
     assert sparse.column_names() == ["intercept"] + names
+
+
+@SET
+@given(bundle=schema_params)
+def test_fused_single_pass_equals_per_pass_equals_onehot(bundle):
+    """Three-way equivalence on ANY random acyclic join: the fused
+    multi-output plan (ONE engine traversal for the whole cofactor batch)
+    == the PR 2 per-pass path (one traversal per attribute + pair) to
+    1e-12, and both == the one-hot Gram oracle.  A deterministic mirror
+    (no hypothesis dependency) lives in
+    tests/test_categorical.py::test_random_schemas_sparse_equals_onehot."""
+    cat = ["k0"] + [f"k{i + 1}" for i in range(len(bundle.features) // 2)]
+    cont = bundle.features + [bundle.label]
+    stats = {}
+    fused = cat_cofactors_factorized(
+        bundle.store, bundle.vorder, cont, cat, backend="numpy", stats=stats
+    )
+    assert stats["passes"] == 1  # however many attributes / pairs
+    per_pass = cat_cofactors_per_pass(
+        bundle.store, bundle.vorder, cont, cat, backend="numpy"
+    )
+    np.testing.assert_allclose(
+        fused.matrix(), per_pass.matrix(), rtol=1e-12, atol=1e-12
+    )
+    joined = bundle.store.materialize_join()
+    doms = {c: bundle.store.attr_domain(c) for c in cat}
+    x, _ = onehot_design_matrix(joined, cont, cat, doms)
+    z = np.concatenate([np.ones((x.shape[0], 1)), x], axis=1)
+    np.testing.assert_allclose(
+        fused.matrix(), z.T @ z, rtol=1e-9, atol=1e-9
+    )
 
 
 @SET
