@@ -19,6 +19,14 @@ Exit code 1 on any regression, 0 otherwise.  A missing/empty baseline
 directory exits 0 with a notice — the first nightly run has nothing to
 compare against.  The nightly workflow downloads the previous successful
 run's artifact as the baseline and gates on this script.
+
+Bootstrap robustness: the gate compares *artifacts from different code
+versions*, so shape drift is normal, never fatal — a baseline missing a
+suite file or summary entry (suite added since the last green run), a row
+missing a time/speedup field (field added/renamed), malformed summary
+entries or unparseable JSON on the baseline side are all
+reported-and-skipped, not a crash.  Only problems with the NEW artifact
+(missing/unreadable summary) fail the gate.
 """
 
 from __future__ import annotations
@@ -42,6 +50,29 @@ def _is_speedup_field(name: str) -> bool:
     return name.endswith("_speedup") or "speedup_vs_" in name
 
 
+def _load_json(path: str):
+    """Parse a JSON artifact, returning None instead of raising on corrupt
+    or truncated files (a killed nightly run can leave either behind)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _suite_entries(summary: Dict, side: str) -> List[Dict]:
+    """Well-formed suite entries of a summary; malformed ones (missing
+    ``suite``/``status`` — written by an older runner, or a partial write)
+    are reported and skipped instead of raising KeyError."""
+    out = []
+    for s in summary.get("suites", []):
+        if isinstance(s, dict) and "suite" in s and "status" in s:
+            out.append(s)
+        else:
+            print(f"[compare] malformed {side} summary entry skipped: {s!r}")
+    return out
+
+
 def _row_key(row: Dict, idx: int) -> str:
     """Stable label for a row: its first non-float fields, else its index."""
     parts = [
@@ -63,12 +94,22 @@ def compare_suite_rows(
     emit a fixed sweep order)."""
     out = []
     for idx, (b, n) in enumerate(zip(base_rows, new_rows)):
+        if not isinstance(b, dict) or not isinstance(n, dict):
+            print(f"[compare] {name}: row {idx} is not an object — skipped")
+            continue
         label = _row_key(n, idx)
         for field, bv in b.items():
             nv = n.get(field)
             if not isinstance(bv, (int, float)) or isinstance(bv, bool):
                 continue
             if not isinstance(nv, (int, float)) or isinstance(nv, bool):
+                if _is_time_field(field) or _is_speedup_field(field):
+                    # a gated field the suite no longer emits (renamed or
+                    # removed since the baseline) — report, don't crash
+                    print(
+                        f"[compare] {name}[{label}].{field}: in baseline "
+                        "but missing in new run — skipped"
+                    )
                 continue
             if _is_time_field(field):
                 if nv > bv * (1.0 + threshold) + slack:
@@ -102,15 +143,32 @@ def compare_dirs(
     if not os.path.isfile(new_summary):
         print(f"[compare] new run has no summary at {new_summary}")
         return 1
-    with open(base_summary) as f:
-        base = json.load(f)
-    with open(new_summary) as f:
-        cur = json.load(f)
+    base = _load_json(base_summary)
+    if not isinstance(base, dict):
+        # a corrupt/partial baseline artifact is a bootstrap situation,
+        # not a regression — same treatment as a missing baseline
+        print(
+            f"[compare] baseline summary at {base_summary} is unreadable "
+            "— nothing to compare"
+        )
+        return 0
+    cur = _load_json(new_summary)
+    if not isinstance(cur, dict):
+        print(f"[compare] new summary at {new_summary} is unreadable")
+        return 1
 
     regressions: List[str] = []
-    base_status = {s["suite"]: s["status"] for s in base.get("suites", [])}
-    for s in cur.get("suites", []):
-        if base_status.get(s["suite"]) == "ok" and s["status"] != "ok":
+    base_status = {}
+    for s in _suite_entries(base, "baseline"):
+        base_status[s["suite"]] = s["status"]
+    for s in _suite_entries(cur, "new"):
+        if s["suite"] not in base_status:
+            print(
+                f"[compare] suite {s['suite']!r}: not in baseline summary "
+                "— skipped"
+            )
+            continue
+        if base_status[s["suite"]] == "ok" and s["status"] != "ok":
             regressions.append(
                 f"suite {s['suite']!r}: ok in baseline, "
                 f"{s['status']} in new run"
@@ -125,10 +183,14 @@ def compare_dirs(
         if not os.path.isfile(bpath):
             print(f"[compare] {fname}: new suite, no baseline — skipped")
             continue
-        with open(bpath) as f:
-            base_rows = json.load(f)
-        with open(path) as f:
-            new_rows = json.load(f)
+        base_rows = _load_json(bpath)
+        new_rows = _load_json(path)
+        if base_rows is None:
+            print(f"[compare] {fname}: unreadable baseline JSON — skipped")
+            continue
+        if new_rows is None:
+            print(f"[compare] {fname}: unreadable new JSON — skipped")
+            continue
         if not (isinstance(base_rows, list) and isinstance(new_rows, list)):
             continue
         compared += 1

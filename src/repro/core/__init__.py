@@ -9,6 +9,8 @@ Layering (paper section in parentheses):
 * ``gd``                        — BGD on cofactor matrices (§4.4)
 * ``scaling``                   — feature scaling + θ rescale (§3.3, §4.2)
 * ``regression``                — the full pipeline + Table-2 versions (§4.5)
+* ``fd``                        — functional dependencies: catalog,
+                                  FD-reduced solving, closed-form recovery
 * ``categorical``               — sparse categorical cofactors (AC/DC-style)
 * ``glm``                       — logistic/Poisson over the compressed join
 * ``polynomial``                — beyond-paper degree-d extension (§6 outlook)
@@ -41,6 +43,13 @@ from .factorize import (
     FactorizedEngine,
     GroupedView,
     grouped_cofactors_factorized,
+)
+from .fd import (
+    FDReduction,
+    FunctionalDependency,
+    expand_cat_cofactors,
+    penalty_blocks,
+    recover_blocks,
 )
 from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
 from .glm import (
@@ -82,6 +91,8 @@ __all__ = [
     "CompressedDesign",
     "Dictionary",
     "FactorizedEngine",
+    "FDReduction",
+    "FunctionalDependency",
     "GDConfig",
     "GDResult",
     "GLMConfig",
@@ -105,10 +116,13 @@ __all__ = [
     "cofactors_factorized",
     "compressed_design_factorized",
     "compressed_design_materialized",
+    "expand_cat_cofactors",
     "fit_glm",
     "fit_glm_onehot",
     "glm_regression",
     "grouped_cofactors_factorized",
+    "penalty_blocks",
+    "recover_blocks",
     "onehot_design_matrix",
     "cofactors_from_matrix",
     "cofactors_grouped",

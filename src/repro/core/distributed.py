@@ -141,8 +141,16 @@ def sharded_cat_cofactors(
     domains: dict,
     mesh: Mesh,
     data_axes: Sequence[str] = ("data",),
+    fd=None,  # Optional[repro.core.fd.FDReduction]
 ) -> CatCofactors:
     """Categorical cofactors with rows sharded over the mesh's data axes.
+
+    ``fd`` (an ``FDReduction`` over ``cat``) drops functionally-determined
+    attributes *before* the multi-hot block is built: the concatenated
+    one-hot width shrinks from Σ D_all to Σ D_kept, shrinking both fused
+    matmuls and all three psums.  The result then covers only the kept
+    attributes — expand with ``repro.core.fd.expand_cat_cofactors`` when
+    the full blocks are needed.
 
     Same union-commutativity as ``sharded_cofactors``, extended to the
     grouped blocks: every shard builds ONE concatenated multi-hot block
@@ -158,6 +166,17 @@ def sharded_cat_cofactors(
     mirroring the kernel's out-of-range trick.
     """
     cont, cat = list(cont), list(cat)
+    if fd is not None and fd.dropped:
+        kept_idx = [cat.index(c) for c in fd.kept]
+        return sharded_cat_cofactors(
+            x_cont,
+            cat_ids[:, kept_idx],
+            cont,
+            list(fd.kept),
+            {c: domains[c] for c in fd.kept},
+            mesh,
+            data_axes,
+        )
     axes = tuple(data_axes)
     nshards = 1
     for a in axes:

@@ -57,7 +57,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .relation import composite_key, group_key, sort_merge_join
+from .relation import group_key, join_keys, sort_merge_join
 from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
 
@@ -530,8 +530,13 @@ class FactorizedEngine:
         shared = sorted(set(v1.keys) & set(v2.keys))
         if shared:
             doms = [self.domains[a] for a in shared]
-            k1 = composite_key([v1.keys[a] for a in shared], doms)
-            k2 = composite_key([v2.keys[a] for a in shared], doms)
+            # hash-join fallback past the int64 radix limit (join_keys),
+            # mirroring group_key's escape hatch on the GROUP BY side.
+            k1, k2 = join_keys(
+                [v1.keys[a] for a in shared],
+                [v2.keys[a] for a in shared],
+                doms,
+            )
             i1, i2 = sort_merge_join(k1, k2)
         else:  # cross product (e.g. under the intercept)
             n1, n2 = v1.num_rows, v2.num_rows

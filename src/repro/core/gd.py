@@ -107,15 +107,41 @@ def _bgd_cofactor_jit(cof: jnp.ndarray, trainable: jnp.ndarray, cfg: GDConfig):
     return _run_loop(step, theta0, cfg)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def _bgd_cofactor_penalty_jit(
+    cof: jnp.ndarray, pen: jnp.ndarray, trainable: jnp.ndarray, cfg: GDConfig
+):
+    p = cof.shape[0]
+    theta0 = jnp.zeros((p,), dtype=cfg.dtype).at[-1].set(-1.0)
+
+    def step(theta, alpha):
+        s = cof @ theta
+        return alpha * (s + pen @ theta) * trainable
+
+    return _run_loop(step, theta0, cfg)
+
+
 def bgd_cofactor(
-    cof_matrix: np.ndarray, cfg: Optional[GDConfig] = None
+    cof_matrix: np.ndarray,
+    cfg: Optional[GDConfig] = None,
+    penalty: Optional[np.ndarray] = None,
 ) -> GDResult:
-    """BGD on a cofactor matrix ordered [intercept, features..., label]."""
+    """BGD on a cofactor matrix ordered [intercept, features..., label].
+
+    ``penalty``, when given, is a full [p, p] penalty matrix replacing the
+    scalar ``cfg.ridge * θ`` term with ``penalty @ θ`` — the generalized
+    ridge of the FD-reduced parameter space (``repro.core.fd``).  Its label
+    row/column must be zero (θ_label is pinned to −1)."""
     cfg = cfg or GDConfig()
     cof = jnp.asarray(cof_matrix, dtype=cfg.dtype)
     p = cof.shape[0]
     trainable = jnp.ones((p,), dtype=cfg.dtype).at[-1].set(0.0)
-    theta, alpha, last, it = _bgd_cofactor_jit(cof, trainable, cfg)
+    if penalty is None:
+        theta, alpha, last, it = _bgd_cofactor_jit(cof, trainable, cfg)
+    else:
+        theta, alpha, last, it = _bgd_cofactor_penalty_jit(
+            cof, jnp.asarray(penalty, dtype=cfg.dtype), trainable, cfg
+        )
     return GDResult(
         theta=np.asarray(theta, dtype=np.float64),
         iterations=int(it),
@@ -152,16 +178,25 @@ def bgd_data(z: np.ndarray, cfg: Optional[GDConfig] = None) -> GDResult:
     )
 
 
-def solve_cofactor(cof_matrix: np.ndarray, ridge: float = 0.0) -> np.ndarray:
+def solve_cofactor(
+    cof_matrix: np.ndarray,
+    ridge: float = 0.0,
+    penalty: Optional[np.ndarray] = None,
+) -> np.ndarray:
     """Beyond-paper: closed-form ridge solve of the normal equations.
 
     With ordering [intercept, features..., label] and θ_label = −1, the
     stationarity condition  C_tt·θ_t + ridge·θ_t = C_t,label  is a (p−1)
     linear system — solved directly in float64.  Returns the full θ vector.
+
+    ``penalty`` replaces ``ridge·I`` with an arbitrary [p−1, p−1] penalty
+    matrix over the trainable coordinates — the generalized ridge the
+    FD-reduced solve needs (``repro.core.fd.penalty_blocks``).
     """
     cof = np.asarray(cof_matrix, dtype=np.float64)
     p = cof.shape[0]
-    ctt = cof[: p - 1, : p - 1] + ridge * np.eye(p - 1)
+    pen = penalty if penalty is not None else ridge * np.eye(p - 1)
+    ctt = cof[: p - 1, : p - 1] + pen
     rhs = cof[: p - 1, p - 1]
     theta_t = np.linalg.solve(ctt, rhs)
     return np.concatenate([theta_t, [-1.0]])

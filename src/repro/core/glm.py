@@ -309,15 +309,24 @@ def _hessian(
 
 
 def fit_glm(
-    design: CompressedDesign, config: Optional[GLMConfig] = None
+    design: CompressedDesign,
+    config: Optional[GLMConfig] = None,
+    penalty: Optional[np.ndarray] = None,
 ) -> GLMResult:
-    """Train a GLM on the compressed representation."""
+    """Train a GLM on the compressed representation.
+
+    ``penalty``, when given, is a full [p, p] penalty matrix replacing the
+    default ``diag(0, ridge, …, ridge)`` — the generalized ridge of the
+    FD-reduced parameter space (see ``repro.core.fd``): the penalized NLL
+    gains ``0.5·θᵀ·penalty·θ``, its gradient ``penalty·θ``, the Hessian
+    ``penalty``.  The intercept row/column should be zero to keep it
+    unpenalized."""
     cfg = config or GLMConfig()
     t0 = time.perf_counter()
     if cfg.solver == "irls":
-        res = _fit_irls(design, cfg)
+        res = _fit_irls(design, cfg, penalty=penalty)
     elif cfg.solver == "gd":
-        res = _fit_gd(design, cfg)
+        res = _fit_gd(design, cfg, penalty=penalty)
     else:
         raise ValueError(f"unknown solver {cfg.solver!r}")
     res.seconds_fit = time.perf_counter() - t0
@@ -325,47 +334,83 @@ def fit_glm(
 
 
 def _penalty(cfg: GLMConfig, theta: np.ndarray) -> float:
+    """Plain ridge penalty value (intercept-free) — the scalar twin of
+    ``_default_penalty``, kept as the reference formula for tests."""
     return 0.5 * cfg.ridge * float(theta[1:] @ theta[1:])
 
 
-def _fit_irls(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
+def _default_penalty(cfg: GLMConfig, p: int) -> np.ndarray:
+    pen = np.full(p, cfg.ridge)
+    pen[0] = 0.0  # intercept unpenalized
+    return np.diag(pen)
+
+
+def _fit_irls(
+    design: CompressedDesign,
+    cfg: GLMConfig,
+    penalty: Optional[np.ndarray] = None,
+) -> GLMResult:
     p = design.num_params
     oid = design.offset_ids()
     theta = np.zeros(p, dtype=np.float64)
-    ridge_vec = np.full(p, cfg.ridge)
-    ridge_vec[0] = 0.0  # intercept unpenalized
+    pen = penalty if penalty is not None else _default_penalty(cfg, p)
     m = max(design.total_rows, 1.0)
+
+    def pen_val(t: np.ndarray) -> float:
+        return 0.5 * float(t @ (pen @ t))
 
     eta = design.linpred(theta)
     grad_eta, w, nll = _family_stats(
         cfg.family, eta, design.counts, design.ysum
     )
-    nll += _penalty(cfg, theta)
+    nll += pen_val(theta)
+    # the gradient is carried through the loop: an accepted full Newton
+    # step hands its candidate gradient to the next iteration, so the
+    # common path costs ONE _grad_theta + pen matvec per iteration.
+    grad = _grad_theta(design, grad_eta, oid) + pen @ theta
     converged = False
     it = 0
     for it in range(1, cfg.max_iter + 1):
-        grad = _grad_theta(design, grad_eta, oid) + ridge_vec * theta
         if np.abs(grad).max() / m < cfg.tol:
             converged = True
             break
-        h = _hessian(design, w, oid) + np.diag(ridge_vec)
+        h = _hessian(design, w, oid) + pen
         # tiny jitter keeps the solve well-posed when a category is empty
         h[np.diag_indices(p)] += 1e-10
         step = np.linalg.solve(h, grad)
-        # backtracking line search on the penalized NLL (full Newton step
-        # first — quadratic convergence near the optimum)
-        scale = 1.0
-        for _ in range(30):
+        # full Newton step first: accept on NLL decrease OR on gradient
+        # contraction.  Near the optimum the per-step NLL decrease is far
+        # below fp64 resolution of the total, so an NLL-only gate starts
+        # rejecting (or accepting ~zero-length backtracked variants of)
+        # genuinely contracting steps on rounding noise — two formulations
+        # of the same problem (e.g. the FD-reduced and the full solve)
+        # would then stop ~1e-8 apart; gating on ∇ runs both to the
+        # numerical floor, where they agree to ~1e-12.
+        cand = theta - step
+        g2, w2, nll2 = _family_stats(
+            cfg.family, design.linpred(cand), design.counts, design.ysum
+        )
+        nll2 += pen_val(cand)
+        grad_cand = _grad_theta(design, g2, oid) + pen @ cand
+        if nll2 <= nll + 1e-15 or (
+            np.abs(grad_cand).max() < np.abs(grad).max()
+        ):
+            theta, grad_eta, w, nll, grad = cand, g2, w2, nll2, grad_cand
+            continue
+        # overshoot: backtracking line search on the penalized NLL
+        scale = 0.5
+        for _ in range(29):
             cand = theta - scale * step
             g2, w2, nll2 = _family_stats(
                 cfg.family, design.linpred(cand), design.counts, design.ysum
             )
-            nll2 += _penalty(cfg, cand)
+            nll2 += pen_val(cand)
             if nll2 <= nll + 1e-15:
                 theta, grad_eta, w, nll = cand, g2, w2, nll2
+                grad = _grad_theta(design, g2, oid) + pen @ cand
                 break
             scale *= 0.5
-        else:  # no improving step — at numerical precision
+        else:  # no improving step in either gate — at numerical precision
             converged = True
             break
     return GLMResult(
@@ -409,7 +454,11 @@ def _pairwise_sum2(v):
     return hi[0], lo[0]
 
 
-def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
+def _fit_gd(
+    design: CompressedDesign,
+    cfg: GLMConfig,
+    penalty: Optional[np.ndarray] = None,
+) -> GLMResult:
     """On-device GD via ``lax.while_loop``, mirroring ``gd.py``'s driver
     but adapted to a non-quadratic objective: the bold-driver α decision
     gates on the penalized NLL (accept if it decreased, else revert and
@@ -448,7 +497,29 @@ def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     counts = jnp.asarray(design.counts, dtype=jnp.float32)
     ysum = jnp.asarray(design.ysum, dtype=jnp.float32)
     oid = jnp.asarray(design.offset_ids(), dtype=jnp.int32)
-    ridge_vec = jnp.full((p,), cfg.ridge, dtype=jnp.float32).at[0].set(0.0)
+    if penalty is None:
+        # plain ridge stays a vector: a dense [p, p] matvec per iteration
+        # (and the matrix itself) would be O(p²) for nothing on the large-p
+        # workloads this solver exists for
+        ridge_vec = (
+            jnp.full((p,), cfg.ridge, dtype=jnp.float32).at[0].set(0.0)
+        )
+
+        def pen_grad(theta):
+            return ridge_vec * theta
+
+        def pen_quad(theta):
+            return 0.5 * cfg.ridge * jnp.sum(theta[1:] ** 2)
+
+    else:
+        pen_mat = jnp.asarray(penalty, dtype=jnp.float32)
+
+        def pen_grad(theta):
+            return pen_mat @ theta
+
+        def pen_quad(theta):
+            return 0.5 * theta @ (pen_mat @ theta)
+
     family = cfg.family
     has_cat = bool(design.cat_names)
     if cfg.gd_accum not in ("fp32", "pairs"):
@@ -482,8 +553,8 @@ def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
             g = g.at[1 : 1 + k].set(cont.T @ grad_eta)
         if has_cat:
             g = g.at[oid].add(grad_eta[:, None])
-        g = g + ridge_vec * theta
-        pen = 0.5 * cfg.ridge * jnp.sum(theta[1:] ** 2)
+        g = g + pen_grad(theta)
+        pen = pen_quad(theta)
         nll_hi, err = _two_sum(nll_hi, pen)
         return nll_hi, nll_lo + err, g
 
@@ -530,11 +601,15 @@ def _fit_gd(design: CompressedDesign, cfg: GLMConfig) -> GLMResult:
     _, _, nll = _family_stats(
         family, design.linpred(theta_np), design.counts, design.ysum
     )
+    if penalty is None:
+        pen_final = _penalty(cfg, theta_np)
+    else:
+        pen_final = 0.5 * float(theta_np @ (penalty @ theta_np))
     return GLMResult(
         theta=theta_np,
         iterations=int(it),
         converged=bool(converged),
-        nll=nll + _penalty(cfg, theta_np),
+        nll=nll + pen_final,
         config=cfg,
         names=design.param_names(),
     )
@@ -594,6 +669,51 @@ def glm_predict_raw(
     raise ValueError(f"unknown GLM family {family!r}")
 
 
+def _fd_layout(design: CompressedDesign):
+    """(attr, offset, width) of each kept categorical block inside θ —
+    the layout handle ``repro.core.fd``'s shared penalty/recovery helpers
+    consume."""
+    offs = design.cat_offsets()
+    return [
+        (c, int(offs[i]), design.domains[c])
+        for i, c in enumerate(design.cat_names)
+    ]
+
+
+def _fd_penalty_matrix(design: CompressedDesign, red, ridge: float) -> np.ndarray:
+    """Generalized ridge over the reduced design's θ layout: plain ridge on
+    continuous coordinates and on kept blocks without dependents, the
+    per-root ``(I + Σ RᵀR)^{-1}`` block (scaled by ridge) on roots that
+    absorbed dropped attributes, zero on the intercept."""
+    from .fd import apply_penalty_blocks
+
+    p = design.num_params
+    pen = np.full(p, ridge)
+    pen[0] = 0.0
+    return apply_penalty_blocks(np.diag(pen), red, _fd_layout(design), ridge)
+
+
+def _fd_expand_result(
+    res: GLMResult, design: CompressedDesign, red, full_domains: Dict[str, int]
+) -> GLMResult:
+    """Recover the dropped attributes' coefficients in closed form and
+    re-assemble θ/names in the FULL categorical layout — indistinguishable
+    from an unreduced fit."""
+    from .fd import recover_theta_blocks
+
+    k = len(design.cont_names)
+    parts = [res.theta[: 1 + k]]
+    names = ["intercept"] + list(design.cont_names)
+    for c, blk in recover_theta_blocks(
+        res.theta, red, _fd_layout(design), full_domains
+    ):
+        parts.append(blk)
+        names.extend(f"{c}={g}" for g in range(len(blk)))
+    res.theta = np.concatenate(parts)
+    res.names = names
+    return res
+
+
 def glm_regression(
     store: Store,
     vorder: Optional[VariableOrder],
@@ -603,21 +723,42 @@ def glm_regression(
     config: Optional[GLMConfig] = None,
     factorized: bool = True,
     backend: str = "numpy",
+    use_fds: bool = True,
 ) -> GLMResult:
     """End-to-end GLM training: compress the join (factorized GROUP BY or
     materialized oracle), then fit — the ``linear_regression`` analogue for
-    the categorical/GLM workload."""
+    the categorical/GLM workload.
+
+    ``use_fds=True`` (the default; a no-op unless FDs are registered on the
+    store) trains over the FD-reduced parameter space: functionally
+    determined categorical attributes are dropped from the GROUP BY and
+    from θ (the compression yields the same groups — the dropped ids are a
+    function of the kept ones — but IRLS factors a strictly smaller
+    Hessian), the ridge becomes the generalized per-root penalty, and the
+    dropped coefficients are recovered in closed form afterwards, so the
+    returned θ/names match the full fit exactly."""
     cfg = config or GLMConfig()
+    cont, cat = list(cont), list(cat)
+    red = store.fd_reduction(cat) if use_fds else None
+    if red is not None and red.is_trivial:
+        red = None
+    fit_cat = list(red.kept) if red is not None else cat
     t0 = time.perf_counter()
     if factorized:
         if vorder is None:
             raise ValueError("factorized mode requires a variable order")
         design = compressed_design_factorized(
-            store, vorder, cont, cat, label, backend=backend
+            store, vorder, cont, fit_cat, label, backend=backend
         )
     else:
-        design = compressed_design_materialized(store, cont, cat, label)
+        design = compressed_design_materialized(store, cont, fit_cat, label)
     t1 = time.perf_counter()
-    res = fit_glm(design, cfg)
+    penalty = (
+        _fd_penalty_matrix(design, red, cfg.ridge) if red is not None else None
+    )
+    res = fit_glm(design, cfg, penalty=penalty)
+    if red is not None:
+        full_domains = {c: store.attr_domain(c) for c in red.order}
+        res = _fd_expand_result(res, design, red, full_domains)
     res.seconds_compress = t1 - t0
     return res

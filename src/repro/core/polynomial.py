@@ -27,7 +27,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from .factorize import Cofactors
-from .relation import composite_key, sort_merge_join
+from .relation import group_key, join_keys, sort_merge_join
 from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
 
@@ -109,8 +109,13 @@ class _PolyEngine:
         shared = sorted(set(v1.keys) & set(v2.keys))
         if shared:
             doms = [self.domains[a] for a in shared]
-            k1 = composite_key([v1.keys[a] for a in shared], doms)
-            k2 = composite_key([v2.keys[a] for a in shared], doms)
+            # hash-join fallback past the int64 radix limit, same as the
+            # quadratic engine's _combine and Store._join_pair
+            k1, k2 = join_keys(
+                [v1.keys[a] for a in shared],
+                [v2.keys[a] for a in shared],
+                doms,
+            )
             i1, i2 = sort_merge_join(k1, k2)
         else:
             n1, n2 = v1.num_rows, v2.num_rows
@@ -147,7 +152,9 @@ class _PolyEngine:
         n = view.num_rows
         if remaining:
             doms = [self.domains[a] for a in remaining]
-            key = composite_key([view.keys[a] for a in remaining], doms)
+            # group_key: a GROUP BY only needs within-call injectivity, so
+            # wide key sets densify instead of overflowing (as in factorize)
+            key = group_key([view.keys[a] for a in remaining], doms)
             uniq, first, inv = np.unique(
                 key, return_index=True, return_inverse=True
             )

@@ -133,6 +133,7 @@ def linear_regression(
     use_kernel: bool = False,
     use_cache: bool = False,
     categorical: Sequence[str] = (),
+    use_fds: bool = True,
 ) -> RegressionResult:
     """The paper's ``linearRegression(...)`` pipeline.
 
@@ -162,7 +163,7 @@ def linear_regression(
     if categorical:
         return _linear_regression_categorical(
             store, vorder, features, label, cfg, backend,
-            list(categorical), use_cache, use_kernel,
+            list(categorical), use_cache, use_kernel, use_fds,
         )
 
     t0 = time.perf_counter()
@@ -224,11 +225,22 @@ def _linear_regression_categorical(
     categorical: List[str],
     use_cache: bool,
     use_kernel: bool,
+    use_fds: bool = True,
 ) -> RegressionResult:
     """Least squares with categorical features over the sparse cofactor
     algebra: assemble the one-hot cofactor matrix from grouped aggregates
-    (never the one-hot data) and hand it to the same solvers."""
+    (never the one-hot data) and hand it to the same solvers.
+
+    With ``use_fds=True`` (a no-op unless the store has FDs covering
+    ``categorical``), the solve runs over the FD-reduced parameter space:
+    determined attributes are dropped before the engine traversal (fewer
+    GROUP BY queries, smaller assembled Gram), the ridge becomes the
+    generalized per-root penalty of ``repro.core.fd``, and the dropped
+    coefficients are recovered in closed form — θ and ``names`` come back
+    in the full layout, bit-for-bit the same convention as the unreduced
+    path and equal to it to numerical precision."""
     from .categorical import cat_cofactors_factorized, cat_cofactors_materialized
+    from .fd import apply_penalty_blocks, recover_theta_blocks
 
     missing = set(categorical) - set(features)
     if missing:
@@ -237,26 +249,71 @@ def _linear_regression_categorical(
         )
     cont = [f for f in features if f not in categorical] + [label]
 
+    red = store.fd_reduction(categorical) if use_fds else None
+    if red is not None and red.is_trivial:
+        red = None
+    run_cat = list(red.kept) if red is not None else categorical
+
     t0 = time.perf_counter()
     if cfg.factorized:
         if use_cache:
-            cof = store.cat_cofactors(vorder, cont, categorical, backend="numpy")
+            cof = store.cat_cofactors(
+                vorder, cont, categorical, backend="numpy",
+                reduce_fds=red is not None,
+            )
         else:
             cof = cat_cofactors_factorized(
-                store, vorder, cont, categorical, backend=backend
+                store, vorder, cont, run_cat, backend=backend
             )
     else:
         cof = cat_cofactors_materialized(
-            store, cont, categorical, use_kernel=use_kernel
+            store, cont, run_cat, use_kernel=use_kernel
         )
     mat, names = cof.regression_matrix(label)
     t1 = time.perf_counter()
+
+    penalty = None
+    layout = None
+    if red is not None:
+        # kept-block layout inside [intercept, cont\label, kept blocks,
+        # label] — shared by the penalty assembly and the recovery below
+        layout = []
+        off = 1 + (len(cont) - 1)  # intercept + continuous (label removed)
+        for c in cof.cat:
+            layout.append((c, off, cof.domains[c]))
+            off += cof.domains[c]
+        # generalized ridge: the paper's flat 0.006·θ on everything except
+        # the per-root blocks, which carry ridge·(I + Σ RᵀR)^{-1} so the
+        # reduced optimum maps exactly onto the full one (repro.core.fd).
+        p = mat.shape[0]
+        penalty = apply_penalty_blocks(
+            cfg.ridge * np.eye(p - 1), red, layout, cfg.ridge
+        )
+
     if cfg.solver == "closed_form":
-        theta = solve_cofactor(mat, ridge=cfg.ridge)
+        theta = solve_cofactor(mat, ridge=cfg.ridge, penalty=penalty)
         iters = 0
     else:
-        res: GDResult = bgd_cofactor(mat, cfg.gd())
+        bgd_pen = None
+        if penalty is not None:
+            bgd_pen = np.zeros((mat.shape[0], mat.shape[0]))
+            bgd_pen[: -1, : -1] = penalty
+        res: GDResult = bgd_cofactor(mat, cfg.gd(), penalty=bgd_pen)
         theta, iters = res.theta, res.iterations
+
+    if red is not None:
+        # closed-form recovery of the dropped blocks, then reassembly in
+        # the FULL layout [intercept, cont\label, all cats in caller
+        # order, label] — indistinguishable from the unreduced solve.
+        full_domains = {c: store.attr_domain(c) for c in red.order}
+        parts = [theta[: 1 + (len(cont) - 1)]]
+        names = ["intercept"] + [f for f in cont if f != label]
+        for c, blk in recover_theta_blocks(theta, red, layout, full_domains):
+            parts.append(blk)
+            names.extend(f"{c}={g}" for g in range(len(blk)))
+        parts.append(theta[-1:])  # θ_label = −1
+        names.append(label)
+        theta = np.concatenate(parts)
     t2 = time.perf_counter()
     return RegressionResult(
         theta=theta,

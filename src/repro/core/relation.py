@@ -29,6 +29,9 @@ __all__ = [
     "Relation",
     "composite_key",
     "group_key",
+    "hash_join_keys",
+    "join_keys",
+    "radix_fits",
     "sort_merge_join",
     "group_ids",
 ]
@@ -173,15 +176,71 @@ def composite_key(
     if not cols:
         # A zero-attribute key: every row in the same (single) group.
         raise ValueError("composite_key requires at least one column")
-    total = 1
-    for d in domains:
-        total *= max(int(d), 1)
-        if total > np.iinfo(np.int64).max // 4:
-            raise OverflowError("composite key domain exceeds int64 range")
+    if not radix_fits(domains):
+        raise OverflowError("composite key domain exceeds int64 range")
     out = np.zeros_like(cols[0], dtype=np.int64)
     for col, dom in zip(cols, domains):
         out = out * max(int(dom), 1) + col.astype(np.int64)
     return out
+
+
+def radix_fits(domains: Sequence[int]) -> bool:
+    """Whether the mixed-radix domain product stays inside the int64 budget
+    (``max // 4`` headroom) — the single overflow rule: ``composite_key``
+    raises when this is False, ``join_keys`` switches to the hash join."""
+    total = 1
+    limit = np.iinfo(np.int64).max // 4
+    for d in domains:
+        total *= max(int(d), 1)
+        if total > limit:
+            return False
+    return True
+
+
+def hash_join_keys(
+    left_cols: Sequence[np.ndarray], right_cols: Sequence[np.ndarray]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Dictionary-encoded join keys with no radix limit.
+
+    Densifies the *concatenation* of both sides' key tuples to their
+    observed uniques (the hash-join build side, vectorized as np.unique),
+    so equal tuples receive equal codes **across both inputs** — exactly
+    the contract an equi-join needs, which the within-call-only
+    :func:`group_key` cannot give for two separately-coded inputs.  Codes
+    are call-local: never mix keys from different calls.
+    """
+    if not left_cols:
+        raise ValueError("hash_join_keys requires at least one column")
+    nl = len(left_cols[0])
+    cols, doms = [], []
+    for lc, rc in zip(left_cols, right_cols):
+        col = np.concatenate([lc, rc]).astype(np.int64)
+        cols.append(col)
+        doms.append(int(col.max()) + 1 if len(col) else 1)
+    # group_key's within-call-only contract is exactly satisfied: both
+    # sides are coded in this one call, so equal tuples share a code.
+    key = group_key(cols, doms)
+    return key[:nl], key[nl:]
+
+
+def join_keys(
+    left_cols: Sequence[np.ndarray],
+    right_cols: Sequence[np.ndarray],
+    domains: Sequence[int],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Join keys for a two-sided equi-join on the same attribute list.
+
+    Strict mixed-radix :func:`composite_key` while the domain product fits
+    int64 (cheapest, and codes are globally stable); automatic
+    :func:`hash_join_keys` fallback past the limit — many/wide shared
+    attributes no longer die with ``OverflowError``.
+    """
+    if radix_fits(domains):
+        return (
+            composite_key(left_cols, domains),
+            composite_key(right_cols, domains),
+        )
+    return hash_join_keys(left_cols, right_cols)
 
 
 def group_key(

@@ -41,7 +41,14 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .relation import Relation, composite_key, sort_merge_join
+from .fd import (
+    FDReduction,
+    FunctionalDependency,
+    extend_mapping,
+    reduction_plan,
+    witnessed_mapping,
+)
+from .relation import Relation, join_keys, sort_merge_join
 
 if TYPE_CHECKING:  # avoid a circular import at runtime (factorize -> store)
     from .factorize import Cofactors
@@ -68,6 +75,10 @@ class Store:
         # categorical signature (cont tuple, cat tuple) and the delta
         # maintenance runs the grouped engine instead of the plain one.
         self._cat_cache: Dict[tuple, _CacheEntry] = {}
+        # functional-dependency catalog: (lhs, rhs) -> FD with its witnessed
+        # id mapping.  Declared FDs are contracts; inferred ones are dropped
+        # when an append falsifies them (see append / _plan_fd_updates).
+        self._fds: Dict[Tuple[str, str], FunctionalDependency] = {}
         # signature -> VariableOrder, kept so maintenance can re-run the engine
         self._vorders: Dict[tuple, "VariableOrder"] = {}
         # col -> (sum, max|x|, count) over the union of relations with col
@@ -85,11 +96,49 @@ class Store:
     # -- catalog -------------------------------------------------------------
     def put(self, rel: Relation) -> None:
         """Insert or replace a relation.  Replacement is an arbitrary
-        mutation, so cache entries covering the name are invalidated."""
+        mutation, so cache entries covering the name are invalidated, and
+        every FD touching the relation's attributes is re-verified from
+        scratch (a declared FD that no longer holds raises; an inferred one
+        is silently dropped)."""
         old = self._relations.get(rel.name)
+        touched = set(rel.keys) | set(old.keys if old else ())
+        stale_fds = [
+            key for key in self._fds if key[0] in touched or key[1] in touched
+        ]
         self._relations[rel.name] = rel
+        reverified: Dict[Tuple[str, str], np.ndarray] = {}
+        dropped_fds = []
+        for key in stale_fds:
+            fd = self._fds[key]
+            try:
+                dom = self.attr_domain(key[0])
+            except ValueError:  # lhs attribute vanished from the catalog
+                dom = 0
+            mapping = (
+                witnessed_mapping(self.relations(), key[0], key[1], dom)
+                if dom
+                else None
+            )
+            if mapping is None:
+                if fd.source == "declared":
+                    if old is None:
+                        self._relations.pop(rel.name)
+                    else:
+                        self._relations[rel.name] = old
+                    raise ValueError(
+                        f"put({rel.name!r}) violates declared FD "
+                        f"{key[0]} → {key[1]}"
+                    )
+                dropped_fds.append(key)
+            else:
+                reverified[key] = mapping
+        for key in dropped_fds:
+            del self._fds[key]
+        for key, mapping in reverified.items():
+            self._fds[key].mapping = mapping
         self.version += 1
         self._invalidate(rel.name)
+        self._invalidate_fd_entries()
         self._restamp()  # survivors stay valid
         for attr in set(rel.attributes) | set(old.attributes if old else ()):
             self._moments.pop(attr, None)
@@ -125,6 +174,126 @@ class Store:
             )
         return max(doms)
 
+    # -- functional dependencies ----------------------------------------------
+    def add_fd(self, lhs: str, rhs: str) -> FunctionalDependency:
+        """Declare the functional dependency ``lhs → rhs`` between two
+        dictionary-encoded key attributes.  Verified against the data now
+        (raises if no relation witnesses the pair or any witness violates
+        functionality) and re-checked on every ``append``/``put`` — a
+        mutation that breaks a declared FD is rejected."""
+        mapping = witnessed_mapping(
+            self.relations(), lhs, rhs, self.attr_domain(lhs)
+        )
+        if mapping is None:
+            raise ValueError(
+                f"functional dependency {lhs} → {rhs} does not hold (or no "
+                "relation contains both attributes as keys)"
+            )
+        fd = FunctionalDependency(lhs, rhs, mapping, "declared")
+        self._fds[(lhs, rhs)] = fd
+        self._invalidate_fd_entries()
+        return fd
+
+    def infer_fds(
+        self, attrs: Optional[Sequence[str]] = None
+    ) -> List[Tuple[str, str]]:
+        """Scan the catalog for candidate FDs ``f → g`` and register every
+        verified one as *inferred* (falsifiable by later appends).
+
+        Candidates are ordered pairs of key attributes co-located in at
+        least one relation — the only pairs whose FD status is decidable
+        without computing the join (and, by the projection argument in
+        ``repro.core.fd``, exactly the witnesses that make the FD sound on
+        the join result).  ``attrs`` restricts the candidate universe.
+        Returns the newly registered (lhs, rhs) pairs.
+        """
+        universe = set(attrs) if attrs is not None else None
+        pairs: Dict[Tuple[str, str], None] = {}
+        for rel in self._relations.values():
+            keys = [
+                a
+                for a in rel.keys
+                if universe is None or a in universe
+            ]
+            for lhs in keys:
+                for rhs in keys:
+                    if lhs != rhs:
+                        pairs.setdefault((lhs, rhs))
+        found: List[Tuple[str, str]] = []
+        for lhs, rhs in pairs:
+            if (lhs, rhs) in self._fds:
+                continue
+            mapping = witnessed_mapping(
+                self.relations(), lhs, rhs, self.attr_domain(lhs)
+            )
+            if mapping is not None:
+                self._fds[(lhs, rhs)] = FunctionalDependency(
+                    lhs, rhs, mapping, "inferred"
+                )
+                found.append((lhs, rhs))
+        if found:
+            self._invalidate_fd_entries()
+        return found
+
+    def fds(self) -> List[FunctionalDependency]:
+        return list(self._fds.values())
+
+    def drop_fd(self, lhs: str, rhs: str) -> None:
+        self._fds.pop((lhs, rhs), None)
+        self._invalidate_fd_entries()
+
+    def fd_reduction(self, cat: Sequence[str]) -> FDReduction:
+        """The FD reduction of a categorical attribute list under the
+        current catalog: which attributes a solver can drop (they are
+        functionally determined by an earlier one) and the id maps needed
+        to recover their coefficients in closed form."""
+        domains = {a: self.attr_domain(a) for a in cat}
+        return reduction_plan(self._fds, list(cat), domains)
+
+    def _plan_fd_updates(
+        self, delta: Relation
+    ) -> Tuple[List[Tuple[str, str]], Dict[Tuple[str, str], np.ndarray]]:
+        """Pure check of ``delta`` against the FD catalog: returns the
+        inferred FDs it falsifies and the mapping extensions (new lhs ids)
+        it implies; raises on a declared-FD violation — before the caller
+        has mutated anything."""
+        falsified: List[Tuple[str, str]] = []
+        extensions: Dict[Tuple[str, str], np.ndarray] = {}
+        for key, fd in self._fds.items():
+            lhs, rhs = key
+            if lhs not in delta.keys or rhs not in delta.keys:
+                continue
+            l = delta.keys[lhs].astype(np.int64)
+            r = delta.keys[rhs].astype(np.int64)
+            size = max(
+                len(fd.mapping), int(l.max()) + 1 if len(l) else 0
+            )
+            mapping = np.full(size, -1, dtype=np.int64)
+            mapping[: len(fd.mapping)] = fd.mapping
+            if extend_mapping(mapping, l, r):
+                extensions[key] = mapping
+            elif fd.source == "declared":
+                raise ValueError(
+                    f"append violates declared FD {lhs} → {rhs}"
+                )
+            else:
+                falsified.append(key)
+        return falsified, extensions
+
+    def _invalidate_fd_entries(self) -> None:
+        """Drop categorical cache entries whose FD-reduced shape no longer
+        matches the catalog (an FD was added, dropped, or falsified).
+        Entries keyed with a trivial/no reduction are untouched."""
+        stale = []
+        for key in self._cat_cache:
+            fdsig = key[4]
+            if fdsig is None:
+                continue
+            if self.fd_reduction(list(key[2])).signature() != fdsig:
+                stale.append(key)
+        for key in stale:
+            del self._cat_cache[key]
+
     # -- incremental updates ---------------------------------------------------
     def append(self, name: str, delta: Relation) -> Relation:
         """Append the rows of ``delta`` to relation ``name`` (batch update).
@@ -135,6 +304,18 @@ class Store:
         cofactors are computed against the pre-merge catalog and summed in
         (see module docstring); entries over other relations are untouched.
         Returns the merged relation now in the catalog.
+
+        FD maintenance: the delta is checked against the FD catalog first —
+        a violated *declared* FD rejects the append outright (nothing
+        mutated); a falsified *inferred* FD is dropped after the fold and
+        every FD-reduced cache entry built under it is invalidated; new lhs
+        ids with consistent rhs values extend the FD mappings in place.
+
+        Exception safety: if any delta fold raises mid-loop, every cache
+        entry covering ``name`` is invalidated (some may already hold the
+        folded delta while the catalog still holds the pre-append rows) and
+        the exception re-raised — the catalog, moments and FD catalog are
+        left exactly as before the call.
         """
         if name not in self._relations:
             raise KeyError(f"append target {name!r} not in catalog")
@@ -149,61 +330,84 @@ class Store:
                 values=dict(delta.values),
                 domains=dict(delta.domains),
             )
-            # one delta factorization per (vorder, backend) over the union
-            # of cached feature sets; entries derive via project — entries
-            # differing only in features don't pay the join again.
-            groups: Dict[tuple, List[tuple]] = {}
-            for key, entry in self._cofactor_cache.items():
-                if name in entry.relations:
-                    sig, feats, backend = key
-                    groups.setdefault((sig, backend), []).append(key)
-            for (sig, backend), keys in groups.items():
-                feats_union = list(
-                    dict.fromkeys(f for k in keys for f in k[1])
-                )
-                delta_cof = self._delta_cofactors(
-                    name, delta_named, sig, feats_union, backend
-                )
-                for key in keys:
-                    entry = self._cofactor_cache[key]
-                    entry.cofactors = entry.cofactors + delta_cof.project(
-                        list(key[1])
+            # FD check is a pure plan: raises on a declared-FD violation
+            # before anything below has mutated.
+            falsified, extensions = self._plan_fd_updates(delta_named)
+            try:
+                # one delta factorization per (vorder, backend) over the
+                # union of cached feature sets; entries derive via project —
+                # entries differing only in features don't pay the join
+                # again.
+                groups: Dict[tuple, List[tuple]] = {}
+                for key, entry in self._cofactor_cache.items():
+                    if name in entry.relations:
+                        sig, feats, backend = key
+                        groups.setdefault((sig, backend), []).append(key)
+                for (sig, backend), keys in groups.items():
+                    feats_union = list(
+                        dict.fromkeys(f for k in keys for f in k[1])
                     )
-            # categorical entries: same union algebra, grouped engine, and
-            # the same delta-sharing scheme as above — one delta pass per
-            # (vorder, backend) over the union feature sets, entries derive
-            # via ``CatCofactors.project``.  The delta carries the delta's
-            # (possibly larger) domains; ``__add__`` zero-pads, so unseen
-            # category ids appended here grow the cached blocks in place.
-            cat_groups: Dict[tuple, List[tuple]] = {}
-            for key, entry in self._cat_cache.items():
-                if name in entry.relations:
-                    sig, cont, cat, backend = key
-                    cat_groups.setdefault((sig, backend), []).append(key)
-            for (sig, backend), keys in cat_groups.items():
-                cont_union = list(
-                    dict.fromkeys(f for k in keys for f in k[1])
-                )
-                cat_union = list(
-                    dict.fromkeys(c for k in keys for c in k[2])
-                )
-                delta_cof = self._delta_cat_cofactors(
-                    name, delta_named, sig, cont_union, cat_union, backend
-                )
-                for key in keys:
-                    entry = self._cat_cache[key]
-                    entry.cofactors = entry.cofactors + delta_cof.project(
-                        list(key[1]), list(key[2])
+                    delta_cof = self._delta_cofactors(
+                        name, delta_named, sig, feats_union, backend
                     )
-            for attr, (s, mx, cnt) in list(self._moments.items()):
-                if attr not in delta_named.attributes:
-                    continue
-                col = delta_named.column(attr).astype(np.float64)
-                self._moments[attr] = (
-                    s + float(col.sum()),
-                    max(mx, float(np.abs(col).max())),
-                    cnt + len(col),
-                )
+                    for key in keys:
+                        entry = self._cofactor_cache[key]
+                        entry.cofactors = entry.cofactors + delta_cof.project(
+                            list(key[1])
+                        )
+                # categorical entries: same union algebra, grouped engine,
+                # and the same delta-sharing scheme as above — one delta
+                # pass per (vorder, backend) over the union feature sets,
+                # entries derive via ``CatCofactors.project``.  FD-reduced
+                # entries only carry their KEPT attributes
+                # (entry.cofactors.cat), so the union delta is computed over
+                # kept attributes too — the reduced blocks are plain
+                # cofactors over the kept set and fold with the same
+                # algebra.  The delta carries the delta's (possibly larger)
+                # domains; ``__add__`` zero-pads, so unseen category ids
+                # appended here grow the cached blocks in place.
+                cat_groups: Dict[tuple, List[tuple]] = {}
+                for key, entry in self._cat_cache.items():
+                    if name in entry.relations:
+                        sig, cont, cat, backend, fdsig = key
+                        cat_groups.setdefault((sig, backend), []).append(key)
+                for (sig, backend), keys in cat_groups.items():
+                    cont_union = list(
+                        dict.fromkeys(f for k in keys for f in k[1])
+                    )
+                    cat_union = list(
+                        dict.fromkeys(
+                            c
+                            for k in keys
+                            for c in self._cat_cache[k].cofactors.cat
+                        )
+                    )
+                    delta_cof = self._delta_cat_cofactors(
+                        name, delta_named, sig, cont_union, cat_union, backend
+                    )
+                    for key in keys:
+                        entry = self._cat_cache[key]
+                        entry.cofactors = entry.cofactors + delta_cof.project(
+                            list(key[1]), list(entry.cofactors.cat)
+                        )
+                for attr, (s, mx, cnt) in list(self._moments.items()):
+                    if attr not in delta_named.attributes:
+                        continue
+                    col = delta_named.column(attr).astype(np.float64)
+                    self._moments[attr] = (
+                        s + float(col.sum()),
+                        max(mx, float(np.abs(col).max())),
+                        cnt + len(col),
+                    )
+            except Exception:
+                self._invalidate(name)
+                raise
+            for key in falsified:
+                del self._fds[key]
+            for key, mapping in extensions.items():
+                self._fds[key].mapping = mapping
+            if falsified:
+                self._invalidate_fd_entries()
         self._relations[name] = merged
         self.version += 1
         self._restamp()
@@ -320,6 +524,7 @@ class Store:
         cat: Sequence[str],
         backend: str = "numpy",
         refresh: bool = False,
+        reduce_fds: bool = False,
     ):
         """Cached categorical cofactors over the factorized join — the
         categorical twin of :meth:`cofactors`.  The cache key includes the
@@ -329,11 +534,22 @@ class Store:
         Cold computes and delta folds both run the fused multi-output plan
         — exactly one engine traversal each, audited by ``cat_passes`` /
         ``cat_node_visits`` in :meth:`cache_info`.
+
+        ``reduce_fds=True`` applies the FD reduction of ``cat`` under the
+        store's catalog: functionally-determined attributes are dropped
+        before the traversal (fewer GROUP BY queries, smaller COO blocks)
+        and the returned ``CatCofactors`` covers only the KEPT attributes
+        (``store.fd_reduction(cat)`` describes the mapping; expansion /
+        coefficient recovery live in ``repro.core.fd``).  The cache key
+        carries the reduction *signature*, so entries built under an FD
+        that is later falsified are invalidated rather than re-served.
         Returns a ``repro.core.categorical.CatCofactors``; do not mutate."""
         from .categorical import cat_cofactors_factorized
 
         sig = vorder.signature()
-        key = (sig, tuple(cont), tuple(cat), backend)
+        red = self.fd_reduction(cat) if reduce_fds else None
+        fdsig = red.signature() if red is not None else None
+        key = (sig, tuple(cont), tuple(cat), backend, fdsig)
         entry = self._cat_cache.get(key)
         if (
             entry is not None
@@ -341,9 +557,10 @@ class Store:
             and entry.version == self.version
         ):
             return entry.cofactors
+        run_cat = list(red.kept) if red is not None else list(cat)
         stats: Dict[str, int] = {}
         cof = cat_cofactors_factorized(
-            self, vorder, list(cont), list(cat), backend=backend, stats=stats
+            self, vorder, list(cont), run_cat, backend=backend, stats=stats
         )
         self.cat_passes += stats["passes"]
         self.cat_node_visits += stats["node_visits"]
@@ -359,6 +576,7 @@ class Store:
         return {
             "entries": len(self._cofactor_cache),
             "cat_entries": len(self._cat_cache),
+            "fds": len(self._fds),
             "version": self.version,
             "cat_passes": self.cat_passes,
             "cat_node_visits": self.cat_node_visits,
@@ -405,8 +623,14 @@ def _join_pair(left: Relation, right: Relation) -> Relation:
     shared = sorted(set(left.keys) & set(right.keys))
     if shared:
         doms = [max(left.domains[a], right.domains[a]) for a in shared]
-        lk = composite_key([left.keys[a] for a in shared], doms)
-        rk = composite_key([right.keys[a] for a in shared], doms)
+        # join_keys falls back to the dictionary-encoded hash join when the
+        # mixed-radix product of the shared domains overflows int64 (many /
+        # wide shared attributes), keeping strict composite keys otherwise.
+        lk, rk = join_keys(
+            [left.keys[a] for a in shared],
+            [right.keys[a] for a in shared],
+            doms,
+        )
         il, ir = sort_merge_join(lk, rk)
     else:  # cross product
         nl, nr = left.num_rows, right.num_rows

@@ -130,6 +130,82 @@ def test_compare_detects_new_suite_failure(tmp_path, capsys):
     assert "ok in baseline" in capsys.readouterr().out
 
 
+def test_compare_baseline_missing_field_skipped(tmp_path, capsys):
+    """A time/speedup field present in the baseline but gone from the new
+    run (suite changed since the last green run) is reported-and-skipped,
+    never a KeyError/crash."""
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": []}
+    base = [{"size": 10, "old_metric_s": 1.0, "gone_speedup": 2.0}]
+    new = [{"size": 10, "fresh_metric_s": 1.0}]
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    _write_artifact(str(tmp_path / "new"), summary, {"a": new})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+    out = capsys.readouterr().out
+    assert "old_metric_s" in out and "skipped" in out
+
+
+def test_compare_malformed_summary_entries_skipped(tmp_path, capsys):
+    """Summary entries without suite/status (older runner, partial write)
+    must not crash the gate."""
+    from benchmarks.compare import compare_dirs
+
+    base = {"suites": [{"name": "legacy-shape"}, "not-even-a-dict"]}
+    new = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    _write_artifact(str(tmp_path / "base"), base, {})
+    _write_artifact(str(tmp_path / "new"), new, {})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+    out = capsys.readouterr().out
+    assert "malformed" in out
+    assert "not in baseline summary" in out  # suite 'a' has no baseline row
+
+
+def test_compare_corrupt_baseline_is_bootstrap_not_crash(tmp_path):
+    """Unparseable baseline JSON ≡ missing baseline: exit 0 with a notice
+    (first nightly after an artifact corruption must still go green)."""
+    from benchmarks.compare import compare_dirs
+
+    base = tmp_path / "base"
+    os.makedirs(base)
+    with open(base / "summary.json", "w") as f:
+        f.write("{truncated")
+    _write_artifact(
+        str(tmp_path / "new"),
+        {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]},
+        {},
+    )
+    assert compare_dirs(str(base), str(tmp_path / "new")) == 0
+
+
+def test_compare_corrupt_baseline_suite_file_skipped(tmp_path, capsys):
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": []}
+    _write_artifact(str(tmp_path / "base"), summary, {})
+    with open(tmp_path / "base" / "a.json", "w") as f:
+        f.write("[{]")
+    _write_artifact(
+        str(tmp_path / "new"), summary, {"a": [{"size": 1, "t_s": 1.0}]}
+    )
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+    assert "unreadable baseline JSON" in capsys.readouterr().out
+
+
+def test_compare_non_dict_rows_skipped(tmp_path, capsys):
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": []}
+    _write_artifact(
+        str(tmp_path / "base"), summary, {"a": [[1, 2, 3], {"x_s": 1.0}]}
+    )
+    _write_artifact(
+        str(tmp_path / "new"), summary, {"a": [[1, 2], {"x_s": 1.1}]}
+    )
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+    assert "not an object" in capsys.readouterr().out
+
+
 def test_compare_micro_timings_stay_quiet(tmp_path):
     """Sub-ms rows double all the time on shared runners — the absolute
     slack must keep them below the gate."""

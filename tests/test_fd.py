@@ -1,0 +1,451 @@
+"""Functional-dependency-aware solving: catalog, inference, FD-reduced
+training with closed-form recovery, cache/append threading, and the
+append exception-safety guarantees that ride along.
+
+The correctness anchor: with ``f → g`` on every join row, the model
+reparametrized onto the reduced space (γ_f = θ_f + Rᵀθ_g, θ_g dropped)
+plus the generalized per-root ridge is EXACTLY the full problem after the
+inner minimization over θ_g — so FD-reduced training must match the full
+solve to numerical precision, while issuing strictly fewer GROUP BY
+queries.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.categorical as catmod
+from repro.core import (
+    VERSIONS,
+    GLMConfig,
+    cofactors_factorized,
+    glm_regression,
+    linear_regression,
+)
+from repro.core.categorical import cat_cofactors_factorized
+from repro.core.fd import (
+    compose_maps,
+    expand_cat_cofactors,
+    recover_blocks,
+)
+from repro.core.relation import Relation
+from repro.core.store import Store
+from repro.data.synthetic import fd_star_schema
+
+CAT2 = ["c0", "c1", "d0", "d1"]
+FEATS2 = ["x"] + CAT2
+
+
+@pytest.fixture()
+def bundle():
+    b = fd_star_schema(n_cat=2, domain=12, dep_domain=4, n_rows=400, seed=5)
+    b.store.infer_fds()
+    return b
+
+
+def _dim_map(store, i: int) -> np.ndarray:
+    dim = store.get(f"Dim{i}")
+    m = np.full(store.attr_domain(f"c{i}"), -1, dtype=np.int64)
+    m[dim.keys[f"c{i}"].astype(np.int64)] = dim.keys[f"d{i}"].astype(np.int64)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Catalog: inference, declaration, reduction planning
+# ---------------------------------------------------------------------------
+
+def test_infer_fds_finds_planted(bundle):
+    pairs = {(f.lhs, f.rhs) for f in bundle.store.fds()}
+    assert ("c0", "d0") in pairs and ("c1", "d1") in pairs
+    fd = {(f.lhs, f.rhs): f for f in bundle.store.fds()}[("c0", "d0")]
+    assert fd.source == "inferred"
+    np.testing.assert_array_equal(fd.mapping, _dim_map(bundle.store, 0))
+
+
+def test_infer_rejects_non_functions(bundle):
+    # domain 12 > dep_domain 4: the reverse direction collides (pigeonhole)
+    pairs = {(f.lhs, f.rhs) for f in bundle.store.fds()}
+    assert ("d0", "c0") not in pairs
+
+
+def test_add_fd_declared_and_violations(bundle):
+    store = bundle.store
+    fd = store.add_fd("c0", "d0")  # upgrade the inferred FD to a contract
+    assert fd.source == "declared"
+    with pytest.raises(ValueError):
+        store.add_fd("d0", "c0")  # not a function
+    with pytest.raises(ValueError):
+        store.add_fd("c0", "x")  # value column — never a witnessed key pair
+    with pytest.raises(ValueError):
+        store.add_fd("c0", "d1")  # no relation contains both
+
+
+def test_reduction_plan_composes_chains():
+    # a → b (witness R), b → c (witness S): [a, b, c] reduces to kept [a]
+    # with c's map composed through b.
+    a = np.array([0, 1, 2, 3], dtype=np.int32)
+    b = np.array([0, 0, 1, 1], dtype=np.int32)
+    s_b = np.array([0, 1], dtype=np.int32)
+    s_c = np.array([1, 0], dtype=np.int32)
+    store = Store(
+        [
+            Relation.from_columns("R", {"a": a, "b": b}, {"v": np.zeros(4)}),
+            Relation.from_columns("S", {"b": s_b, "c": s_c}, {"w": np.zeros(2)}),
+        ]
+    )
+    store.infer_fds()
+    red = store.fd_reduction(["a", "b", "c"])
+    assert red.kept == ["a"]
+    assert set(red.dropped) == {"b", "c"}
+    root_b, map_b = red.dropped["b"]
+    root_c, map_c = red.dropped["c"]
+    assert root_b == root_c == "a"
+    np.testing.assert_array_equal(map_b, [0, 0, 1, 1])
+    np.testing.assert_array_equal(map_c, [1, 1, 0, 0])
+    # compose_maps mirrors the plan's chain composition
+    np.testing.assert_array_equal(
+        compose_maps(map_b, np.array([1, 0], np.int64)), map_c
+    )
+
+
+def test_reduction_trivial_without_fds():
+    b = fd_star_schema(n_cat=1, domain=6, dep_domain=3, n_rows=50, seed=0)
+    red = b.store.fd_reduction(["c0", "d0"])
+    assert red.is_trivial and red.kept == ["c0", "d0"]
+
+
+# ---------------------------------------------------------------------------
+# FD-reduced training ≡ full solve (the tentpole identity)
+# ---------------------------------------------------------------------------
+
+def test_fd_reduced_linear_equals_full(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    full = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_fds=False,
+    )
+    red = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_fds=True,
+    )
+    assert full.names == red.names  # indistinguishable layout
+    np.testing.assert_allclose(red.theta, full.theta, rtol=0, atol=1e-10)
+
+
+def test_fd_reduced_glm_equals_full(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    cfg = GLMConfig(family="logistic", ridge=1e-3, tol=1e-14)
+    full = glm_regression(
+        store, vorder, ["x"], CAT2, "promo", cfg, backend="numpy",
+        use_fds=False,
+    )
+    red = glm_regression(
+        store, vorder, ["x"], CAT2, "promo", cfg, backend="numpy",
+        use_fds=True,
+    )
+    assert full.names == red.names
+    assert len(red.theta) == len(full.theta)
+    np.testing.assert_allclose(red.theta, full.theta, rtol=0, atol=1e-10)
+    # the reduced penalized NLL equals the full one at the recovered θ —
+    # the inner minimization is exact, not approximate
+    assert abs(red.nll - full.nll) < 1e-8
+
+
+def test_fd_reduction_issues_fewer_group_by_queries(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    red = store.fd_reduction(CAT2)
+    assert set(red.dropped) == {"d0", "d1"}
+    stats_full, stats_red = {}, {}
+    cat_cofactors_factorized(
+        store, vorder, ["x", "y"], CAT2, backend="numpy", stats=stats_full
+    )
+    cat_cofactors_factorized(
+        store, vorder, ["x", "y"], red.kept, backend="numpy",
+        stats=stats_red,
+    )
+    assert stats_red["passes"] == stats_full["passes"] == 1
+    assert stats_red["node_visits"] < stats_full["node_visits"]
+
+
+def test_expand_cat_cofactors_matches_full(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    red = store.fd_reduction(CAT2)
+    full = cat_cofactors_factorized(
+        store, vorder, ["x", "y"], CAT2, backend="numpy"
+    )
+    reduced = cat_cofactors_factorized(
+        store, vorder, ["x", "y"], red.kept, backend="numpy"
+    )
+    assert reduced.num_params < full.num_params  # smaller assembled Gram
+    expanded = expand_cat_cofactors(reduced, red)
+    assert expanded.column_names() == full.column_names()
+    np.testing.assert_allclose(
+        expanded.matrix(), full.matrix(), rtol=1e-12, atol=1e-9
+    )
+
+
+def test_recover_blocks_closed_form_identity():
+    """Recovery must be the argmin of ||θ_f||² + ||θ_g||² subject to the
+    reparametrization θ_f = γ − Rᵀθ_g — checked against a least-squares
+    oracle on the equivalent stacked system min ||[Rᵀ; I]·θ_g − [γ; 0]||²."""
+    from repro.core.fd import FDReduction
+
+    rng = np.random.default_rng(3)
+    m = rng.integers(0, 3, 5).astype(np.int64)  # f (5 ids) -> g (3 ids)
+    red = FDReduction(
+        order=["f", "g"],
+        kept=["f"],
+        dropped={"g": ("f", m)},
+        domains={"f": 5, "g": 3},
+    )
+    gamma = rng.normal(size=5)
+    blocks = recover_blocks({"f": gamma}, red)
+    r = np.zeros((3, 5))
+    r[m, np.arange(5)] = 1.0
+    a = np.vstack([r.T, np.eye(3)])
+    b = np.concatenate([gamma, np.zeros(3)])
+    tg = np.linalg.lstsq(a, b, rcond=None)[0]
+    np.testing.assert_allclose(blocks["g"], tg, atol=1e-10)
+    # reparametrization invariant: θ_f + Rᵀθ_g == γ
+    np.testing.assert_allclose(
+        blocks["f"] + r.T @ blocks["g"], gamma, atol=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache threading: FD signature in keys, warm retrains, sharded path
+# ---------------------------------------------------------------------------
+
+def test_cat_cache_key_carries_fd_signature(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    reduced = store.cat_cofactors(
+        vorder, ["x", "y"], CAT2, backend="numpy", reduce_fds=True
+    )
+    assert list(reduced.cat) == store.fd_reduction(CAT2).kept
+    full = store.cat_cofactors(vorder, ["x", "y"], CAT2, backend="numpy")
+    assert list(full.cat) == CAT2  # no aliasing between the two entries
+    assert store.cache_info()["cat_entries"] == 2
+    # dropping the FDs orphans the reduced entry
+    store.drop_fd("c0", "d0")
+    store.drop_fd("c1", "d1")
+    assert store.cache_info()["cat_entries"] == 1
+
+
+def test_append_maintains_reduced_entries(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    store.cat_cofactors(
+        vorder, ["x", "y"], CAT2, backend="numpy", reduce_fds=True
+    )
+    rng = np.random.default_rng(9)
+    n = 23
+    delta = Relation.from_columns(
+        "d",
+        {f"c{i}": rng.integers(0, 12, n).astype(np.int32) for i in range(2)},
+        {
+            "x": rng.normal(0, 2, n),
+            "y": rng.normal(0, 2, n),
+            "promo": rng.integers(0, 2, n).astype(np.float64),
+        },
+    )
+    store.append("Fact", delta)
+    warm = store.cat_cofactors(
+        vorder, ["x", "y"], CAT2, backend="numpy", reduce_fds=True
+    )
+    red = store.fd_reduction(CAT2)
+    cold = cat_cofactors_factorized(
+        store, vorder, ["x", "y"], red.kept, backend="numpy"
+    )
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+    # end-to-end: warm FD-reduced training still equals the full solve
+    w = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_cache=True, use_fds=True,
+    )
+    f = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_fds=False,
+    )
+    np.testing.assert_allclose(w.theta, f.theta, rtol=0, atol=1e-10)
+
+
+def test_append_extends_mapping_with_new_ids(bundle):
+    store = bundle.store
+    # a new c0 id with a consistent d0 value extends the map, FD survives
+    delta = Relation.from_columns(
+        "d", {"c0": [12], "d0": [2]}, {"w0": [0.0]},
+        {"c0": 13, "d0": 4},
+    )
+    store.append("Dim0", delta)
+    fd = {(f.lhs, f.rhs): f for f in store.fds()}[("c0", "d0")]
+    assert len(fd.mapping) == 13 and fd.mapping[12] == 2
+
+
+def test_append_falsifies_inferred_fd(bundle):
+    store, vorder = bundle.store, bundle.vorder
+    store.cat_cofactors(
+        vorder, ["x", "y"], CAT2, backend="numpy", reduce_fds=True
+    )
+    d0 = store.get("Dim0")
+    conflict = Relation.from_columns(
+        "d",
+        {"c0": [0], "d0": [(int(d0.keys["d0"][0]) + 1) % 4]},
+        {"w0": [0.0]},
+    )
+    store.append("Dim0", conflict)
+    pairs = {(f.lhs, f.rhs) for f in store.fds()}
+    assert ("c0", "d0") not in pairs  # falsified and dropped
+    assert ("c1", "d1") in pairs  # untouched
+    # entries built under the dead FD are invalidated, and FD-on training
+    # falls back to the surviving reduction — still exactly the full solve
+    on = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_fds=True,
+    )
+    off = linear_regression(
+        store, vorder, FEATS2, "y", VERSIONS["closed"], backend="numpy",
+        categorical=CAT2, use_fds=False,
+    )
+    np.testing.assert_allclose(on.theta, off.theta, rtol=0, atol=1e-10)
+
+
+def test_append_violating_declared_fd_raises_before_mutation(bundle):
+    store = bundle.store
+    store.add_fd("c0", "d0")
+    rows_before = store.get("Dim0").num_rows
+    version_before = store.version
+    d0 = store.get("Dim0")
+    conflict = Relation.from_columns(
+        "d",
+        {"c0": [0], "d0": [(int(d0.keys["d0"][0]) + 1) % 4]},
+        {"w0": [0.0]},
+    )
+    with pytest.raises(ValueError, match="declared FD"):
+        store.append("Dim0", conflict)
+    assert store.get("Dim0").num_rows == rows_before
+    assert store.version == version_before
+    assert ("c0", "d0") in {(f.lhs, f.rhs) for f in store.fds()}
+
+
+def test_put_reverifies_fds(bundle):
+    store = bundle.store
+    # replace Dim0 with a version that breaks c0 → d0
+    old = store.get("Dim0")
+    keys = {
+        "c0": np.concatenate([old.keys["c0"], old.keys["c0"][:1]]),
+        "d0": np.concatenate(
+            [old.keys["d0"], (old.keys["d0"][:1] + 1) % 4]
+        ).astype(np.int32),
+    }
+    bad = Relation.from_columns(
+        "Dim0", keys, {"w0": np.zeros(old.num_rows + 1)}, dict(old.domains)
+    )
+    store.put(bad)
+    assert ("c0", "d0") not in {(f.lhs, f.rhs) for f in store.fds()}
+    # declared FDs reject the same mutation
+    store2 = fd_star_schema(n_cat=1, domain=6, dep_domain=3, n_rows=40,
+                            seed=2).store
+    store2.add_fd("c0", "d0")
+    old2 = store2.get("Dim0")
+    bad2 = Relation.from_columns(
+        "Dim0",
+        {
+            "c0": np.concatenate([old2.keys["c0"], old2.keys["c0"][:1]]),
+            "d0": np.concatenate(
+                [old2.keys["d0"], (old2.keys["d0"][:1] + 1) % 3]
+            ).astype(np.int32),
+        },
+        {"w0": np.zeros(old2.num_rows + 1)},
+        dict(old2.domains),
+    )
+    with pytest.raises(ValueError, match="declared FD"):
+        store2.put(bad2)
+    assert store2.get("Dim0").num_rows == old2.num_rows  # rolled back
+
+
+# ---------------------------------------------------------------------------
+# Append exception safety (poisoned delta)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_delta_invalidates_instead_of_corrupting(bundle, monkeypatch):
+    """If a delta fold raises mid-loop, no cache may be left half-updated:
+    entries covering the appended relation are invalidated, the catalog is
+    unchanged, and the next lookups recompute coherently."""
+    store, vorder = bundle.store, bundle.vorder
+    cols = ["x", "y"]
+    store.cofactors(vorder, cols, backend="numpy")
+    store.cat_cofactors(vorder, cols, ["c0"], backend="numpy")
+    assert store.cache_info()["entries"] == 1
+    assert store.cache_info()["cat_entries"] == 1
+    rows_before = store.get("Fact").num_rows
+    version_before = store.version
+
+    def boom(*a, **k):
+        raise RuntimeError("poisoned delta")
+
+    # the plain cofactor fold runs (and mutates its entry) BEFORE the
+    # categorical fold raises — exactly the half-updated hazard
+    monkeypatch.setattr(catmod, "cat_cofactors_factorized", boom)
+    rng = np.random.default_rng(2)
+    n = 11
+    delta = Relation.from_columns(
+        "d",
+        {f"c{i}": rng.integers(0, 12, n).astype(np.int32) for i in range(2)},
+        {
+            "x": rng.normal(0, 1, n),
+            "y": rng.normal(0, 1, n),
+            "promo": np.zeros(n),
+        },
+    )
+    with pytest.raises(RuntimeError, match="poisoned delta"):
+        store.append("Fact", delta)
+    monkeypatch.undo()
+
+    assert store.get("Fact").num_rows == rows_before  # catalog unchanged
+    assert store.version == version_before
+    assert store.cache_info()["entries"] == 0  # half-updated entry dropped
+    assert store.cache_info()["cat_entries"] == 0
+    warm = store.cofactors(vorder, cols, backend="numpy")
+    cold = cofactors_factorized(store, vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+    # and a later append works and stays exact
+    store.append("Fact", delta)
+    warm = store.cofactors(vorder, cols, backend="numpy")
+    cold = cofactors_factorized(store, vorder, cols, backend="numpy")
+    np.testing.assert_allclose(
+        warm.matrix(), cold.matrix(), rtol=1e-12, atol=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distributed path
+# ---------------------------------------------------------------------------
+
+def test_sharded_cat_cofactors_fd_reduction(bundle):
+    import jax
+
+    from repro.core.distributed import sharded_cat_cofactors
+
+    store = bundle.store
+    joined = store.materialize_join()
+    x = np.stack(
+        [joined.column(f).astype(np.float64) for f in ["x", "y"]], axis=1
+    )
+    ids = np.stack(
+        [joined.column(c).astype(np.int64) for c in CAT2], axis=1
+    )
+    doms = {c: store.attr_domain(c) for c in CAT2}
+    mesh = jax.make_mesh((1,), ("data",))
+    red = store.fd_reduction(CAT2)
+    reduced = sharded_cat_cofactors(
+        x, ids, ["x", "y"], CAT2, doms, mesh, fd=red
+    )
+    assert list(reduced.cat) == red.kept
+    full = sharded_cat_cofactors(x, ids, ["x", "y"], CAT2, doms, mesh)
+    expanded = expand_cat_cofactors(reduced, red)
+    # both sides accumulate in fp32 on-device — fp32-scale tolerance
+    np.testing.assert_allclose(
+        expanded.matrix(), full.matrix(), rtol=5e-4, atol=1e-2
+    )

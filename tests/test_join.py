@@ -1,0 +1,124 @@
+"""Hash-join fallback for wide shared-attribute joins.
+
+``composite_key`` packs join keys into one int64 by mixed-radix encoding
+and raises ``OverflowError`` once the shared-attribute domain product
+exceeds the int64 budget.  ``join_keys`` keeps the strict composite path
+when it fits and silently switches to the dictionary-encoded hash join
+(``hash_join_keys``) past the limit — both must enumerate exactly the
+same matching pairs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.relation import (
+    Relation,
+    composite_key,
+    hash_join_keys,
+    join_keys,
+    radix_fits,
+    sort_merge_join,
+)
+from repro.core.store import Store
+
+RNG = np.random.default_rng(7)
+
+
+def _pairs(lk, rk):
+    il, ir = sort_merge_join(lk, rk)
+    return sorted(zip(il.tolist(), ir.tolist()))
+
+
+def _brute_force(lcols, rcols):
+    lt = list(zip(*[c.tolist() for c in lcols]))
+    rt = list(zip(*[c.tolist() for c in rcols]))
+    return sorted(
+        (i, j)
+        for i in range(len(lt))
+        for j in range(len(rt))
+        if lt[i] == rt[j]
+    )
+
+
+def test_radix_fits_boundary():
+    assert radix_fits([2**20, 2**20, 2**20])  # 2^60 < 2^63 // 4
+    assert not radix_fits([2**31, 2**31, 2**31])
+    assert radix_fits([1, 1, 1])
+
+
+def test_join_keys_uses_composite_below_limit():
+    lcols = [RNG.integers(0, 5, 30).astype(np.int32) for _ in range(3)]
+    rcols = [RNG.integers(0, 5, 20).astype(np.int32) for _ in range(3)]
+    doms = [5, 5, 5]
+    lk, rk = join_keys(lcols, rcols, doms)
+    np.testing.assert_array_equal(lk, composite_key(lcols, doms))
+    np.testing.assert_array_equal(rk, composite_key(rcols, doms))
+
+
+def test_hash_join_equals_composite_below_limit():
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        n_attr = int(rng.integers(1, 4))
+        doms = [int(rng.integers(1, 7)) for _ in range(n_attr)]
+        nl = int(rng.integers(1, 40))
+        lcols = [rng.integers(0, d, nl).astype(np.int32) for d in doms]
+        rcols = [
+            rng.integers(0, d, 25).astype(np.int32) for d in doms
+        ]
+        ck = _pairs(*join_keys(lcols, rcols, doms))
+        hk = _pairs(*hash_join_keys(lcols, rcols))
+        assert ck == hk == _brute_force(lcols, rcols)
+
+
+def test_hash_join_past_radix_limit_matches_oracle():
+    # 10 attrs × domain 128 → 128^10 = 2^70: composite_key overflows
+    n_attr, dom = 10, 128
+    doms = [dom] * n_attr
+    assert not radix_fits(doms)
+    with pytest.raises(OverflowError):
+        composite_key(
+            [RNG.integers(0, dom, 4).astype(np.int32)] * n_attr, doms
+        )
+    lcols = [RNG.integers(0, dom, 200).astype(np.int32) for _ in range(n_attr)]
+    # force overlap: right side reuses a prefix of the left tuples
+    rcols = [
+        np.concatenate(
+            [lc[:80], RNG.integers(0, dom, 40).astype(np.int32)]
+        )
+        for lc in lcols
+    ]
+    got = _pairs(*join_keys(lcols, rcols, doms))
+    assert got == _brute_force(lcols, rcols)
+    assert len(got) >= 80
+
+
+def test_store_join_survives_wide_shared_attributes():
+    """ROADMAP item: a natural join on many wide shared attributes used to
+    die in ``composite_key`` with OverflowError (relation.py)."""
+    n_attr, dom, rows = 9, 256, 120
+    keys = {
+        f"k{i}": RNG.integers(0, dom, rows).astype(np.int32)
+        for i in range(n_attr)
+    }
+    r1 = Relation.from_columns(
+        "A", keys, {"v": RNG.normal(0, 1, rows)},
+        {f"k{i}": dom for i in range(n_attr)},
+    )
+    sub = {f"k{i}": keys[f"k{i}"][:50] for i in range(n_attr)}
+    r2 = Relation.from_columns(
+        "B", sub, {"w": RNG.normal(0, 1, 50)},
+        {f"k{i}": dom for i in range(n_attr)},
+    )
+    joined = Store([r1, r2]).materialize_join()
+    # every B row matches its originating A row at least once
+    assert joined.num_rows >= 50
+    # spot-check value alignment: joined rows satisfy v's row ↔ key tuple
+    lt = list(zip(*[keys[f"k{i}"].tolist() for i in range(n_attr)]))
+    jt = list(
+        zip(*[joined.keys[f"k{i}"].tolist() for i in range(n_attr)])
+    )
+    v = r1.values["v"]
+    for row, val in zip(jt, joined.values["v"].tolist()):
+        assert any(
+            lt[i] == row and np.isclose(v[i], val) for i in range(rows)
+        )

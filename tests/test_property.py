@@ -22,9 +22,13 @@ from hypothesis import HealthCheck, given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (
+    VERSIONS,
+    GLMConfig,
     cofactors_factorized,
     cofactors_materialized,
     design_matrix,
+    glm_regression,
+    linear_regression,
 )
 from repro.core.categorical import (
     cat_cofactors_factorized,
@@ -32,7 +36,12 @@ from repro.core.categorical import (
     onehot_design_matrix,
 )
 from repro.core.polynomial import polynomial_cofactors
-from repro.data.synthetic import random_acyclic_schema
+from repro.core.relation import (
+    composite_key,
+    hash_join_keys,
+    sort_merge_join,
+)
+from repro.data.synthetic import fd_star_schema, random_acyclic_schema
 from repro.data.tokens import TokenPipeline
 from repro.train import compression as comp
 
@@ -161,6 +170,83 @@ def test_fused_single_pass_equals_per_pass_equals_onehot(bundle):
     np.testing.assert_allclose(
         fused.matrix(), z.T @ z, rtol=1e-9, atol=1e-9
     )
+
+
+fd_schema_params = st.builds(
+    fd_star_schema,
+    seed=st.integers(0, 10_000),
+    n_cat=st.integers(1, 2),
+    domain=st.integers(3, 8),
+    dep_domain=st.integers(2, 4),
+    n_rows=st.integers(10, 60),
+)
+
+
+@SET
+@given(bundle=fd_schema_params)
+def test_fd_reduced_solve_equals_full_solve(bundle):
+    """On ANY random join with planted FDs (c_i → d_i, plus whatever
+    accidental FDs the tiny data happens to satisfy — those are true FDs
+    of the data, so exploiting them must be just as exact): FD-reduced
+    training ≡ the full solve, coefficients to 1e-10, identical layout,
+    for both least squares (closed form) and logistic IRLS."""
+    store, vorder = bundle.store, bundle.vorder
+    n_cat = sum(1 for a in store.get("Fact").keys)
+    cat = [f"c{i}" for i in range(n_cat)] + [f"d{i}" for i in range(n_cat)]
+    feats = ["x"] + cat
+    inferred = store.infer_fds()
+    assert {(f"c{i}", f"d{i}") for i in range(n_cat)} <= set(inferred)
+    assert not store.fd_reduction(cat).is_trivial
+
+    full = linear_regression(
+        store, vorder, feats, "y", VERSIONS["closed"], backend="numpy",
+        categorical=cat, use_fds=False,
+    )
+    red = linear_regression(
+        store, vorder, feats, "y", VERSIONS["closed"], backend="numpy",
+        categorical=cat, use_fds=True,
+    )
+    assert full.names == red.names
+    np.testing.assert_allclose(red.theta, full.theta, rtol=0, atol=1e-10)
+
+    cfg = GLMConfig(family="logistic", ridge=1e-3, tol=1e-14)
+    gf = glm_regression(
+        store, vorder, ["x"], cat, "promo", cfg, backend="numpy",
+        use_fds=False,
+    )
+    gr = glm_regression(
+        store, vorder, ["x"], cat, "promo", cfg, backend="numpy",
+        use_fds=True,
+    )
+    assert gf.names == gr.names
+    np.testing.assert_allclose(gr.theta, gf.theta, rtol=0, atol=1e-10)
+
+
+@SET
+@given(
+    seed=st.integers(0, 10_000),
+    n_attr=st.integers(1, 4),
+    nl=st.integers(0, 40),
+    nr=st.integers(0, 30),
+)
+def test_hash_join_equals_composite_join(seed, n_attr, nl, nr):
+    """Below the radix limit both key codings must enumerate exactly the
+    same matching (left, right) pairs on any inputs — the hash-join
+    fallback changes the encoding, never the join result."""
+    rng = np.random.default_rng(seed)
+    doms = [int(rng.integers(1, 7)) for _ in range(n_attr)]
+    lcols = [rng.integers(0, d, nl).astype(np.int32) for d in doms]
+    rcols = [rng.integers(0, d, nr).astype(np.int32) for d in doms]
+
+    def pairs(lk, rk):
+        il, ir = sort_merge_join(lk, rk)
+        return sorted(zip(il.tolist(), ir.tolist()))
+
+    via_composite = pairs(
+        composite_key(lcols, doms), composite_key(rcols, doms)
+    )
+    via_hash = pairs(*hash_join_keys(lcols, rcols))
+    assert via_composite == via_hash
 
 
 @SET
