@@ -22,9 +22,12 @@ def run(fanouts=(4, 8, 16, 32)) -> list:
             n_sales_per_product=f,
             n_competitors_per_loc=f,
         )
+        # use_view_cache=False: this suite times the TRAVERSAL (one pass
+        # over O(factorization)); warm cross-batch reuse is bench_view_cache's
+        # subject and would reduce the repeats here to cache hits.
         eng = FactorizedEngine(
             bundle.store, bundle.vorder,
-            ["Sale", "Competitor"], backend="numpy",
+            ["Sale", "Competitor"], backend="numpy", use_view_cache=False,
         )
         joined = bundle.store.materialize_join()
         flat_rows = joined.num_rows

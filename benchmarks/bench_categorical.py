@@ -50,6 +50,10 @@ def run(n_categories=(16, 64, 128, 256), n_dates: int = 48,
             n_dates=n_dates, n_stores=n_stores, n_items=d, seed=7
         )
         store = bundle.store
+        # this suite compares COMPUTATION strategies (grouped algebra vs
+        # one-hot); cross-batch view reuse would collapse the factorized
+        # repeats to cache hits — bench_view_cache owns that axis.
+        store.view_cache.enabled = False
         joined = store.materialize_join()
         m = joined.num_rows
         doms = {c: store.attr_domain(c) for c in CAT}
@@ -139,6 +143,7 @@ def run_sweep(
             n_cat=n, domain=domain, n_rows=n_rows, seed=11
         )
         store, vorder = bundle.store, bundle.vorder
+        store.view_cache.enabled = False  # measure traversal fusion, not reuse
         cat = [f"c{i}" for i in range(n)]
         cont = ["x", "y"]
 
@@ -210,6 +215,10 @@ def run_fd(
             n_rows=n_rows, seed=13,
         )
         store, vorder = bundle.store, bundle.vorder
+        # FD on/off must both pay their traversals — with the view cache
+        # on, the second arm would ride the first arm's subtree views and
+        # the ratio would measure cache luck instead of the reduction.
+        store.view_cache.enabled = False
         inferred = store.infer_fds()
         assert len(inferred) >= n, inferred  # every c_i → d_i discovered
         cat = [f"c{i}" for i in range(n)] + [f"d{i}" for i in range(n)]

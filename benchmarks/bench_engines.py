@@ -35,9 +35,13 @@ def run(scales=((32, 8, 16), (64, 16, 32), (96, 24, 48))) -> list:
         cols = bundle.features + [bundle.label]
         m = bundle.store.materialize_join().num_rows
 
+        # use_view_cache=False: the figure of merit is engine TRAVERSAL
+        # cost (columnar vs row proxy); cross-batch view reuse would turn
+        # the repeats into cache hits (bench_view_cache covers that axis).
         t_col_fact = timeit(
             lambda: cofactors_factorized(
-                bundle.store, bundle.vorder, cols, backend="jax"
+                bundle.store, bundle.vorder, cols, backend="jax",
+                use_view_cache=False,
             ),
             repeats=3,
         )

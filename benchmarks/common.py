@@ -5,6 +5,12 @@ median-of-repeats micro timings, ``stopwatch`` for one-shot phase timings
 (the manual ``t0 = perf_counter(); ...; dt = perf_counter() - t0`` pattern
 that used to be copy-pasted across suites), ``emit`` for the CSV print +
 JSON artifact every suite produces.
+
+JAX dispatch is asynchronous: a timed region that merely *launches* device
+work measures dispatch latency, not the kernel.  ``timeit`` therefore
+blocks on the callable's return value before stopping the clock, and
+``stopwatch.block`` is the same barrier for ``with``-style regions —
+suites timing device work should route outputs through one of them.
 """
 
 from __future__ import annotations
@@ -14,17 +20,34 @@ import os
 import time
 from typing import Callable, Dict, List
 
+
+def block(value):
+    """Wait for any JAX arrays inside ``value`` (an arbitrary pytree) to
+    finish computing, then return it.  Host-only values pass through, and
+    so does everything when JAX is absent — safe to call unconditionally
+    inside timed regions."""
+    try:
+        import jax
+
+        jax.block_until_ready(value)
+    except ImportError:  # pragma: no cover - jax is a hard dep in this repo
+        pass
+    return value
+
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds over ``repeats`` calls."""
+    """Median wall seconds over ``repeats`` calls.  The clock stops only
+    after ``fn``'s return value is device-complete (see :func:`block`), so
+    kernel-path timings measure execution, not dispatch."""
     for _ in range(warmup):
-        fn()
+        block(fn())
     times = []
     for _ in range(repeats):
         with stopwatch() as sw:
-            fn()
+            block(fn())
         times.append(sw.seconds)
     times.sort()
     return times[len(times) // 2]
@@ -34,11 +57,13 @@ class stopwatch:
     """One-shot wall-clock context manager:
 
         with stopwatch() as sw:
-            work()
+            sw.block(work())   # block() the outputs of device work
         rows.append({"work_s": sw.seconds})
 
     ``seconds`` is set on exit — including an exception exit, so a failing
-    suite still reports how long it ran.
+    suite still reports how long it ran.  ``block`` is :func:`block`
+    re-exported as a method so timed regions barrier on device work
+    without an extra import.
     """
 
     seconds: float = float("nan")
@@ -50,6 +75,10 @@ class stopwatch:
     def __exit__(self, *exc) -> bool:
         self.seconds = time.perf_counter() - self._t0
         return False
+
+    @staticmethod
+    def block(value):
+        return block(value)
 
 
 def emit(name: str, rows: List[Dict]) -> None:

@@ -8,6 +8,8 @@ One module per paper table/figure (+ substrate benches):
   union_commutativity_scaling  — Prop. 4.1 as the distribution rule
   incremental_retrain_after_append — retrain cost after appends (AC/DC)
   categorical_vs_onehot        — sparse categorical cofactors vs one-hot
+  view_cache_cold_warm_append  — persistent view cache: warm batches +
+                                 retrain-after-append vs invalidate-all
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
@@ -42,6 +44,7 @@ def default_suites():
         bench_lm,
         bench_polynomial,
         bench_scaling,
+        bench_view_cache,
     )
 
     return [
@@ -51,6 +54,7 @@ def default_suites():
         ("union commutativity scaling", bench_scaling.main),
         ("incremental retrain after append", bench_incremental.main),
         ("categorical vs one-hot", bench_categorical.main),
+        ("view cache cold/warm/append", bench_view_cache.main),
         ("polynomial extension", bench_polynomial.main),
         ("kernel hotspots", bench_kernels.main),
         ("lm smoke steps", bench_lm.main),

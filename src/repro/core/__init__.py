@@ -15,6 +15,8 @@ Layering (paper section in parentheses):
 * ``glm``                       — logistic/Poisson over the compressed join
 * ``polynomial``                — beyond-paper degree-d extension (§6 outlook)
 * ``distributed``               — union-commutativity as data parallelism
+* ``view_cache``                — persistent cross-batch per-node view cache
+                                  (store-owned, delta-maintained under append)
 """
 
 from .categorical import (
@@ -82,6 +84,7 @@ from .variable_order import (
     validate,
     variable_order_from_store,
 )
+from .view_cache import ViewCache, ViewKey
 
 __all__ = [
     "AggregateBlock",
@@ -107,6 +110,8 @@ __all__ = [
     "Store",
     "VariableOrder",
     "VERSIONS",
+    "ViewCache",
+    "ViewKey",
     "bgd_cofactor",
     "bgd_data",
     "cat_cofactors_factorized",

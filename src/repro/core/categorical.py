@@ -302,8 +302,20 @@ class CatCofactors:
 # Computation paths
 # ---------------------------------------------------------------------------
 
-def _store_domains(store: Store, cat: Sequence[str]) -> Dict[str, int]:
-    return {c: store.attr_domain(c) for c in cat}
+def _store_domains(
+    store: Store,
+    cat: Sequence[str],
+    overrides: Optional[Dict[str, Relation]] = None,
+) -> Dict[str, int]:
+    """Dictionary-domain sizes from the catalog, widened by any override
+    relations (a delta engine's replacement rows may carry category ids
+    past the pre-merge catalog's domains)."""
+    doms = {c: store.attr_domain(c) for c in cat}
+    for rel in (overrides or {}).values():
+        for c in cat:
+            if c in rel.domains:
+                doms[c] = max(doms[c], int(rel.domains[c]))
+    return doms
 
 
 def _checked_ids(g, attr: str, dom: int) -> np.ndarray:
@@ -329,6 +341,8 @@ def cat_cofactors_factorized(
     backend: str = "numpy",
     domains: Optional[Dict[str, int]] = None,
     stats: Optional[Dict[str, int]] = None,
+    overrides: Optional[Dict[str, Relation]] = None,
+    use_view_cache: Optional[bool] = None,
 ) -> CatCofactors:
     """Categorical cofactors over the **factorized** join — ONE fused pass.
 
@@ -344,13 +358,28 @@ def cat_cofactors_factorized(
     by the incremental delta path, where the delta relation may not cover
     the full dictionary).  ``stats``, when given, receives the engine's
     ``passes``/``node_visits`` counters — the audit trail of the
-    single-pass claim.
+    single-pass claim.  ``overrides`` runs the batch as a *delta engine*
+    (relations replaced by their append deltas, cached sibling views
+    reused); ``use_view_cache`` overrides the store's default for the
+    persistent cross-batch view cache — with it on, successive batches
+    over overlapping attribute sets skip finished subtree descents.
     """
     cont = list(cont)
     cat = list(cat)
     k = len(cont)
-    doms = dict(domains) if domains is not None else _store_domains(store, cat)
-    engine = FactorizedEngine(store, vorder, cont, backend=backend)
+    doms = (
+        dict(domains)
+        if domains is not None
+        else _store_domains(store, cat, overrides)
+    )
+    engine = FactorizedEngine(
+        store,
+        vorder,
+        cont,
+        backend=backend,
+        overrides=overrides,
+        use_view_cache=use_view_cache,
+    )
     queries = [AggregateQuery("base", (), 2)]
     queries += [AggregateQuery(f"g:{c}", (c,), 1) for c in cat]
     pairs = [
@@ -363,6 +392,8 @@ def cat_cofactors_factorized(
     if stats is not None:
         stats["passes"] = engine.passes
         stats["node_visits"] = engine.node_visits
+        stats["vc_hits"] = engine.vc_hits
+        stats["vc_misses"] = engine.vc_misses
 
     base = out["base"]
     perm = [base.features.index(f) for f in cont]

@@ -21,6 +21,15 @@ Incremental maintenance composes with the same algebra: an *append* of new
 rows Δ is a union, so ``incremental_sharded_cofactors`` computes the delta
 cofactors of Δ per shard (one psum) and folds them into the previous global
 cofactors with ``Cofactors.__add__`` — no rescan of the historical data.
+
+View-cache independence: the sharded paths consume already-extracted
+arrays, so they are agnostic to the store's persistent per-node view cache
+— results are bit-identical with the cache on or off (tested in
+``tests/test_sharding.py``).  The two maintenance schemes agree by
+Prop. 4.1: a store whose caches were delta-maintained under ``append`` and
+a sharded fold of the same delta arrays land on the same cofactors, which
+is what lets a mesh fold the deltas while the store keeps the factorized
+views warm for the next retrain.
 """
 
 from __future__ import annotations

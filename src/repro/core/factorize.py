@@ -43,6 +43,26 @@ caching, Bakibayev et al. 2012).  ``passes`` counts executor traversals
 size); ``node_visits`` counts distinct ``(node, live-subset)`` view
 evaluations — the unit the benchmark sweeps report.
 
+Cross-batch reuse (this layer's AC/DC step): when the store owns a
+:class:`repro.core.view_cache.ViewCache` (every ``Store`` does), finished
+subtree views are ALSO published to that persistent cache under a
+store-agnostic key — ``(vorder signature, node preorder index, subtree
+feature subset, live subset, degree, backend/dtype)`` — so a later batch
+(same engine or a brand-new one) starts from the deepest changed node
+instead of the leaves.  A fully-warm batch reports **zero** ``node_visits``
+on unchanged subtrees; persistent hits/misses are counted separately in
+``vc_hits`` / ``vc_misses``.  Engines constructed with ``overrides=`` (a
+relation replaced by its append delta) are *delta engines*: they skip the
+persistent cache for every node whose subtree covers an overridden
+relation (those views are deltas, not totals) while still REUSING the
+cached views of untouched sibling subtrees — which is what makes
+retrain-after-append cost O(delta root path), not O(tree).  Stable ids
+underneath both mechanisms come from the store's append-only attribute
+dictionaries (``Store.attr_encoding``): an append never renumbers an
+existing category, so cached views survive catalog growth.
+``use_view_cache=False`` (or ``scale`` being set — scaled views are
+engine-specific) opts a single engine out.
+
 Complexity is O(size of the factorization), as in the paper.  Structural
 index work (joins, group ids) runs on host numpy — the query-executor role —
 and all value math is vectorized (jnp by default; numpy backend available
@@ -57,9 +77,10 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .relation import group_key, join_keys, sort_merge_join
+from .relation import Relation, group_key, join_keys, sort_merge_join
 from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
+from .view_cache import ViewKey
 
 __all__ = [
     "AggregateBlock",
@@ -273,6 +294,8 @@ class FactorizedEngine:
         dtype=None,
         scale=None,  # Optional[ScaleFactors] — lazy view rescaling (§4.2)
         group_by: Sequence[str] = (),
+        overrides: Optional[Dict[str, Relation]] = None,
+        use_view_cache: Optional[bool] = None,
     ) -> None:
         validate(vorder, store)
         self.store = store
@@ -285,9 +308,21 @@ class FactorizedEngine:
         self.dtype = dtype or (jnp.float32 if backend == "jax" else np.float64)
         self.scale = scale
         self.group_by = list(group_by)
+        # delta mode: relations replaced by their append delta — the engine
+        # evaluates the join with ``name`` swapped for ``overrides[name]``
+        # against the live store (shared dictionaries, shared view cache).
+        self.overrides = dict(overrides or {})
+        unknown = set(self.overrides) - set(vorder.relations())
+        if unknown:
+            raise ValueError(
+                f"overrides {sorted(unknown)} not in the variable order"
+            )
         self.passes = 0
         self.node_visits = 0
+        self.vc_hits = 0
+        self.vc_misses = 0
         self._check_group_attrs(self.group_by)
+        self._index_nodes()
         self._encode_attributes()
         missing = set(self.group_by) - set(self.domains)
         if missing:
@@ -295,6 +330,64 @@ class FactorizedEngine:
                 f"group-by attributes {sorted(missing)} occur in no relation "
                 "of the variable order"
             )
+        # persistent cross-batch view cache (store-owned).  Scaled engines
+        # opt out: their views bake engine-specific affine transforms in.
+        vc = getattr(store, "view_cache", None)
+        if use_view_cache is None:
+            use_view_cache = vc is not None and vc.enabled
+        self._vc = vc if (use_view_cache and vc is not None) else None
+        if scale is not None:
+            self._vc = None
+        self._vc_skip = frozenset(self.overrides)
+        # encoded columns are a SNAPSHOT of the catalog at construction
+        # time: if the store mutates afterwards, this engine's views are
+        # stale-by-design and must neither probe nor publish the shared
+        # cache (a stale publish would poison every later query).
+        self._vc_version = getattr(store, "version", 0)
+        if self._vc is not None and hasattr(store, "_register_vorder"):
+            # append maintenance needs the order to rebuild delta engines
+            store._register_vorder(self.sig, vorder)
+        self._leaf_memo: Dict[Tuple[str, int], _View] = {}
+        # shared delta-fold memo; degree safety comes from _execute's
+        # degree-aware acceptance (a low-degree view never serves a
+        # higher-degree fold), so folds at every degree share descents
+        self._maint_memo: Dict[Tuple[int, FrozenSet[str]], _View] = {}
+
+    def _index_nodes(self) -> None:
+        """Assign stable preorder indices and static subtree summaries —
+        the store-agnostic node identity the persistent cache keys on."""
+        self.sig = self.vorder.signature()
+        self._nodes: List[VariableOrder] = []
+        self._node_index: Dict[int, int] = {}
+        self._subtree_vars: Dict[int, FrozenSet[str]] = {}
+        self._subtree_rels: Dict[int, FrozenSet[str]] = {}
+
+        def walk(node: VariableOrder) -> Tuple[set, set]:
+            self._node_index[id(node)] = len(self._nodes)
+            self._nodes.append(node)
+            vs: set = set()
+            rs: set = set()
+            if node.is_relation:
+                rs.add(node.relation)
+            elif node.name != INTERCEPT:
+                vs.add(node.name)
+            for ch in node.children:
+                cv, cr = walk(ch)
+                vs |= cv
+                rs |= cr
+            self._subtree_vars[id(node)] = frozenset(vs)
+            self._subtree_rels[id(node)] = frozenset(rs)
+            return vs, rs
+
+        walk(self.vorder)
+        feat_set = set(self.features)
+        self._node_feats: Dict[int, Tuple[str, ...]] = {
+            id(n): tuple(sorted(feat_set & self._subtree_vars[id(n)]))
+            for n in self._nodes
+        }
+
+    def _get_rel(self, name: str) -> Relation:
+        return self.overrides.get(name) or self.store.get(name)
 
     def _check_group_attrs(self, group_by: Sequence[str]) -> None:
         overlap = set(group_by) & set(self.features)
@@ -306,15 +399,46 @@ class FactorizedEngine:
 
     # -- dictionary encoding (global, per attribute) --------------------------
     def _encode_attributes(self) -> None:
-        rel_names = self.vorder.relations()
-        cols: Dict[str, List[Tuple[str, np.ndarray]]] = {}
-        for rn in rel_names:
-            rel = self.store.get(rn)
-            for attr in rel.attributes:
-                cols.setdefault(attr, []).append((rn, rel.column(attr)))
+        """Dictionary-encode every (relation, attribute) column.
+
+        When the store owns append-only attribute dictionaries
+        (``Store.attr_encoding``) they are the source of truth: ids are
+        stable across catalog mutations (an append can only *extend* a
+        dictionary), which is what lets persistent per-node views — whose
+        key columns are these ids — survive ``append`` without
+        renumbering, and lets two engine instances share cached views.
+        Encoded columns of unchanged relations are cached store-side, so
+        warm engine construction never re-scans historical data.  The
+        legacy in-engine ``np.unique`` path remains for store-likes
+        without dictionaries (and is what plain correctness tests of the
+        block algebra exercise)."""
+        self._dtype_tag = str(np.dtype(self.dtype))
+        rel_names = list(dict.fromkeys(self.vorder.relations()))
         self.domains: Dict[str, int] = {}
         self.attr_values: Dict[str, np.ndarray] = {}  # id -> float value
         self.encoded: Dict[Tuple[str, str], np.ndarray] = {}  # (rel, attr) -> ids
+        if hasattr(self.store, "attr_encoding"):
+            attrs: set = set()
+            for rn in rel_names:
+                rel = self._get_rel(rn)
+                for attr in rel.attributes:
+                    self.encoded[(rn, attr)] = self.store.attr_encoding(
+                        rn, attr, override=self.overrides.get(rn)
+                    )
+                    attrs.add(attr)
+            # capture dictionaries AFTER all columns are encoded, so ids
+            # introduced by this engine's relations are covered; the store
+            # replaces (never mutates) the arrays, so these stay valid.
+            for attr in attrs:
+                vals = self.store.attr_values_array(attr)
+                self.attr_values[attr] = vals
+                self.domains[attr] = len(vals)
+            return
+        cols: Dict[str, List[Tuple[str, np.ndarray]]] = {}
+        for rn in rel_names:
+            rel = self._get_rel(rn)
+            for attr in rel.attributes:
+                cols.setdefault(attr, []).append((rn, rel.column(attr)))
         for attr, entries in cols.items():
             allv = np.concatenate([c.astype(np.float64) for _, c in entries])
             uniq, inv = np.unique(allv, return_inverse=True)
@@ -381,6 +505,9 @@ class FactorizedEngine:
         queries = list(queries)
         plan = self._plan(queries)
         self.passes += 1
+        store_passes = getattr(self.store, "passes", None)
+        if store_passes is not None:
+            self.store.passes = store_passes + 1
         cache: Dict[Tuple[int, FrozenSet[str]], _View] = {}
         out: Dict[str, AggregateBlock] = {}
         for q in queries:
@@ -420,19 +547,7 @@ class FactorizedEngine:
                     "variable order"
                 )
 
-        subtree_vars: Dict[int, FrozenSet[str]] = {}
-
-        def walk(node: VariableOrder) -> FrozenSet[str]:
-            acc: set = set()
-            if not node.is_relation and node.name != INTERCEPT:
-                acc.add(node.name)
-            for ch in node.children:
-                acc |= walk(ch)
-            out = frozenset(acc)
-            subtree_vars[id(node)] = out
-            return out
-
-        walk(self.vorder)
+        subtree_vars = self._subtree_vars  # static: computed once in init
 
         need: Dict[int, Dict[FrozenSet[str], int]] = {}
 
@@ -459,36 +574,125 @@ class FactorizedEngine:
         cache: Dict[Tuple[int, FrozenSet[str]], _View],
     ) -> _View:
         memo_key = (id(node), keep)
-        hit = cache.get(memo_key)
-        if hit is not None:
-            return hit
         degree = plan.need[id(node)][keep]
-        self.node_visits += 1
-        if node.is_relation:
-            view = self._leaf_view(node.relation, degree)
-        else:
-            child_views = [
-                self._execute(
-                    ch, keep & plan.subtree_vars[id(ch)], plan, cache
-                )
-                for ch in node.children
-            ]
-            view = child_views[0]
-            for other in child_views[1:]:
-                view = self._combine(view, other, degree)
-            if node.name == INTERCEPT:
-                if set(view.keys) != keep:
-                    extra = sorted(set(view.keys) - keep)
-                    raise AssertionError(
-                        f"attributes {extra} survive to the intercept — "
-                        "variable order misses nodes for them"
-                    )
+        hit = cache.get(memo_key)
+        # degree-aware acceptance: within one batch the plan pins a single
+        # max degree per (node, keep), so this is always an exact hit; the
+        # shared delta-fold memo also serves lower-degree folds from a
+        # higher-degree view (consumers slice the blocks they declared),
+        # while a lower-degree memo entry never masks a degree-2 need.
+        if hit is not None and hit.degree >= degree:
+            return hit
+        view = self._vc_get(node, keep, degree)
+        if view is None:
+            self.node_visits += 1
+            store_visits = getattr(self.store, "node_visits", None)
+            if store_visits is not None:
+                self.store.node_visits = store_visits + 1
+            if node.is_relation:
+                view = self._leaf_view(node.relation, degree)
             else:
-                if node.name in self.features and degree >= 1:
-                    view = self._extend_with_feature(view, node.name, degree)
-                view = self._aggregate_out(view, node.name, keep, degree)
+                child_views = [
+                    self._execute(
+                        ch, keep & plan.subtree_vars[id(ch)], plan, cache
+                    )
+                    for ch in node.children
+                ]
+                view = child_views[0]
+                for other in child_views[1:]:
+                    view = self._combine(view, other, degree)
+                if node.name == INTERCEPT:
+                    if set(view.keys) != keep:
+                        extra = sorted(set(view.keys) - keep)
+                        raise AssertionError(
+                            f"attributes {extra} survive to the intercept — "
+                            "variable order misses nodes for them"
+                        )
+                else:
+                    if node.name in self.features and degree >= 1:
+                        view = self._extend_with_feature(
+                            view, node.name, degree
+                        )
+                    view = self._aggregate_out(view, node.name, keep, degree)
+            self._vc_put(node, keep, degree, view)
         cache[memo_key] = view
         return view
+
+    # -- persistent (cross-batch) view cache -----------------------------------
+    def _vc_key(
+        self, node: VariableOrder, keep: FrozenSet[str], degree: int
+    ) -> ViewKey:
+        return ViewKey(
+            vorder_sig=self.sig,
+            backend=self.backend,
+            dtype=self._dtype_tag,
+            node=self._node_index[id(node)],
+            feats=self._node_feats[id(node)],
+            keep=keep,
+            degree=degree,
+        )
+
+    def _vc_eligible(self, node: VariableOrder) -> bool:
+        if self._vc is None:
+            return False
+        # catalog moved on since this engine snapshotted its encodings:
+        # its views describe the OLD catalog — stay out of the cache
+        if getattr(self.store, "version", 0) != self._vc_version:
+            return False
+        # Relation leaves are never persisted: a leaf view is ones/zeros
+        # plus references to the (already cached) encoded key columns —
+        # caching it would spend the byte budget on the largest, cheapest
+        # views and force row-level folds on every append.  When a leaf's
+        # ancestor view hits, the leaf is never visited anyway.
+        if node.is_relation:
+            return False
+        # delta engines: nodes covering an overridden relation hold delta
+        # views, never totals — neither served from nor published to the
+        # persistent cache.  Untouched sibling subtrees remain eligible.
+        return not (self._subtree_rels[id(node)] & self._vc_skip)
+
+    def _vc_get(
+        self, node: VariableOrder, keep: FrozenSet[str], degree: int
+    ) -> Optional[_View]:
+        if not self._vc_eligible(node):
+            return None
+        version = getattr(self.store, "version", 0)
+        for d in range(degree, 3):
+            view = self._vc.get(self._vc_key(node, keep, d), version)
+            if view is not None:
+                self.vc_hits += 1
+                self._vc.hits += 1
+                return self._trim_view(view, degree)
+        self.vc_misses += 1
+        self._vc.misses += 1
+        return None
+
+    def _vc_put(
+        self, node: VariableOrder, keep: FrozenSet[str], degree: int, view
+    ) -> None:
+        if not self._vc_eligible(node) or not self._vc.enabled:
+            return
+        self._vc.put(
+            self._vc_key(node, keep, degree),
+            view,
+            relations=self._subtree_rels[id(node)],
+            version=getattr(self.store, "version", 0),
+        )
+
+    @staticmethod
+    def _trim_view(view: _View, degree: int) -> _View:
+        """Serve a lower-degree request from a higher-degree cached view —
+        block slicing only, no recompute (degree-0 views carry no feats)."""
+        if view.degree == degree:
+            return view
+        return _View(
+            keys=view.keys,
+            c=view.c,
+            l=view.l if degree >= 1 else None,
+            q=view.q if degree == 2 else None,
+            feats=list(view.feats) if degree >= 1 else [],
+            degree=degree,
+        )
 
     def _to_block(self, view: _View, q: AggregateQuery) -> AggregateBlock:
         keys = {
@@ -512,11 +716,24 @@ class FactorizedEngine:
         )
 
     def _leaf_view(self, rel_name: str, degree: int) -> _View:
-        rel = self.store.get(rel_name)
+        # hoisted per (relation, degree): repeated batches within one
+        # engine share the encoded leaf block even when the persistent
+        # view cache is disabled (and the cold baseline stays fair).
+        memo_key = (rel_name, degree)
+        hit = self._leaf_memo.get(memo_key)
+        if hit is not None:
+            return hit
+        for d in range(degree + 1, 3):  # a higher-degree leaf trims for free
+            hit = self._leaf_memo.get((rel_name, d))
+            if hit is not None:
+                view = self._trim_view(hit, degree)
+                self._leaf_memo[memo_key] = view
+                return view
+        rel = self._get_rel(rel_name)
         n = rel.num_rows
         keys = {a: self.encoded[(rel_name, a)] for a in rel.attributes}
         xp, dt = self.xp, self.dtype
-        return _View(
+        view = _View(
             keys=keys,
             c=xp.ones((n,), dtype=dt),
             l=xp.zeros((n, 0), dtype=dt) if degree >= 1 else None,
@@ -524,6 +741,8 @@ class FactorizedEngine:
             feats=[],
             degree=degree,
         )
+        self._leaf_memo[memo_key] = view
+        return view
 
     def _combine(self, v1: _View, v2: _View, degree: int) -> _View:
         xp = self.xp
@@ -608,6 +827,14 @@ class FactorizedEngine:
         # every ancestor view — and ultimately the root — is keyed by them.
         drop = set() if attr in keep else {attr}
         remaining = sorted(set(view.keys) - drop)
+        return self._group_rows(view, remaining, degree)
+
+    def _group_rows(
+        self, view: _View, remaining: Sequence[str], degree: int
+    ) -> _View:
+        """GROUP BY ``remaining`` over a view's rows (segment-sum of every
+        block) — the aggregation core shared by :meth:`_aggregate_out` and
+        the delta-fold :meth:`_merge_views`."""
         n = view.num_rows
         if remaining:
             doms = [self.domains[a] for a in remaining]
@@ -633,6 +860,75 @@ class FactorizedEngine:
             keys=keys, c=c, l=l, q=q, feats=view.feats, degree=degree
         )
 
+    # -- delta-path maintenance (Store.append) ---------------------------------
+    def fold_delta_view(self, key: ViewKey, old_view: _View) -> _View:
+        """Fold this delta engine's view of ``key``'s node into an existing
+        cached total view — the per-node form of Prop. 4.1's union
+        commutativity that ``Store.append`` uses to keep the view cache
+        warm: only the appended relation's root path is recomputed (at
+        delta size), sibling subtrees stay untouched.
+
+        The engine must have been constructed with ``overrides`` mapping
+        the appended relation to its delta rows and ``features`` equal to
+        ``key.feats`` (so block layouts line up)."""
+        node = self._nodes[key.node]
+        if tuple(self._node_feats[id(node)]) != tuple(key.feats):
+            raise ValueError(
+                f"delta engine features {self._node_feats[id(node)]} do not "
+                f"match cached view features {key.feats}"
+            )
+        keep = frozenset(key.keep)
+        plan = self._subtree_plan(node, keep, key.degree)
+        delta = self._execute(node, keep, plan, self._maint_memo)
+        # the memo may hand back a higher-degree delta (shared with an
+        # earlier fold) — trim to the entry's blocks before merging
+        delta = self._trim_view(delta, key.degree)
+        return self._merge_views(old_view, delta, key.degree)
+
+    def _subtree_plan(
+        self, node: VariableOrder, keep: FrozenSet[str], degree: int
+    ) -> _BatchPlan:
+        """A plan covering just ``node``'s subtree at one (keep, degree) —
+        what :meth:`fold_delta_view` hands to the executor."""
+        need: Dict[int, Dict[FrozenSet[str], int]] = {}
+
+        def rec(n: VariableOrder, k: FrozenSet[str]) -> None:
+            at = need.setdefault(id(n), {})
+            at[k] = max(at.get(k, -1), degree)
+            for ch in n.children:
+                rec(ch, k & self._subtree_vars[id(ch)])
+
+        rec(node, keep & self._subtree_vars[id(node)])
+        return _BatchPlan(
+            queries=[], subtree_vars=self._subtree_vars, need=need
+        )
+
+    def _merge_views(self, a: _View, b: _View, degree: int) -> _View:
+        """Union of two keyed views over disjoint row sets: concatenate
+        rows, then re-group over the full key set (duplicated key combos
+        sum — Prop. 4.1)."""
+        if list(a.feats) != list(b.feats) or set(a.keys) != set(b.keys):
+            raise AssertionError(
+                f"cannot merge views: feats {a.feats} vs {b.feats}, "
+                f"keys {sorted(a.keys)} vs {sorted(b.keys)}"
+            )
+        xp = self.xp
+        keys = {
+            attr: np.concatenate(
+                [np.asarray(a.keys[attr]), np.asarray(b.keys[attr])]
+            )
+            for attr in a.keys
+        }
+        stacked = _View(
+            keys=keys,
+            c=xp.concatenate([a.c, b.c], axis=0),
+            l=xp.concatenate([a.l, b.l], axis=0) if degree >= 1 else None,
+            q=xp.concatenate([a.q, b.q], axis=0) if degree == 2 else None,
+            feats=list(a.feats),
+            degree=degree,
+        )
+        return self._group_rows(stacked, sorted(keys), degree)
+
     def _segment_sum(self, data, seg, num: int):
         if self.backend == "jax":
             out = jnp.zeros((num,) + data.shape[1:], dtype=data.dtype)
@@ -649,10 +945,17 @@ def cofactors_factorized(
     backend: str = "jax",
     dtype=None,
     scale=None,
+    use_view_cache: Optional[bool] = None,
 ) -> Cofactors:
     """Convenience wrapper: cofactors over the factorized join (paper §4.3)."""
     return FactorizedEngine(
-        store, vorder, features, backend=backend, dtype=dtype, scale=scale
+        store,
+        vorder,
+        features,
+        backend=backend,
+        dtype=dtype,
+        scale=scale,
+        use_view_cache=use_view_cache,
     ).cofactors()
 
 

@@ -206,13 +206,22 @@ def compose_maps(m1: np.ndarray, m2: np.ndarray) -> np.ndarray:
 # Reduction planning
 # ---------------------------------------------------------------------------
 
-def _path_map(
-    fds: Dict[Tuple[str, str], FunctionalDependency], src: str, dst: str
-) -> Optional[np.ndarray]:
-    """Composed map along any FD path src → … → dst (BFS, shortest first)."""
+def _fd_adjacency(
+    fds: Dict[Tuple[str, str], FunctionalDependency]
+) -> Dict[str, List[Tuple[str, np.ndarray]]]:
+    """lhs -> [(rhs, mapping)] — built once per plan, shared by every
+    BFS (``reduction_plan`` probes |kept|·|order| pairs; rebuilding the
+    adjacency inside each probe made planning quadratic in catalog size)."""
     adj: Dict[str, List[Tuple[str, np.ndarray]]] = {}
     for (l, r), fd in fds.items():
         adj.setdefault(l, []).append((r, fd.mapping))
+    return adj
+
+
+def _path_map(
+    adj: Dict[str, List[Tuple[str, np.ndarray]]], src: str, dst: str
+) -> Optional[np.ndarray]:
+    """Composed map along any FD path src → … → dst (BFS, shortest first)."""
     frontier: List[Tuple[str, Optional[np.ndarray]]] = [(src, None)]
     seen = {src}
     while frontier:
@@ -241,12 +250,13 @@ def reduction_plan(
     attributes that determine each other (a bijection) keep the first and
     drop the second."""
     order = list(order)
+    adj = _fd_adjacency(fds)
     kept: List[str] = []
     dropped: Dict[str, Tuple[str, np.ndarray]] = {}
     for attr in order:
         root: Optional[Tuple[str, np.ndarray]] = None
         for k in kept:
-            m = _path_map(fds, k, attr)
+            m = _path_map(adj, k, attr)
             if m is not None:
                 d_k = int(domains[k])
                 if len(m) < d_k:

@@ -152,13 +152,22 @@ def compressed_design_factorized(
     cat: Sequence[str],
     label: str,
     backend: str = "numpy",
+    use_view_cache: Optional[bool] = None,
 ) -> CompressedDesign:
     """One factorized GROUP BY over *all* feature attributes: the engine
     carries count and Σy per distinct feature combination to the root —
-    O(factorization size), flat join never materialized."""
+    O(factorization size), flat join never materialized.  The descent
+    shares the store's persistent view cache with the cofactor paths, so
+    an IRLS re-solve (or a design over a feature subset already swept)
+    starts from cached subtree views; ``use_view_cache=False`` opts out."""
     cont, cat = list(cont), list(cat)
     g = FactorizedEngine(
-        store, vorder, [label], backend=backend, group_by=cont + cat
+        store,
+        vorder,
+        [label],
+        backend=backend,
+        group_by=cont + cat,
+        use_view_cache=use_view_cache,
     ).grouped_cofactors()
     x = (
         np.stack([g.keys[f] for f in cont], axis=1)

@@ -32,6 +32,36 @@ Cache versioning: ``version`` increments on every catalog mutation; every
 mutation re-stamps the entries it keeps valid (``append`` after folding the
 delta, ``put`` for entries over untouched relations), and lookups recompute
 on any version mismatch — a backstop against invalidation-rule bugs.
+
+Below the result-level caches sits the **persistent view cache**
+(``repro.core.view_cache``): per-node engine views keyed by
+``(vorder signature, node, live subset, degree, backend)``, shared by every
+``FactorizedEngine`` constructed over this store.  Where the cofactor
+caches answer "have I seen this exact query", the view cache answers "have
+I already descended this subtree" — so *different* queries over
+overlapping attribute sets (FD on/off, GLM designs, per-attribute sweeps,
+warm retrains) skip finished descents.  ``append`` maintains it with
+delta-path folds: only views on the appended relation's root path are
+touched (each folded with a delta view computed by an engine that itself
+reuses the cached sibling views), everything else is restamped.  ``put``
+invalidates exactly the entries covering the replaced relation.
+
+Two pieces of store-owned state make those views reusable at all:
+
+* **append-only attribute dictionaries** — every attribute's value↔id
+  mapping is global to the store and only ever *extended* (new values get
+  fresh ids at the end), so an append never renumbers ids baked into
+  cached views;
+* an **encoded-column cache** — the int32 id columns of unchanged
+  relations, so warm engine construction is O(1) instead of a full
+  ``np.unique`` rescan of the catalog.
+
+Counters: ``passes`` / ``node_visits`` accumulate over EVERY engine
+traversal against this store (cold computes, delta folds, GLM designs —
+all paths, uniformly); ``cat_passes`` / ``cat_node_visits`` remain the
+categorical-path subset for continuity.  ``reset_counters()`` zeroes all
+of them plus the view-cache hit/miss/eviction counters, so benchmarks and
+tests no longer depend on call order.
 """
 
 from __future__ import annotations
@@ -49,6 +79,7 @@ from .fd import (
     witnessed_mapping,
 )
 from .relation import Relation, join_keys, sort_merge_join
+from .view_cache import DEFAULT_MAX_BYTES, ViewCache
 
 if TYPE_CHECKING:  # avoid a circular import at runtime (factorize -> store)
     from .factorize import Cofactors
@@ -64,34 +95,162 @@ class _CacheEntry:
     version: int  # store version the entry is valid at
 
 
+class _AttrDict:
+    """Append-only global dictionary of one attribute's values.
+
+    ``values[i]`` is the i-th distinct value ever seen (first-seen order —
+    NOT sorted: sorting would renumber existing ids when a later value
+    lands in the middle, invalidating every cached view keyed by them).
+    ``extend_encode`` folds a column in, assigning fresh trailing ids to
+    unseen values, and returns the column's int32 ids.  Lookup is fully
+    vectorized against a sorted snapshot (``searchsorted``) — continuous
+    columns with ~n distinct values cost O(n log n) array work, never a
+    Python-level loop.  ``values`` is replaced (never mutated) on growth,
+    so captured references stay valid.
+    """
+
+    __slots__ = ("values", "_sorted_vals", "_sorted_ids")
+
+    def __init__(self) -> None:
+        self.values = np.zeros(0, dtype=np.float64)
+        self._sorted_vals = np.zeros(0, dtype=np.float64)  # values, sorted
+        self._sorted_ids = np.zeros(0, dtype=np.int64)  # ids aligned above
+
+    def extend_encode(self, col: np.ndarray) -> np.ndarray:
+        col = np.asarray(col, dtype=np.float64)
+        if not len(col):
+            return np.zeros(0, dtype=np.int32)
+        uniq, inv = np.unique(col, return_inverse=True)
+        if len(self._sorted_vals):
+            pos = np.searchsorted(self._sorted_vals, uniq)
+            pos_c = np.minimum(pos, len(self._sorted_vals) - 1)
+            known = self._sorted_vals[pos_c] == uniq
+            uid = np.where(known, self._sorted_ids[pos_c], -1)
+        else:
+            uid = np.full(len(uniq), -1, dtype=np.int64)
+        fresh_mask = uid < 0
+        if fresh_mask.any():
+            fresh = uniq[fresh_mask]  # sorted (np.unique), first-seen here
+            uid[fresh_mask] = len(self.values) + np.arange(len(fresh))
+            self.values = np.concatenate([self.values, fresh])
+            merged_vals = np.concatenate([self._sorted_vals, fresh])
+            order = np.argsort(merged_vals, kind="stable")
+            self._sorted_vals = merged_vals[order]
+            self._sorted_ids = np.concatenate(
+                [self._sorted_ids, uid[fresh_mask]]
+            )[order]
+        return uid[inv].astype(np.int32)
+
+
 class Store:
     """Catalog of named relations with natural-join materialization and an
     incrementally-maintained cofactor cache."""
 
-    def __init__(self, relations: Optional[Sequence[Relation]] = None) -> None:
+    def __init__(
+        self,
+        relations: Optional[Sequence[Relation]] = None,
+        view_cache_bytes: int = DEFAULT_MAX_BYTES,
+    ) -> None:
         self._relations: Dict[str, Relation] = {}
         self._cofactor_cache: Dict[tuple, _CacheEntry] = {}
         # categorical entries live in their own cache: the key includes the
         # categorical signature (cont tuple, cat tuple) and the delta
         # maintenance runs the grouped engine instead of the plain one.
         self._cat_cache: Dict[tuple, _CacheEntry] = {}
+        # persistent cross-batch per-node view cache (see module docstring);
+        # view_cache_bytes=0 disables it (the cold-baseline escape hatch).
+        self.view_cache = ViewCache(max_bytes=view_cache_bytes)
+        # attr -> append-only global dictionary; (rel, attr) -> cached ids
+        self._dicts: Dict[str, _AttrDict] = {}
+        self._enc_cols: Dict[Tuple[str, str], np.ndarray] = {}
+        # per-append memo of the active delta's encoded columns (see
+        # attr_encoding): (delta relation, {attr: ids}) while inside append
+        self._override_enc: Optional[tuple] = None
         # functional-dependency catalog: (lhs, rhs) -> FD with its witnessed
         # id mapping.  Declared FDs are contracts; inferred ones are dropped
         # when an append falsifies them (see append / _plan_fd_updates).
         self._fds: Dict[Tuple[str, str], FunctionalDependency] = {}
+        # FD-catalog generation + reduction-plan memo: reduction_plan is
+        # pure in (cat list, FD catalog), so invalidation is just a bump.
+        self._fd_version = 0
+        self._red_cache: Dict[tuple, FDReduction] = {}
         # signature -> VariableOrder, kept so maintenance can re-run the engine
         self._vorders: Dict[tuple, "VariableOrder"] = {}
         # col -> (sum, max|x|, count) over the union of relations with col
         self._moments: Dict[str, Tuple[float, float, int]] = {}
-        # cumulative engine traversals / (node, live-subset) evaluations
-        # spent on categorical cofactors (cold computes AND delta folds) —
-        # with the fused multi-output plan this grows by 1 pass per
-        # compute/fold, however many categorical attributes ride along.
+        # unified cumulative counters: EVERY engine traversal / view
+        # evaluation against this store (cold computes, delta folds, GLM
+        # designs, ...) — the engine increments them directly.
+        self.passes = 0
+        self.node_visits = 0
+        # categorical-path subset (cold computes AND delta folds), kept for
+        # continuity with the PR 3 audit trail — with the fused multi-output
+        # plan this grows by 1 pass per compute/fold, however many
+        # categorical attributes ride along.
         self.cat_passes = 0
         self.cat_node_visits = 0
         self.version = 0
         for rel in relations or ():
             self.put(rel)
+
+    # -- attribute dictionaries (append-only, store-global) --------------------
+    def _dict_for(self, attr: str) -> _AttrDict:
+        d = self._dicts.get(attr)
+        if d is None:
+            d = self._dicts[attr] = _AttrDict()
+        return d
+
+    def attr_encoding(
+        self, rel_name: str, attr: str, override: Optional[Relation] = None
+    ) -> np.ndarray:
+        """int32 ids of ``rel_name``'s column ``attr`` under the store's
+        append-only dictionary.  Catalog columns are cached (and extended
+        in place by ``append``); ``override`` encodes a replacement
+        relation's column instead — used by delta engines — without
+        touching the cache."""
+        if override is not None:
+            # one append spawns several delta engines (view-cache folds
+            # per feature group + the result-cache folds); encode each
+            # delta column once per append, not once per engine.
+            memo = self._override_enc
+            if memo is not None and memo[0] is override:
+                ids = memo[1].get(attr)
+                if ids is None:
+                    ids = self._dict_for(attr).extend_encode(
+                        override.column(attr)
+                    )
+                    memo[1][attr] = ids
+                return ids
+            return self._dict_for(attr).extend_encode(override.column(attr))
+        key = (rel_name, attr)
+        ids = self._enc_cols.get(key)
+        if ids is None:
+            col = self._relations[rel_name].column(attr)
+            ids = self._dict_for(attr).extend_encode(col)
+            self._enc_cols[key] = ids
+        return ids
+
+    def attr_values_array(self, attr: str) -> np.ndarray:
+        """id -> value translation array of ``attr``'s global dictionary."""
+        return self._dict_for(attr).values
+
+    def _register_vorder(self, sig: tuple, vorder: "VariableOrder") -> None:
+        """Remember a variable order by signature so ``append`` can rebuild
+        delta engines for view-cache entries created outside
+        :meth:`cofactors` / :meth:`cat_cofactors`."""
+        self._vorders.setdefault(sig, vorder)
+
+    def reset_counters(self) -> None:
+        """Zero every cumulative counter (unified + categorical + view
+        cache) — benches and tests measure deltas from a known origin
+        instead of depending on call order."""
+        self.passes = 0
+        self.node_visits = 0
+        self.cat_passes = 0
+        self.cat_node_visits = 0
+        self.view_cache.hits = 0
+        self.view_cache.misses = 0
+        self.view_cache.evictions = 0
 
     # -- catalog -------------------------------------------------------------
     def put(self, rel: Relation) -> None:
@@ -136,12 +295,19 @@ class Store:
             del self._fds[key]
         for key, mapping in reverified.items():
             self._fds[key].mapping = mapping
+        if stale_fds:
+            self._bump_fds()
         self.version += 1
         self._invalidate(rel.name)
         self._invalidate_fd_entries()
         self._restamp()  # survivors stay valid
         for attr in set(rel.attributes) | set(old.attributes if old else ()):
             self._moments.pop(attr, None)
+        # encoded columns of the replaced relation are stale; the global
+        # dictionaries are NOT rebuilt (append-only forever — unused old
+        # values keep their ids so sibling views never renumber).
+        for key in [k for k in self._enc_cols if k[0] == rel.name]:
+            del self._enc_cols[key]
 
     def get(self, name: str) -> Relation:
         return self._relations[name]
@@ -191,6 +357,7 @@ class Store:
             )
         fd = FunctionalDependency(lhs, rhs, mapping, "declared")
         self._fds[(lhs, rhs)] = fd
+        self._bump_fds()
         self._invalidate_fd_entries()
         return fd
 
@@ -232,6 +399,7 @@ class Store:
                 )
                 found.append((lhs, rhs))
         if found:
+            self._bump_fds()
             self._invalidate_fd_entries()
         return found
 
@@ -239,16 +407,31 @@ class Store:
         return list(self._fds.values())
 
     def drop_fd(self, lhs: str, rhs: str) -> None:
-        self._fds.pop((lhs, rhs), None)
+        if self._fds.pop((lhs, rhs), None) is not None:
+            self._bump_fds()
         self._invalidate_fd_entries()
+
+    def _bump_fds(self) -> None:
+        """The FD catalog changed (set membership or a mapping's contents):
+        memoized reduction plans are stale."""
+        self._fd_version += 1
+        self._red_cache.clear()
 
     def fd_reduction(self, cat: Sequence[str]) -> FDReduction:
         """The FD reduction of a categorical attribute list under the
         current catalog: which attributes a solver can drop (they are
         functionally determined by an earlier one) and the id maps needed
-        to recover their coefficients in closed form."""
+        to recover their coefficients in closed form.  Memoized per
+        (cat list, domains) until the FD catalog changes — warm
+        ``cat_cofactors(reduce_fds=True)`` calls and cache-invalidation
+        scans stop re-running the BFS planner."""
         domains = {a: self.attr_domain(a) for a in cat}
-        return reduction_plan(self._fds, list(cat), domains)
+        key = (tuple(cat), tuple(sorted(domains.items())))
+        plan = self._red_cache.get(key)
+        if plan is None:
+            plan = reduction_plan(self._fds, list(cat), domains)
+            self._red_cache[key] = plan
+        return plan
 
     def _plan_fd_updates(
         self, delta: Relation
@@ -333,7 +516,14 @@ class Store:
             # FD check is a pure plan: raises on a declared-FD violation
             # before anything below has mutated.
             falsified, extensions = self._plan_fd_updates(delta_named)
+            self._override_enc = (delta_named, {})
             try:
+                # persistent view cache first: entries on the appended
+                # relation's root path are folded with delta views (their
+                # sibling subtrees' entries stay valid untouched), so the
+                # result-cache delta engines below — and every later warm
+                # batch — start from an already-maintained view layer.
+                self._maintain_view_cache(name, delta_named)
                 # one delta factorization per (vorder, backend) over the
                 # union of cached feature sets; entries derive via project —
                 # entries differing only in features don't pay the join
@@ -402,16 +592,78 @@ class Store:
             except Exception:
                 self._invalidate(name)
                 raise
+            finally:
+                self._override_enc = None
             for key in falsified:
                 del self._fds[key]
             for key, mapping in extensions.items():
                 self._fds[key].mapping = mapping
+            if falsified or extensions:
+                self._bump_fds()
             if falsified:
                 self._invalidate_fd_entries()
+            # encoded-column cache: the merged relation is base ++ delta,
+            # so cached id columns extend with the delta's ids (global
+            # dictionaries grow append-only — existing ids never move).
+            for attr in delta_named.attributes:
+                enc_key = (name, attr)
+                ids = self._enc_cols.get(enc_key)
+                if ids is not None:
+                    delta_ids = self._dict_for(attr).extend_encode(
+                        delta_named.column(attr)
+                    )
+                    self._enc_cols[enc_key] = np.concatenate(
+                        [ids, delta_ids]
+                    )
         self._relations[name] = merged
         self.version += 1
         self._restamp()
         return merged
+
+    def _maintain_view_cache(self, name: str, delta: Relation) -> None:
+        """Delta-path maintenance of the persistent view cache under
+        ``append(name, delta)``.
+
+        Joins distribute over union, per node: the view of a subtree
+        containing ``name`` over the post-append catalog equals its
+        pre-append view ⊎ the view with ``name`` replaced by the delta
+        rows (Prop. 4.1 at view granularity).  So instead of blanket
+        invalidation, every affected entry — they all sit on the appended
+        relation leaf's root path — is folded in place with a delta view;
+        the delta engines reuse the cached views of untouched sibling
+        subtrees, keeping the cost O(delta root path), never O(tree).
+        Entries whose variable order was never registered fall back to
+        invalidation (cannot rebuild an engine for them)."""
+        vc = self.view_cache
+        affected = [(k, e) for k, e in vc.items() if name in e.relations]
+        if not affected:
+            return
+        from .factorize import FactorizedEngine
+
+        # highest degree first: the degree-2 folds populate the shared
+        # delta memo, and every lower-degree fold trims from it instead
+        # of re-descending
+        affected.sort(key=lambda ke: -ke[0].degree)
+        engines: Dict[tuple, FactorizedEngine] = {}
+        for key, entry in affected:
+            ekey = (key.vorder_sig, key.backend, key.dtype, key.feats)
+            eng = engines.get(ekey)
+            if eng is None:
+                vorder = self._vorders.get(key.vorder_sig)
+                if vorder is None:
+                    vc.discard(key)
+                    continue
+                eng = FactorizedEngine(
+                    self,
+                    vorder,
+                    list(key.feats),
+                    backend=key.backend,
+                    dtype=np.dtype(key.dtype),
+                    overrides={name: delta},
+                    use_view_cache=True,
+                )
+                engines[ekey] = eng
+            vc.replace(key, eng.fold_delta_view(key, entry.view))
 
     def column_moments(self, col: str) -> Tuple[float, float, int]:
         """(sum, max|x|, count) of ``col`` over the union of relations that
@@ -442,17 +694,20 @@ class Store:
         backend: str,
     ) -> "Cofactors":
         """Cofactors of the join with relation ``name`` replaced by the
-        delta rows — the additive update term for one cache entry."""
+        delta rows — the additive update term for one cache entry.  Runs
+        as a delta engine against THIS store (``overrides``), so the
+        descent reuses cached sibling-subtree views and the shared
+        dictionaries instead of re-encoding the whole pre-merge catalog
+        into a throwaway store."""
         from .factorize import FactorizedEngine
 
         vorder = self._vorders[vorder_sig]
-        rels = [
-            delta if rn == name else self._relations[rn]
-            for rn in dict.fromkeys(vorder.relations())
-        ]
-        delta_store = Store(rels)
         return FactorizedEngine(
-            delta_store, vorder, features, backend=backend
+            self,
+            vorder,
+            features,
+            backend=backend,
+            overrides={name: delta},
         ).cofactors()
 
     def _delta_cat_cofactors(
@@ -466,17 +721,20 @@ class Store:
     ):
         """Categorical delta term: the full fused cofactor batch of the join
         with relation ``name`` replaced by the delta rows — ONE multi-output
-        engine traversal per fold, not one per attribute/pair."""
+        engine traversal per fold, not one per attribute/pair, reusing
+        cached sibling-subtree views through ``overrides``."""
         from .categorical import cat_cofactors_factorized
 
         vorder = self._vorders[vorder_sig]
-        rels = [
-            delta if rn == name else self._relations[rn]
-            for rn in dict.fromkeys(vorder.relations())
-        ]
         stats: Dict[str, int] = {}
         out = cat_cofactors_factorized(
-            Store(rels), vorder, cont, cat, backend=backend, stats=stats
+            self,
+            vorder,
+            cont,
+            cat,
+            backend=backend,
+            stats=stats,
+            overrides={name: delta},
         )
         self.cat_passes += stats["passes"]
         self.cat_node_visits += stats["node_visits"]
@@ -573,25 +831,35 @@ class Store:
         return cof
 
     def cache_info(self) -> Dict[str, int]:
+        vc = self.view_cache
         return {
             "entries": len(self._cofactor_cache),
             "cat_entries": len(self._cat_cache),
             "fds": len(self._fds),
             "version": self.version,
+            "passes": self.passes,
+            "node_visits": self.node_visits,
             "cat_passes": self.cat_passes,
             "cat_node_visits": self.cat_node_visits,
+            "view_cache_entries": len(vc),
+            "view_cache_bytes": vc.bytes,
+            "view_cache_hits": vc.hits,
+            "view_cache_misses": vc.misses,
+            "view_cache_evictions": vc.evictions,
         }
 
     def _restamp(self) -> None:
         for cache in (self._cofactor_cache, self._cat_cache):
             for entry in cache.values():
                 entry.version = self.version
+        self.view_cache.restamp(self.version)
 
     def _invalidate(self, name: str) -> None:
         for cache in (self._cofactor_cache, self._cat_cache):
             stale = [k for k, e in cache.items() if name in e.relations]
             for k in stale:
                 del cache[k]
+        self.view_cache.invalidate_relation(name)
 
     # -- natural join (the noPre path) ----------------------------------------
     def materialize_join(

@@ -1,0 +1,223 @@
+"""Persistent cross-batch view cache — store-owned per-node engine views.
+
+``FactorizedEngine.run_batch`` memoizes per-node partial views for the
+duration of ONE batch; this module promotes that memo to a **store-owned,
+cross-batch** cache (the AC/DC direction: reuse aggregates *across* calls
+and maintain them incrementally under updates).  Successive engine batches
+over overlapping attribute sets — warm retrains, FD on/off comparisons,
+GLM IRLS re-solves, per-attribute sweeps — reuse finished subtree descents
+instead of recomputing them.
+
+Keying.  A view is identified by :class:`ViewKey`:
+
+  ``vorder_sig``  structural signature of the variable order (two orders
+                  with the same shape share entries, whatever Python
+                  objects they are),
+  ``backend`` / ``dtype``  the value-math configuration (jax fp32 views
+                  never alias numpy fp64 oracle views),
+  ``node``        the node's *preorder index* within the order — stable
+                  across engine instances, unlike ``id(node)``,
+  ``feats``       the (sorted) engine features present in the node's
+                  subtree — engines with different global feature lists
+                  share every subtree that sees the same feature subset,
+  ``keep``        the live group-attribute subset at the node,
+  ``degree``      the monomial degree the view was evaluated at (a cached
+                  degree-2 view serves degree-0/1 requests by trimming).
+
+Validity.  Entries are stamped with the store version and restamped by
+every mutation that keeps them valid (the same backstop protocol as the
+store's cofactor caches).  ``Store.append`` does **not** blanket-
+invalidate: entries whose subtree misses the appended relation survive
+untouched, and entries on the appended relation's root path are folded in
+place with a delta view (union commutativity, Prop. 4.1) — see
+``Store._maintain_view_cache``.  ``put`` invalidates exactly the entries
+whose subtree covers the replaced relation.
+
+Eviction.  The cache is bytes-accounted (device arrays report ``nbytes``
+without transfer) with LRU eviction; ``Store.cache_info()`` surfaces
+``view_cache_bytes`` / ``view_cache_evictions`` so benchmarks can audit
+the budget.  This module is deliberately free of engine imports — views
+are opaque objects with ``keys``/``c``/``l``/``q`` array attributes.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, FrozenSet, Iterable, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ViewCache", "ViewKey", "view_nbytes"]
+
+#: Default eviction budget — generous for test/bench scale, small enough
+#: that a production sweep over many variable orders cannot grow unbounded.
+DEFAULT_MAX_BYTES = 256 << 20
+
+
+class ViewKey(NamedTuple):
+    """Identity of one cached per-node view (see module docstring)."""
+
+    vorder_sig: tuple
+    backend: str
+    dtype: str
+    node: int  # preorder index of the node within the variable order
+    feats: Tuple[str, ...]  # sorted features present in the node's subtree
+    keep: FrozenSet[str]  # live group attributes at the node
+    degree: int
+
+
+def _arr_nbytes(arr) -> int:
+    if arr is None:
+        return 0
+    nbytes = getattr(arr, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    a = np.asarray(arr)
+    return int(a.size * a.dtype.itemsize)
+
+
+def view_nbytes(view) -> int:
+    """Approximate resident size of a ``_View`` (host + device arrays)."""
+    n = 0
+    for col in view.keys.values():
+        n += _arr_nbytes(col)
+    for arr in (view.c, view.l, view.q):
+        n += _arr_nbytes(arr)
+    return n
+
+
+class _Entry:
+    __slots__ = ("view", "relations", "version", "nbytes")
+
+    def __init__(self, view, relations: frozenset, version: int, nbytes: int):
+        self.view = view
+        self.relations = relations
+        self.version = version
+        self.nbytes = nbytes
+
+
+class ViewCache:
+    """Bytes-accounted LRU cache of per-node factorized views.
+
+    ``enabled=False`` turns the cache into a no-op sink (``get`` misses,
+    ``put`` discards) without dropping already-stored entries — the
+    ``use_view_cache=False`` escape hatch benchmarks use for the cold
+    baseline.  Hit/miss counters are maintained by the *engine* (one
+    logical probe may try several degrees); eviction counters here.
+    """
+
+    def __init__(
+        self, max_bytes: int = DEFAULT_MAX_BYTES, enabled: bool = True
+    ) -> None:
+        self._entries: "OrderedDict[ViewKey, _Entry]" = OrderedDict()
+        self.max_bytes = int(max_bytes)
+        self.enabled = enabled and self.max_bytes > 0
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: ViewKey, version: int):
+        """The view under ``key`` valid at store ``version``, else None.
+        A version-mismatched entry is dropped on sight (backstop against
+        invalidation-rule bugs, as in the store's cofactor caches)."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        if entry.version != version:
+            self.discard(key)
+            return None
+        self._entries.move_to_end(key)
+        return entry.view
+
+    def put(
+        self,
+        key: ViewKey,
+        view,
+        relations: frozenset,
+        version: int,
+        nbytes: Optional[int] = None,
+    ) -> None:
+        if nbytes is None:
+            nbytes = view_nbytes(view)
+        if nbytes > self.max_bytes:
+            return  # single oversized view: never worth the whole budget
+        self.discard(key)
+        # a higher-degree view subsumes the lower-degree variants — drop
+        # them so the budget isn't spent twice on the same subtree
+        for d in range(key.degree):
+            self.discard(key._replace(degree=d))
+        self._entries[key] = _Entry(view, relations, version, nbytes)
+        self.bytes += nbytes
+        self._evict()
+
+    def _evict(self) -> None:
+        """LRU-evict until the byte budget holds.  The most recent entry
+        (tail) is never popped: ``popitem(last=False)`` takes the head and
+        the loop stops once a single entry remains."""
+        while self.bytes > self.max_bytes and len(self._entries) > 1:
+            _, old = self._entries.popitem(last=False)
+            self.bytes -= old.nbytes
+            self.evictions += 1
+
+    def replace(self, key: ViewKey, view, nbytes: Optional[int] = None) -> None:
+        """Swap the view of an existing entry in place (delta fold),
+        keeping its relations; no-op if absent.  The entry counts as
+        freshly used (moved to the LRU tail), and growth re-runs eviction
+        so folds cannot creep past the byte budget."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return
+        if nbytes is None:
+            nbytes = view_nbytes(view)
+        self.bytes += nbytes - entry.nbytes
+        entry.view = view
+        entry.nbytes = nbytes
+        self._entries.move_to_end(key)
+        self._evict()
+
+    def discard(self, key: ViewKey) -> None:
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self.bytes -= entry.nbytes
+
+    def items(self) -> List[Tuple[ViewKey, _Entry]]:
+        """Snapshot of (key, entry) pairs — safe to mutate while iterating."""
+        return list(self._entries.items())
+
+    def invalidate_relation(self, name: str) -> None:
+        """Drop every entry whose subtree covers relation ``name`` (the
+        ``put`` rule).  Entries over unrelated subtrees survive."""
+        for key in [
+            k for k, e in self._entries.items() if name in e.relations
+        ]:
+            self.discard(key)
+
+    def restamp(self, version: int, keys: Optional[Iterable[ViewKey]] = None):
+        """Mark entries valid at ``version`` (after a mutation whose
+        maintenance kept them correct)."""
+        if keys is None:
+            for entry in self._entries.values():
+                entry.version = version
+        else:
+            for key in keys:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    entry.version = version
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.bytes = 0
+
+    def info(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
