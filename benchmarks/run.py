@@ -1,4 +1,5 @@
-"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run [--smoke]``.
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run [--smoke]
+[--suite NAME ...]``.
 
 One module per paper table/figure (+ substrate benches):
 
@@ -10,13 +11,17 @@ One module per paper table/figure (+ substrate benches):
   categorical_vs_onehot        — sparse categorical cofactors vs one-hot
   view_cache_cold_warm_append  — persistent view cache: warm batches +
                                  retrain-after-append vs invalidate-all
+  serve_coalescing             — multi-tenant service: coalesced vs
+                                 private traversals under Zipfian overlap
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
 
-``--smoke`` runs every suite at tiny fixed-seed sizes (< 2 min total) —
-the CI benchmark-smoke job's mode.  JSON mirrors land in
-benchmarks/results/, plus a ``summary.json`` with per-suite status.
+``--smoke`` runs every selected suite at tiny fixed-seed sizes (< 2 min
+total) — the CI benchmark-smoke job's mode.  ``--suite NAME`` (repeatable)
+filters to named suites; an unknown name errors listing the valid ones.
+JSON mirrors land in benchmarks/results/, plus a ``summary.json`` with
+per-suite status.
 
 Exit code is non-zero when ANY suite raises (each failure prints its full
 traceback); CI gates on it.
@@ -25,6 +30,7 @@ traceback); CI gates on it.
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
 import sys
@@ -32,32 +38,43 @@ import traceback
 
 from .common import RESULTS_DIR, stopwatch
 
+#: slug (the --suite name) -> (display title, bench module)
+SUITES = [
+    ("factorized", "table2 (factorized versions)", "bench_factorized"),
+    ("engines", "figure9 (engine comparison)", "bench_engines"),
+    ("aggregates", "figures2-3 (aggregates)", "bench_aggregates"),
+    ("scaling", "union commutativity scaling", "bench_scaling"),
+    ("incremental", "incremental retrain after append", "bench_incremental"),
+    ("categorical", "categorical vs one-hot", "bench_categorical"),
+    ("view_cache", "view cache cold/warm/append", "bench_view_cache"),
+    ("serve", "multi-tenant serve coalescing", "bench_serve"),
+    ("polynomial", "polynomial extension", "bench_polynomial"),
+    ("kernels", "kernel hotspots", "bench_kernels"),
+    ("lm", "lm smoke steps", "bench_lm"),
+]
 
-def default_suites():
-    from . import (
-        bench_aggregates,
-        bench_categorical,
-        bench_engines,
-        bench_factorized,
-        bench_incremental,
-        bench_kernels,
-        bench_lm,
-        bench_polynomial,
-        bench_scaling,
-        bench_view_cache,
-    )
 
+def suite_names() -> list:
+    return [slug for slug, _, _ in SUITES]
+
+
+def default_suites(only=None):
+    """(title, fn) pairs for the selected suites (all when ``only`` is
+    falsy).  Unknown names raise ValueError listing the valid slugs —
+    before any bench module is imported."""
+    if only:
+        unknown = sorted(set(only) - set(suite_names()))
+        if unknown:
+            raise ValueError(
+                f"unknown suite(s) {', '.join(unknown)} — valid suites: "
+                f"{', '.join(suite_names())}"
+            )
+        selected = [s for s in SUITES if s[0] in set(only)]
+    else:
+        selected = SUITES
     return [
-        ("table2 (factorized versions)", bench_factorized.main),
-        ("figure9 (engine comparison)", bench_engines.main),
-        ("figures2-3 (aggregates)", bench_aggregates.main),
-        ("union commutativity scaling", bench_scaling.main),
-        ("incremental retrain after append", bench_incremental.main),
-        ("categorical vs one-hot", bench_categorical.main),
-        ("view cache cold/warm/append", bench_view_cache.main),
-        ("polynomial extension", bench_polynomial.main),
-        ("kernel hotspots", bench_kernels.main),
-        ("lm smoke steps", bench_lm.main),
+        (title, importlib.import_module(f".{mod}", __package__).main)
+        for _, title, mod in selected
     ]
 
 
@@ -104,8 +121,20 @@ def main(argv=None) -> int:
         action="store_true",
         help="tiny fixed-seed sizes for CI gating (< 2 min total)",
     )
+    parser.add_argument(
+        "--suite",
+        action="append",
+        metavar="NAME",
+        help="run only the named suite (repeatable); one of: "
+        + ", ".join(suite_names()),
+    )
     args = parser.parse_args(argv)
-    return run_suites(default_suites(), smoke=args.smoke)
+    try:
+        suites = default_suites(args.suite)
+    except ValueError as err:
+        print(f"[benchmarks] {err}", file=sys.stderr)
+        return 2
+    return run_suites(suites, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -85,11 +85,15 @@ from .view_cache import ViewKey
 __all__ = [
     "AggregateBlock",
     "AggregateQuery",
+    "BatchPart",
     "Cofactors",
     "FactorizedEngine",
     "GroupedView",
+    "MergedBatch",
     "cofactors_factorized",
     "grouped_cofactors_factorized",
+    "merge_batches",
+    "scatter_results",
 ]
 
 
@@ -211,6 +215,121 @@ class AggregateBlock:
         """Group keys of a dictionary-encoded attribute as int64 ids."""
         return self.keys[attr].astype(np.int64)
 
+    def restrict(
+        self, features: Sequence[str], degree: int
+    ) -> "AggregateBlock":
+        """Project onto a feature sublist and trim blocks above ``degree``
+        (Prop. 4.1 commutativity with projection, at block granularity) —
+        how a merged multi-request batch's shared output is scattered back
+        to one request: pure slicing, no recomputation."""
+        lin = quad = None
+        feats: List[str] = []
+        if degree >= 1:
+            if self.lin is None:
+                raise ValueError("block holds no degree-1 aggregates")
+            idx = [self.features.index(f) for f in features]
+            feats = list(features)
+            lin = self.lin[:, idx]
+            if degree == 2:
+                if self.quad is None:
+                    raise ValueError("block holds no degree-2 aggregates")
+                quad = self.quad[:, idx][:, :, idx]
+        return AggregateBlock(
+            keys=dict(self.keys),
+            count=self.count,
+            lin=lin,
+            quad=quad,
+            features=feats,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPart:
+    """One request's slice of a merged multi-request batch: the features
+    and aggregate queries a single tenant asked for, tagged with a
+    caller-chosen request id used to route results back."""
+
+    rid: object  # hashable request id, unique within one merge
+    features: Tuple[str, ...]
+    queries: Tuple[AggregateQuery, ...]
+
+
+@dataclasses.dataclass
+class MergedBatch:
+    """The coalescing product of :func:`merge_batches`: ONE feature union +
+    ONE deduplicated query list to hand to a single ``run_batch``, plus the
+    assignment map that scatters shared outputs back per request."""
+
+    features: List[str]
+    queries: List[AggregateQuery]
+    # (rid, per-request query name) -> merged query name
+    assignments: Dict[Tuple[object, str], str]
+
+
+def merge_batches(parts: Sequence[BatchPart]) -> MergedBatch:
+    """Coalesce aggregate batches from different requests into one plan.
+
+    The engine's ``run_batch`` already shares subtree views *within* a
+    batch (node memo keyed by live query subset); this is the cross-request
+    step: feature lists union (a view over F ⊇ F' serves F' by projection —
+    Prop. 4.1), and queries from different requests that group by the same
+    attribute set collapse to a single output evaluated at the max
+    requested degree.  N overlapping tenant requests become ONE traversal;
+    :func:`scatter_results` slices every request's declared shape back out.
+    """
+    if not parts:
+        raise ValueError("merge_batches needs at least one part")
+    features = list(
+        dict.fromkeys(f for p in parts for f in p.features)
+    )
+    # merged query identity: the *set* of group attributes (order does not
+    # change the grouping, only key-column order; first-seen order wins)
+    by_sig: Dict[FrozenSet[str], List] = {}
+    order: List[FrozenSet[str]] = []
+    assignments: Dict[Tuple[object, str], FrozenSet[str]] = {}
+    for p in parts:
+        for q in p.queries:
+            akey = (p.rid, q.name)
+            if akey in assignments:
+                raise ValueError(
+                    f"duplicate query name {q.name!r} in request {p.rid!r}"
+                )
+            sig = frozenset(q.group_by)
+            ent = by_sig.get(sig)
+            if ent is None:
+                by_sig[sig] = [tuple(q.group_by), q.degree]
+                order.append(sig)
+            else:
+                ent[1] = max(ent[1], q.degree)
+            assignments[akey] = sig
+    names = {sig: f"m{i}" for i, sig in enumerate(order)}
+    return MergedBatch(
+        features=features,
+        queries=[
+            AggregateQuery(names[sig], by_sig[sig][0], by_sig[sig][1])
+            for sig in order
+        ],
+        assignments={k: names[sig] for k, sig in assignments.items()},
+    )
+
+
+def scatter_results(
+    merged: MergedBatch,
+    parts: Sequence[BatchPart],
+    results: Dict[str, AggregateBlock],
+) -> Dict[object, Dict[str, AggregateBlock]]:
+    """Slice one merged ``run_batch`` output back into per-request results:
+    ``out[rid][query name]`` is exactly the block the request would have
+    received from a private engine over its own feature list (same feature
+    order, same declared degree) — up to float summation order."""
+    out: Dict[object, Dict[str, AggregateBlock]] = {}
+    for p in parts:
+        mine = out.setdefault(p.rid, {})
+        for q in p.queries:
+            blk = results[merged.assignments[(p.rid, q.name)]]
+            mine[q.name] = blk.restrict(list(p.features), q.degree)
+    return out
+
 
 @dataclasses.dataclass
 class GroupedView:
@@ -297,8 +416,17 @@ class FactorizedEngine:
         overrides: Optional[Dict[str, Relation]] = None,
         use_view_cache: Optional[bool] = None,
     ) -> None:
-        validate(vorder, store)
         self.store = store
+        # freeze the catalog: all *data* reads (relations, encoded columns)
+        # go through an immutable snapshot, so a concurrent ``append`` /
+        # ``put`` on the live store can never corrupt an in-flight
+        # traversal — the engine observes bit-identical data whether or
+        # not a mutation lands mid-batch.  Counters, the view cache and
+        # vorder registration still route through ``self.store`` (the
+        # snapshot forwards them), keeping store totals authoritative.
+        snap = getattr(store, "snapshot", None)
+        self.data = snap() if callable(snap) else store
+        validate(vorder, self.data)
         self.vorder = vorder
         self.features = list(features)
         if backend not in ("jax", "numpy"):
@@ -342,8 +470,10 @@ class FactorizedEngine:
         # encoded columns are a SNAPSHOT of the catalog at construction
         # time: if the store mutates afterwards, this engine's views are
         # stale-by-design and must neither probe nor publish the shared
-        # cache (a stale publish would poison every later query).
-        self._vc_version = getattr(store, "version", 0)
+        # cache (a stale publish would poison every later query).  The
+        # comparison is frozen-vs-live: ``live_version`` reaches through a
+        # StoreSnapshot to the parent store's current version.
+        self._vc_version = getattr(self.data, "version", 0)
         if self._vc is not None and hasattr(store, "_register_vorder"):
             # append maintenance needs the order to rebuild delta engines
             store._register_vorder(self.sig, vorder)
@@ -387,7 +517,12 @@ class FactorizedEngine:
         }
 
     def _get_rel(self, name: str) -> Relation:
-        return self.overrides.get(name) or self.store.get(name)
+        return self.overrides.get(name) or self.data.get(name)
+
+    def _live_version(self) -> int:
+        """The live store's current version (reaches through a snapshot)."""
+        v = getattr(self.store, "live_version", None)
+        return v if v is not None else getattr(self.store, "version", 0)
 
     def _check_group_attrs(self, group_by: Sequence[str]) -> None:
         overlap = set(group_by) & set(self.features)
@@ -417,12 +552,12 @@ class FactorizedEngine:
         self.domains: Dict[str, int] = {}
         self.attr_values: Dict[str, np.ndarray] = {}  # id -> float value
         self.encoded: Dict[Tuple[str, str], np.ndarray] = {}  # (rel, attr) -> ids
-        if hasattr(self.store, "attr_encoding"):
+        if hasattr(self.data, "attr_encoding"):
             attrs: set = set()
             for rn in rel_names:
                 rel = self._get_rel(rn)
                 for attr in rel.attributes:
-                    self.encoded[(rn, attr)] = self.store.attr_encoding(
+                    self.encoded[(rn, attr)] = self.data.attr_encoding(
                         rn, attr, override=self.overrides.get(rn)
                     )
                     attrs.add(attr)
@@ -430,7 +565,7 @@ class FactorizedEngine:
             # introduced by this engine's relations are covered; the store
             # replaces (never mutates) the arrays, so these stay valid.
             for attr in attrs:
-                vals = self.store.attr_values_array(attr)
+                vals = self.data.attr_values_array(attr)
                 self.attr_values[attr] = vals
                 self.domains[attr] = len(vals)
             return
@@ -636,8 +771,10 @@ class FactorizedEngine:
         if self._vc is None:
             return False
         # catalog moved on since this engine snapshotted its encodings:
-        # its views describe the OLD catalog — stay out of the cache
-        if getattr(self.store, "version", 0) != self._vc_version:
+        # its views describe the OLD catalog — stay out of the cache.  The
+        # snapshot keeps the traversal itself correct; this check only
+        # stops stale publishes / probes against the newer-versioned cache.
+        if self._live_version() != self._vc_version:
             return False
         # Relation leaves are never persisted: a leaf view is ones/zeros
         # plus references to the (already cached) encoded key columns —
@@ -656,16 +793,49 @@ class FactorizedEngine:
     ) -> Optional[_View]:
         if not self._vc_eligible(node):
             return None
-        version = getattr(self.store, "version", 0)
+        version = self._vc_version  # eligibility pinned live == frozen
         for d in range(degree, 3):
             view = self._vc.get(self._vc_key(node, keep, d), version)
             if view is not None:
                 self.vc_hits += 1
                 self._vc.hits += 1
                 return self._trim_view(view, degree)
+        # cross-dtype reuse: a float64 view of the same node (any backend)
+        # serves a lower-precision request by casting its blocks — an O(view)
+        # copy instead of a subtree re-descent.  A fully-warm fp32 batch
+        # over fp64-cached subtrees therefore reports ZERO node_visits.
+        # The cast is not re-published: the fp64 entry stays the single
+        # canonical copy (no double byte-accounting), and the cast itself
+        # is cheaper than a second cache round-trip.
+        if self._dtype_tag != "float64":
+            base = self._vc_key(node, keep, degree)
+            for backend in dict.fromkeys((self.backend, "numpy", "jax")):
+                for d in range(degree, 3):
+                    key64 = base._replace(
+                        backend=backend, dtype="float64", degree=d
+                    )
+                    view = self._vc.get(key64, version)
+                    if view is not None:
+                        self.vc_hits += 1
+                        self._vc.hits += 1
+                        return self._cast_view(self._trim_view(view, degree))
         self.vc_misses += 1
         self._vc.misses += 1
         return None
+
+    def _cast_view(self, view: _View) -> _View:
+        """Re-express a cached view in this engine's backend/dtype.  Key
+        columns are shared (ids are backend-agnostic); value blocks are
+        converted — the cross-dtype serving path."""
+        xp, dt = self.xp, self.dtype
+        return _View(
+            keys=view.keys,
+            c=xp.asarray(view.c, dtype=dt),
+            l=xp.asarray(view.l, dtype=dt) if view.l is not None else None,
+            q=xp.asarray(view.q, dtype=dt) if view.q is not None else None,
+            feats=list(view.feats),
+            degree=view.degree,
+        )
 
     def _vc_put(
         self, node: VariableOrder, keep: FrozenSet[str], degree: int, view
@@ -676,7 +846,7 @@ class FactorizedEngine:
             self._vc_key(node, keep, degree),
             view,
             relations=self._subtree_rels[id(node)],
-            version=getattr(self.store, "version", 0),
+            version=self._vc_version,  # eligibility pinned live == frozen
         )
 
     @staticmethod

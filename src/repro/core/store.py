@@ -85,7 +85,7 @@ if TYPE_CHECKING:  # avoid a circular import at runtime (factorize -> store)
     from .factorize import Cofactors
     from .variable_order import VariableOrder
 
-__all__ = ["Store"]
+__all__ = ["Store", "StoreSnapshot"]
 
 
 @dataclasses.dataclass
@@ -258,13 +258,22 @@ class Store:
         mutation, so cache entries covering the name are invalidated, and
         every FD touching the relation's attributes is re-verified from
         scratch (a declared FD that no longer holds raises; an inferred one
-        is silently dropped)."""
+        is silently dropped).
+
+        Copy-on-write: the catalog / FD / moments / encoded-column maps are
+        *replaced*, never mutated — a :class:`StoreSnapshot` taken before
+        the call keeps reading the old maps, unblocked and uncorrupted.
+        """
         old = self._relations.get(rel.name)
+        old_relations = self._relations
         touched = set(rel.keys) | set(old.keys if old else ())
         stale_fds = [
             key for key in self._fds if key[0] in touched or key[1] in touched
         ]
-        self._relations[rel.name] = rel
+        # install the new catalog map up front so FD re-verification sees
+        # the post-put data; a declared-FD violation restores the untouched
+        # old map (rollback is a single pointer swap under COW).
+        self._relations = {**old_relations, rel.name: rel}
         reverified: Dict[Tuple[str, str], np.ndarray] = {}
         dropped_fds = []
         for key in stale_fds:
@@ -280,10 +289,7 @@ class Store:
             )
             if mapping is None:
                 if fd.source == "declared":
-                    if old is None:
-                        self._relations.pop(rel.name)
-                    else:
-                        self._relations[rel.name] = old
+                    self._relations = old_relations
                     raise ValueError(
                         f"put({rel.name!r}) violates declared FD "
                         f"{key[0]} → {key[1]}"
@@ -291,23 +297,33 @@ class Store:
                 dropped_fds.append(key)
             else:
                 reverified[key] = mapping
-        for key in dropped_fds:
-            del self._fds[key]
-        for key, mapping in reverified.items():
-            self._fds[key].mapping = mapping
+        if dropped_fds or reverified:
+            new_fds = dict(self._fds)
+            for key in dropped_fds:
+                del new_fds[key]
+            for key, mapping in reverified.items():
+                new_fds[key] = dataclasses.replace(
+                    new_fds[key], mapping=mapping
+                )
+            self._fds = new_fds
         if stale_fds:
             self._bump_fds()
         self.version += 1
         self._invalidate(rel.name)
         self._invalidate_fd_entries()
         self._restamp()  # survivors stay valid
-        for attr in set(rel.attributes) | set(old.attributes if old else ()):
-            self._moments.pop(attr, None)
+        stale_attrs = set(rel.attributes) | set(
+            old.attributes if old else ()
+        )
+        self._moments = {
+            k: v for k, v in self._moments.items() if k not in stale_attrs
+        }
         # encoded columns of the replaced relation are stale; the global
         # dictionaries are NOT rebuilt (append-only forever — unused old
         # values keep their ids so sibling views never renumber).
-        for key in [k for k in self._enc_cols if k[0] == rel.name]:
-            del self._enc_cols[key]
+        self._enc_cols = {
+            k: v for k, v in self._enc_cols.items() if k[0] != rel.name
+        }
 
     def get(self, name: str) -> Relation:
         return self._relations[name]
@@ -356,7 +372,7 @@ class Store:
                 "relation contains both attributes as keys)"
             )
         fd = FunctionalDependency(lhs, rhs, mapping, "declared")
-        self._fds[(lhs, rhs)] = fd
+        self._fds = {**self._fds, (lhs, rhs): fd}
         self._bump_fds()
         self._invalidate_fd_entries()
         return fd
@@ -387,18 +403,20 @@ class Store:
                     if lhs != rhs:
                         pairs.setdefault((lhs, rhs))
         found: List[Tuple[str, str]] = []
+        new_fds = dict(self._fds)
         for lhs, rhs in pairs:
-            if (lhs, rhs) in self._fds:
+            if (lhs, rhs) in new_fds:
                 continue
             mapping = witnessed_mapping(
                 self.relations(), lhs, rhs, self.attr_domain(lhs)
             )
             if mapping is not None:
-                self._fds[(lhs, rhs)] = FunctionalDependency(
+                new_fds[(lhs, rhs)] = FunctionalDependency(
                     lhs, rhs, mapping, "inferred"
                 )
                 found.append((lhs, rhs))
         if found:
+            self._fds = new_fds
             self._bump_fds()
             self._invalidate_fd_entries()
         return found
@@ -407,7 +425,10 @@ class Store:
         return list(self._fds.values())
 
     def drop_fd(self, lhs: str, rhs: str) -> None:
-        if self._fds.pop((lhs, rhs), None) is not None:
+        if (lhs, rhs) in self._fds:
+            self._fds = {
+                k: v for k, v in self._fds.items() if k != (lhs, rhs)
+            }
             self._bump_fds()
         self._invalidate_fd_entries()
 
@@ -580,11 +601,15 @@ class Store:
                         entry.cofactors = entry.cofactors + delta_cof.project(
                             list(key[1]), list(entry.cofactors.cat)
                         )
+                # per-column moments: accumulate under union.  Built as a
+                # fresh map and published below with the catalog — a
+                # snapshot holding the old map never sees a partial update.
+                new_moments = dict(self._moments)
                 for attr, (s, mx, cnt) in list(self._moments.items()):
                     if attr not in delta_named.attributes:
                         continue
                     col = delta_named.column(attr).astype(np.float64)
-                    self._moments[attr] = (
+                    new_moments[attr] = (
                         s + float(col.sum()),
                         max(mx, float(np.abs(col).max())),
                         cnt + len(col),
@@ -594,28 +619,34 @@ class Store:
                 raise
             finally:
                 self._override_enc = None
-            for key in falsified:
-                del self._fds[key]
-            for key, mapping in extensions.items():
-                self._fds[key].mapping = mapping
             if falsified or extensions:
+                new_fds = dict(self._fds)
+                for key in falsified:
+                    del new_fds[key]
+                for key, mapping in extensions.items():
+                    new_fds[key] = dataclasses.replace(
+                        new_fds[key], mapping=mapping
+                    )
+                self._fds = new_fds
                 self._bump_fds()
             if falsified:
                 self._invalidate_fd_entries()
             # encoded-column cache: the merged relation is base ++ delta,
             # so cached id columns extend with the delta's ids (global
             # dictionaries grow append-only — existing ids never move).
+            new_enc = dict(self._enc_cols)
             for attr in delta_named.attributes:
                 enc_key = (name, attr)
-                ids = self._enc_cols.get(enc_key)
+                ids = new_enc.get(enc_key)
                 if ids is not None:
                     delta_ids = self._dict_for(attr).extend_encode(
                         delta_named.column(attr)
                     )
-                    self._enc_cols[enc_key] = np.concatenate(
-                        [ids, delta_ids]
-                    )
-        self._relations[name] = merged
+                    new_enc[enc_key] = np.concatenate([ids, delta_ids])
+            self._enc_cols = new_enc
+            self._moments = new_moments
+        # COW publish: snapshot readers holding the old maps are untouched.
+        self._relations = {**self._relations, name: merged}
         self.version += 1
         self._restamp()
         return merged
@@ -861,6 +892,25 @@ class Store:
                 del cache[k]
         self.view_cache.invalidate_relation(name)
 
+    # -- snapshots -------------------------------------------------------------
+    @property
+    def live_version(self) -> int:
+        """The store's current catalog version.  On a :class:`StoreSnapshot`
+        the same property forwards to the parent store, so engines can ask
+        "is the catalog I froze still the live one" uniformly."""
+        return self.version
+
+    def snapshot(self) -> "StoreSnapshot":
+        """An immutable read view of the catalog at the current version.
+
+        O(1): captures references to the copy-on-write maps (`_relations`,
+        encoded columns, moments, FD catalog) — every later ``put`` /
+        ``append`` / FD mutation *replaces* those maps on the store, so the
+        snapshot keeps serving the frozen state without blocking writers
+        and without writers corrupting it (MVCC by structural sharing).
+        """
+        return StoreSnapshot(self)
+
     # -- natural join (the noPre path) ----------------------------------------
     def materialize_join(
         self, names: Optional[Sequence[str]] = None
@@ -871,20 +921,260 @@ class Store:
         with at least one shared attribute (avoids accidental cross products
         when a connected join order exists).
         """
-        todo = [self._relations[n] for n in (names or self.names())]
-        if not todo:
-            raise ValueError("no relations to join")
-        acc = todo.pop(0)
-        while todo:
-            pick = None
-            for i, rel in enumerate(todo):
-                if set(acc.keys) & set(rel.keys):
-                    pick = i
-                    break
-            if pick is None:  # genuine cross product required
-                pick = 0
-            acc = _join_pair(acc, todo.pop(pick))
-        return acc
+        return _materialize(self._relations, names)
+
+
+class StoreSnapshot:
+    """Read-only view of a :class:`Store` frozen at one catalog version.
+
+    Duck-types the Store read surface (`get` / `attr_encoding` /
+    `column_moments` / `fd_reduction` / `cofactors` / ... ), so a
+    ``FactorizedEngine`` — or any reader — runs against it unchanged.
+    Concurrent ``append`` / ``put`` / FD mutations on the parent replace
+    the parent's maps copy-on-write; this object keeps the frozen
+    references, so an in-flight reader observes bit-identical data whether
+    or not a mutation lands mid-request.
+
+    Shared with the parent (safe by construction):
+
+    * the append-only attribute dictionaries — values are only ever
+      *extended*, ids never renumber, so post-snapshot growth is invisible
+      to ids the snapshot can produce;
+    * the version-stamped ``ViewCache`` — entries carry the version they
+      are valid at, and engines stand down from the cache the moment the
+      live version moves past their frozen one;
+    * the cumulative ``passes`` / ``node_visits`` counters — snapshot
+      traversals forward into the parent's totals so store-level counter
+      audits keep summing up.
+
+    Result-level caches (`cofactors` / `cat_cofactors`) delegate to the
+    parent only while the snapshot is still current; once the parent moves
+    on, the snapshot computes fresh, uncached, against its frozen maps.
+    """
+
+    def __init__(self, store: Store) -> None:
+        self._store = store
+        self.version = store.version
+        self._relations = store._relations
+        self._enc_cols = store._enc_cols
+        self._moments = store._moments
+        self._fds_map = store._fds
+        self._fd_version = store._fd_version
+        self._red_cache: Dict[tuple, FDReduction] = {}
+        self.view_cache = store.view_cache
+
+    # -- freshness -------------------------------------------------------------
+    @property
+    def live_version(self) -> int:
+        return self._store.version
+
+    @property
+    def is_current(self) -> bool:
+        """True while no catalog or FD mutation has landed on the parent
+        since this snapshot was taken."""
+        return (
+            self.version == self._store.version
+            and self._fd_version == self._store._fd_version
+        )
+
+    def snapshot(self) -> "StoreSnapshot":
+        return self  # already frozen; engines may call this blindly
+
+    # -- counters (forwarded: store totals stay the audit source of truth) -----
+    @property
+    def passes(self) -> int:
+        return self._store.passes
+
+    @passes.setter
+    def passes(self, v: int) -> None:
+        self._store.passes = v
+
+    @property
+    def node_visits(self) -> int:
+        return self._store.node_visits
+
+    @node_visits.setter
+    def node_visits(self, v: int) -> None:
+        self._store.node_visits = v
+
+    @property
+    def cat_passes(self) -> int:
+        return self._store.cat_passes
+
+    @cat_passes.setter
+    def cat_passes(self, v: int) -> None:
+        self._store.cat_passes = v
+
+    @property
+    def cat_node_visits(self) -> int:
+        return self._store.cat_node_visits
+
+    @cat_node_visits.setter
+    def cat_node_visits(self, v: int) -> None:
+        self._store.cat_node_visits = v
+
+    def _register_vorder(self, sig: tuple, vorder: "VariableOrder") -> None:
+        # registration targets append-time maintenance on the live store
+        self._store._register_vorder(sig, vorder)
+
+    # -- catalog reads (frozen) ------------------------------------------------
+    def get(self, name: str) -> Relation:
+        return self._relations[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._relations
+
+    def names(self) -> List[str]:
+        return list(self._relations)
+
+    def relations(self) -> List[Relation]:
+        return list(self._relations.values())
+
+    def total_rows(self) -> int:
+        return sum(r.num_rows for r in self._relations.values())
+
+    def attr_domain(self, attr: str) -> int:
+        doms = [
+            rel.domains[attr]
+            for rel in self._relations.values()
+            if attr in rel.domains
+        ]
+        if not doms:
+            raise ValueError(
+                f"attribute {attr!r} is not a dictionary-encoded key in any "
+                "relation"
+            )
+        return max(doms)
+
+    def attr_values_array(self, attr: str) -> np.ndarray:
+        # append-only global dictionary: a longer array than at snapshot
+        # time is fine — every id this snapshot can produce predates the
+        # growth, and existing slots never change.
+        return self._store.attr_values_array(attr)
+
+    def attr_encoding(
+        self, rel_name: str, attr: str, override: Optional[Relation] = None
+    ) -> np.ndarray:
+        if override is not None:
+            return self._store.attr_encoding(rel_name, attr, override=override)
+        key = (rel_name, attr)
+        ids = self._enc_cols.get(key)
+        if ids is None:
+            # miss against the frozen column; fills the frozen map, which
+            # the parent still shares while no mutation has landed (same
+            # version ⇒ same data) and owns exclusively afterwards.
+            col = self._relations[rel_name].column(attr)
+            ids = self._store._dict_for(attr).extend_encode(col)
+            self._enc_cols[key] = ids
+        return ids
+
+    def column_moments(self, col: str) -> Tuple[float, float, int]:
+        if col in self._moments:
+            return self._moments[col]
+        chunks = [
+            rel.column(col).astype(np.float64)
+            for rel in self._relations.values()
+            if col in rel.values or col in rel.keys
+        ]
+        if not chunks:
+            raise ValueError(f"column {col} not found in any relation")
+        allv = np.concatenate(chunks)
+        out = (float(allv.sum()), float(np.abs(allv).max()), len(allv))
+        self._moments[col] = out
+        return out
+
+    # -- FD catalog (frozen) ---------------------------------------------------
+    def fds(self) -> List[FunctionalDependency]:
+        return list(self._fds_map.values())
+
+    def fd_reduction(self, cat: Sequence[str]) -> FDReduction:
+        domains = {a: self.attr_domain(a) for a in cat}
+        key = (tuple(cat), tuple(sorted(domains.items())))
+        plan = self._red_cache.get(key)
+        if plan is None:
+            plan = reduction_plan(self._fds_map, list(cat), domains)
+            self._red_cache[key] = plan
+        return plan
+
+    # -- aggregate entry points ------------------------------------------------
+    def cofactors(
+        self,
+        vorder: "VariableOrder",
+        features: Sequence[str],
+        backend: str = "jax",
+        refresh: bool = False,
+    ) -> "Cofactors":
+        """Unscaled cofactors at this snapshot's version.  While the
+        snapshot is current this is exactly the parent's cached entry;
+        once the parent has moved on it is a fresh uncached compute over
+        the frozen catalog (the parent's result cache holds newer data)."""
+        if self.is_current:
+            return self._store.cofactors(
+                vorder, features, backend=backend, refresh=refresh
+            )
+        from .factorize import FactorizedEngine
+
+        self._register_vorder(vorder.signature(), vorder)
+        return FactorizedEngine(
+            self, vorder, list(features), backend=backend
+        ).cofactors()
+
+    def cat_cofactors(
+        self,
+        vorder: "VariableOrder",
+        cont: Sequence[str],
+        cat: Sequence[str],
+        backend: str = "numpy",
+        refresh: bool = False,
+        reduce_fds: bool = False,
+    ):
+        if self.is_current:
+            return self._store.cat_cofactors(
+                vorder,
+                cont,
+                cat,
+                backend=backend,
+                refresh=refresh,
+                reduce_fds=reduce_fds,
+            )
+        from .categorical import cat_cofactors_factorized
+
+        red = self.fd_reduction(cat) if reduce_fds else None
+        run_cat = list(red.kept) if red is not None else list(cat)
+        stats: Dict[str, int] = {}
+        out = cat_cofactors_factorized(
+            self, vorder, list(cont), run_cat, backend=backend, stats=stats
+        )
+        self._store.cat_passes += stats["passes"]
+        self._store.cat_node_visits += stats["node_visits"]
+        return out
+
+    def materialize_join(
+        self, names: Optional[Sequence[str]] = None
+    ) -> Relation:
+        return _materialize(self._relations, names)
+
+    def cache_info(self) -> Dict[str, int]:
+        return self._store.cache_info()
+
+
+def _materialize(
+    relations: Dict[str, Relation], names: Optional[Sequence[str]]
+) -> Relation:
+    todo = [relations[n] for n in (names or list(relations))]
+    if not todo:
+        raise ValueError("no relations to join")
+    acc = todo.pop(0)
+    while todo:
+        pick = None
+        for i, rel in enumerate(todo):
+            if set(acc.keys) & set(rel.keys):
+                pick = i
+                break
+        if pick is None:  # genuine cross product required
+            pick = 0
+        acc = _join_pair(acc, todo.pop(pick))
+    return acc
 
 
 def _join_pair(left: Relation, right: Relation) -> Relation:

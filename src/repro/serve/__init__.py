@@ -1,11 +1,35 @@
-"""Serving substrate: continuous-batching engine over prefill/decode steps.
+"""Serving substrate.
 
-The per-layer KV/state cache structures live with their mixers in
-``repro.models`` (ring-buffer SWA cache, Mamba/xLSTM recurrent state); this
-package adds request scheduling, slot management and sampling.
+Two engines live here:
+
+* ``engine`` — continuous-batching LM inference (slot management, prefill/
+  decode scheduling, sampling) over ``repro.models``;
+* ``factorized`` — the multi-tenant factorized *training* service: queued
+  train/score/cofactor/aggregate requests from many tenants against one
+  shared ``Store``, coalesced into shared traversals and served from
+  immutable catalog snapshots (see ``repro.serve.factorized``).
 """
 
-from . import engine
+from . import engine, factorized
 from .engine import Engine, Request, Result, ServeConfig
+from .factorized import (
+    FactorizedService,
+    ScoreResult,
+    TenantStats,
+    Ticket,
+    TrainResult,
+)
 
-__all__ = ["Engine", "Request", "Result", "ServeConfig", "engine"]
+__all__ = [
+    "Engine",
+    "FactorizedService",
+    "Request",
+    "Result",
+    "ScoreResult",
+    "ServeConfig",
+    "TenantStats",
+    "Ticket",
+    "TrainResult",
+    "engine",
+    "factorized",
+]

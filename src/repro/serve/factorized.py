@@ -1,0 +1,522 @@
+"""Multi-tenant factorized training service: one shared store, coalesced
+aggregate traversals, snapshot-isolated reads.
+
+The paper's 100x comes from sharing aggregate work *within* one training
+run; AC/DC (Abo Khamis et al. 2018) shares it within one optimization
+batch.  This layer shares it across **concurrent tenants**: requests
+(train / score / cofactor / aggregate) from different clients against one
+:class:`repro.core.store.Store` queue up, and each drain cycle
+
+1. groups queued reads by (variable-order signature, backend, dtype),
+2. coalesces every group with :func:`repro.core.factorize.merge_batches` —
+   feature lists union, same-GROUP-BY queries dedupe at the max degree —
+   into ONE ``run_batch`` traversal per group,
+3. scatters the shared blocks back per request
+   (:func:`repro.core.factorize.scatter_results`: pure slicing, Prop. 4.1
+   projection commutativity), then finishes each request's own
+   post-processing (closed-form solve for train, SSE quadratic form for
+   score),
+4. applies queued ``append`` writes and publishes a fresh
+   :class:`repro.core.store.StoreSnapshot` for the next cycle.
+
+Isolation: every read in a cycle runs against the cycle's frozen snapshot
+— the store's copy-on-write mutation discipline means a write landing
+between (or during) cycles can never change what an admitted reader
+observes.  Reads admitted in the same cycle as a write therefore see the
+pre-write catalog; the write is visible from the next cycle on (snapshot
+isolation with writes serialized between read windows).
+
+Accounting: shared traversals are attributed back to tenants with an exact
+integer fair-split (first-come remainder), so per-tenant ``passes`` /
+``node_visits`` / view-cache counters in :meth:`FactorizedService.cache_info`
+**sum to the store-level totals exactly** — the audit the multi-tenant
+story is held to in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.factorize import (
+    AggregateBlock,
+    AggregateQuery,
+    BatchPart,
+    Cofactors,
+    FactorizedEngine,
+    merge_batches,
+    scatter_results,
+)
+from ..core.gd import solve_cofactor
+from ..core.relation import Relation
+from ..core.scaling import compute_scale_factors, rescale_theta
+from ..core.store import Store, StoreSnapshot
+from ..core.variable_order import VariableOrder
+
+__all__ = [
+    "FactorizedService",
+    "ScoreResult",
+    "TenantStats",
+    "Ticket",
+    "TrainResult",
+]
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant share of the store's cumulative counters.
+
+    Shared coalesced traversals are split across the participating
+    requests with an exact integer fair-split, so summing any field over
+    all tenants reproduces the store-level total for that field.
+    """
+
+    requests: int = 0  # read requests served
+    appends: int = 0  # writes applied
+    batches: int = 0  # coalesced traversals this tenant rode in
+    passes: int = 0
+    node_visits: int = 0
+    vc_hits: int = 0
+    vc_misses: int = 0
+    vc_bytes: int = 0  # net view-cache byte growth attributed
+
+
+@dataclasses.dataclass
+class TrainResult:
+    """Closed-form ridge fit from coalesced cofactors (θ in original
+    units, ordered [intercept, features..., −1 on the label])."""
+
+    theta: np.ndarray
+    theta_conv: np.ndarray
+    features: List[str]
+    label: str
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.theta[0] + x @ self.theta[1 : 1 + x.shape[1]]
+
+
+@dataclasses.dataclass
+class ScoreResult:
+    """SSE of a θ vector over the (factorized) join, via the quadratic
+    form aᵀCa with a = [θ₀, θ_feats..., −1] — no data rescan."""
+
+    sse: float
+    count: float
+
+    @property
+    def mse(self) -> float:
+        return self.sse / self.count if self.count else float("nan")
+
+    @property
+    def rmse(self) -> float:
+        return float(np.sqrt(self.mse))
+
+
+class Ticket:
+    """Handle for a queued request: resolved during the next drain cycle."""
+
+    __slots__ = ("_done", "_value", "_error")
+
+    def __init__(self) -> None:
+        self._done = False
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            raise RuntimeError(
+                "request not served yet — call FactorizedService.drain() "
+                "or run()"
+            )
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._done = True
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Read:
+    tenant: str
+    kind: str  # "cofactors" | "aggregates" | "train" | "score"
+    vorder: VariableOrder
+    features: Tuple[str, ...]  # the tenant's requested feature order
+    queries: Tuple[AggregateQuery, ...]
+    backend: str
+    ticket: Ticket
+    seq: int  # admission order, the BatchPart rid
+    label: Optional[str] = None
+    theta: Optional[np.ndarray] = None
+    ridge: float = 0.006
+    dtype: Optional[object] = None
+
+
+@dataclasses.dataclass
+class _Write:
+    tenant: str
+    name: str
+    delta: Relation
+    ticket: Ticket
+    seq: int
+
+
+def _fair_split(total: int, k: int) -> List[int]:
+    """Split an integer across k shares exactly: earlier shares absorb the
+    remainder, sum(result) == total (negatives split symmetrically)."""
+    if k <= 0:
+        return []
+    if total < 0:
+        return [-s for s in _fair_split(-total, k)]
+    base, rem = divmod(total, k)
+    return [base + (1 if i < rem else 0) for i in range(k)]
+
+
+class FactorizedService:
+    """Queue-and-drain scheduler over one shared :class:`Store`.
+
+    ``coalesce=False`` runs the same admission/snapshot machinery but
+    gives every request its own engine and traversal — the fair baseline
+    ``benchmarks/bench_serve.py`` measures the coalescing win against.
+    ``window`` caps how many queued reads one drain cycle admits
+    (``None`` = drain everything queued at entry).
+    """
+
+    def __init__(
+        self,
+        store: Store,
+        coalesce: bool = True,
+        backend: str = "numpy",
+        window: Optional[int] = None,
+    ) -> None:
+        self.store = store
+        self.coalesce = coalesce
+        self.backend = backend
+        self.window = window
+        self._snapshot: StoreSnapshot = store.snapshot()
+        self._reads: Deque[_Read] = deque()
+        self._writes: Deque[_Write] = deque()
+        self._tenants: Dict[str, TenantStats] = {}
+        self._seq = 0
+        self._batches = 0  # coalesced traversals run
+        self._coalesced_requests = 0  # reads that shared a traversal
+        self._lock = threading.Lock()
+
+    # -- request submission ----------------------------------------------------
+    def cofactors(
+        self,
+        tenant: str,
+        vorder: VariableOrder,
+        features: Sequence[str],
+        backend: Optional[str] = None,
+        dtype=None,
+    ) -> Ticket:
+        """Queue an unscaled-cofactors request → ``Cofactors``."""
+        return self._submit_read(
+            tenant,
+            "cofactors",
+            vorder,
+            tuple(features),
+            (AggregateQuery("cof", (), 2),),
+            backend,
+            dtype=dtype,
+        )
+
+    def aggregates(
+        self,
+        tenant: str,
+        vorder: VariableOrder,
+        features: Sequence[str],
+        queries: Sequence[AggregateQuery],
+        backend: Optional[str] = None,
+        dtype=None,
+    ) -> Ticket:
+        """Queue a raw aggregate batch → ``{name: AggregateBlock}``."""
+        return self._submit_read(
+            tenant,
+            "aggregates",
+            vorder,
+            tuple(features),
+            tuple(queries),
+            backend,
+            dtype=dtype,
+        )
+
+    def train(
+        self,
+        tenant: str,
+        vorder: VariableOrder,
+        features: Sequence[str],
+        label: str,
+        ridge: float = 0.006,
+        backend: Optional[str] = None,
+    ) -> Ticket:
+        """Queue a closed-form ridge train → ``TrainResult`` (semantics of
+        ``linear_regression(..., VERSIONS['closed'], use_cache=True)``:
+        unscaled cofactors, lazy §4.2 rescale, exact θ₀ recovery)."""
+        return self._submit_read(
+            tenant,
+            "train",
+            vorder,
+            tuple(features) + (label,),
+            (AggregateQuery("cof", (), 2),),
+            backend,
+            label=label,
+            ridge=ridge,
+        )
+
+    def score(
+        self,
+        tenant: str,
+        vorder: VariableOrder,
+        features: Sequence[str],
+        label: str,
+        theta: np.ndarray,
+        backend: Optional[str] = None,
+    ) -> Ticket:
+        """Queue an SSE evaluation of ``theta`` (original units, as
+        returned by :meth:`train`) → ``ScoreResult``."""
+        return self._submit_read(
+            tenant,
+            "score",
+            vorder,
+            tuple(features) + (label,),
+            (AggregateQuery("cof", (), 2),),
+            backend,
+            label=label,
+            theta=np.asarray(theta, dtype=np.float64),
+        )
+
+    def append(self, tenant: str, name: str, delta: Relation) -> Ticket:
+        """Queue a row append, applied after the current read window →
+        the merged ``Relation``.  Visible to reads from the next cycle."""
+        with self._lock:
+            ticket = Ticket()
+            self._writes.append(
+                _Write(tenant, name, delta, ticket, self._next_seq())
+            )
+            return ticket
+
+    def _submit_read(
+        self,
+        tenant: str,
+        kind: str,
+        vorder: VariableOrder,
+        features: Tuple[str, ...],
+        queries: Tuple[AggregateQuery, ...],
+        backend: Optional[str],
+        **extra,
+    ) -> Ticket:
+        with self._lock:
+            ticket = Ticket()
+            self._reads.append(
+                _Read(
+                    tenant=tenant,
+                    kind=kind,
+                    vorder=vorder,
+                    features=features,
+                    queries=queries,
+                    backend=backend or self.backend,
+                    ticket=ticket,
+                    seq=self._next_seq(),
+                    **extra,
+                )
+            )
+            return ticket
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _stats(self, tenant: str) -> TenantStats:
+        st = self._tenants.get(tenant)
+        if st is None:
+            st = self._tenants[tenant] = TenantStats()
+        return st
+
+    # -- drain cycle -----------------------------------------------------------
+    def drain(self) -> int:
+        """Serve one cycle: a window of queued reads against the current
+        snapshot (coalesced per engine group), then all queued writes,
+        then publish a fresh snapshot.  Returns requests completed."""
+        with self._lock:
+            take = len(self._reads) if self.window is None else self.window
+            reads = [
+                self._reads.popleft()
+                for _ in range(min(take, len(self._reads)))
+            ]
+            writes = list(self._writes)
+            self._writes.clear()
+
+            done = 0
+            # engine group = everything one traversal can legally share
+            groups: Dict[tuple, List[_Read]] = {}
+            for r in reads:
+                dt = np.dtype(r.dtype).name if r.dtype is not None else None
+                gkey = (r.vorder.signature(), r.backend, dt)
+                groups.setdefault(gkey, []).append(r)
+            for members in groups.values():
+                batches = (
+                    [members] if self.coalesce else [[r] for r in members]
+                )
+                for batch in batches:
+                    done += self._run_batch_group(batch)
+
+            for w in writes:
+                self._apply_write(w)
+                done += 1
+            if writes:
+                self._snapshot = self.store.snapshot()
+            return done
+
+    def run(self) -> int:
+        """Drain until both queues are empty; returns requests completed."""
+        total = 0
+        while self._reads or self._writes:
+            total += self.drain()
+        return total
+
+    # -- internals -------------------------------------------------------------
+    def _run_batch_group(self, batch: List[_Read]) -> int:
+        parts = [
+            BatchPart(rid=r.seq, features=r.features, queries=r.queries)
+            for r in batch
+        ]
+        try:
+            merged = merge_batches(parts)
+            first = batch[0]
+            dtype = np.dtype(first.dtype) if first.dtype is not None else None
+            engine = FactorizedEngine(
+                self._snapshot,
+                first.vorder,
+                merged.features,
+                backend=first.backend,
+                dtype=dtype,
+            )
+            vc = self.store.view_cache
+            bytes_before = vc.bytes
+            results = engine.run_batch(merged.queries)
+            per_rid = scatter_results(merged, parts, results)
+        except Exception as err:
+            for r in batch:
+                r.ticket._fail(err)
+            return len(batch)
+        self._charge(
+            batch,
+            passes=engine.passes,
+            node_visits=engine.node_visits,
+            vc_hits=engine.vc_hits,
+            vc_misses=engine.vc_misses,
+            vc_bytes=vc.bytes - bytes_before,
+        )
+        if len(batch) > 1:
+            self._batches += 1
+            self._coalesced_requests += len(batch)
+        for r in batch:
+            st = self._stats(r.tenant)
+            st.requests += 1
+            st.batches += 1
+            try:
+                r.ticket._resolve(self._finish(r, per_rid[r.seq]))
+            except Exception as err:
+                r.ticket._fail(err)
+        return len(batch)
+
+    def _charge(self, batch: List[_Read], **counters: int) -> None:
+        """Attribute one shared traversal's counters across its riders —
+        exact integer fair-split in admission order, so per-tenant sums
+        equal the store-level deltas to the unit."""
+        k = len(batch)
+        for field, total in counters.items():
+            for r, share in zip(batch, _fair_split(int(total), k)):
+                st = self._stats(r.tenant)
+                setattr(st, field, getattr(st, field) + share)
+
+    def _finish(self, r: _Read, blocks: Dict[str, AggregateBlock]):
+        if r.kind == "aggregates":
+            return blocks
+        blk = blocks["cof"]
+        if blk.num_groups != 1:
+            raise AssertionError(
+                f"root view must have exactly one row, got {blk.num_groups}"
+            )
+        cof = Cofactors(
+            count=float(blk.count[0]),
+            lin=np.asarray(blk.lin[0], dtype=np.float64),
+            quad=np.asarray(blk.quad[0], dtype=np.float64),
+            features=list(r.features),
+        )
+        if r.kind == "cofactors":
+            return cof
+        feats = [f for f in r.features if f != r.label]
+        if r.kind == "score":
+            a = r.theta
+            if a.shape[0] != len(r.features) + 1:
+                raise ValueError(
+                    f"theta has {a.shape[0]} entries, expected "
+                    f"{len(r.features) + 1} ([intercept] + features + label)"
+                )
+            mat = cof.matrix()
+            return ScoreResult(sse=float(a @ mat @ a), count=cof.count)
+        # train: the warm-retrain semantics of linear_regression(
+        # VERSIONS["closed"], use_cache=True) — unscaled cofactors +
+        # lazy rescale + closed-form solve + exact θ₀ recovery.
+        factors = compute_scale_factors(self._snapshot, feats, r.label)
+        theta_conv = solve_cofactor(
+            cof.rescale(factors).matrix(), ridge=r.ridge
+        )
+        theta = rescale_theta(theta_conv, factors, mode="exact")
+        return TrainResult(
+            theta=theta,
+            theta_conv=theta_conv,
+            features=feats,
+            label=r.label,
+        )
+
+    def _apply_write(self, w: _Write) -> None:
+        store = self.store
+        vc = store.view_cache
+        before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
+        try:
+            merged = store.append(w.name, w.delta)
+        except Exception as err:
+            w.ticket._fail(err)
+        else:
+            w.ticket._resolve(merged)
+        st = self._stats(w.tenant)
+        st.appends += 1
+        # delta maintenance ran on the writer's behalf — attribute it whole
+        st.passes += store.passes - before[0]
+        st.node_visits += store.node_visits - before[1]
+        st.vc_hits += vc.hits - before[2]
+        st.vc_misses += vc.misses - before[3]
+        st.vc_bytes += vc.bytes - before[4]
+
+    # -- introspection ---------------------------------------------------------
+    def cache_info(self) -> Dict[str, object]:
+        """Store-level ``cache_info`` plus the service's per-tenant shares
+        (``tenants[name]`` sums to the store totals) and coalescing
+        counters."""
+        info: Dict[str, object] = dict(self.store.cache_info())
+        info["tenants"] = {
+            name: dataclasses.asdict(st)
+            for name, st in sorted(self._tenants.items())
+        }
+        info["coalesced_batches"] = self._batches
+        info["coalesced_requests"] = self._coalesced_requests
+        info["queued_reads"] = len(self._reads)
+        info["queued_writes"] = len(self._writes)
+        return info

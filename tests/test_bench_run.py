@@ -58,6 +58,49 @@ def test_smoke_flag_reaches_suites():
 
 
 # ---------------------------------------------------------------------------
+# --suite filter
+# ---------------------------------------------------------------------------
+
+def test_suite_filter_selects_named_suites():
+    suites = run_mod.default_suites(only=["kernels"])
+    assert [name for name, _ in suites] == ["kernel hotspots"]
+    pair = run_mod.default_suites(only=["serve", "kernels"])
+    assert [name for name, _ in pair] == [
+        "multi-tenant serve coalescing",
+        "kernel hotspots",
+    ]
+
+
+def test_suite_filter_unknown_name_lists_valid(capsys):
+    with pytest.raises(ValueError) as exc:
+        run_mod.default_suites(only=["nope"])
+    msg = str(exc.value)
+    assert "nope" in msg
+    for slug in run_mod.suite_names():
+        assert slug in msg
+    # the CLI surfaces it as exit code 2 without running anything
+    assert run_mod.main(["--suite", "nope"]) == 2
+    assert "valid suites" in capsys.readouterr().err
+
+
+def test_suite_filter_runs_only_selected(isolated_results_dir, monkeypatch):
+    calls = []
+    import benchmarks.bench_kernels as bk
+
+    monkeypatch.setattr(bk, "main", lambda smoke=False: calls.append(smoke))
+    assert run_mod.main(["--suite", "kernels", "--smoke"]) == 0
+    assert calls == [True]
+    with open(os.path.join(isolated_results_dir, "summary.json")) as f:
+        summary = json.load(f)
+    assert [s["suite"] for s in summary["suites"]] == ["kernel hotspots"]
+
+
+def test_serve_suite_registered():
+    """bench_serve must ride in the default sweep (smoke + nightly gate)."""
+    assert "serve" in run_mod.suite_names()
+
+
+# ---------------------------------------------------------------------------
 # benchmarks.compare — the nightly regression detector
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,513 @@
+"""Multi-tenant service: snapshot isolation, batch coalescing, accounting.
+
+The three claims this PR is held to:
+
+* **Snapshot isolation** — a reader holding a ``StoreSnapshot`` (or any
+  ``FactorizedEngine``, which freezes one at construction) observes
+  BIT-identical results whether or not an ``append`` / ``put`` /
+  ``drop_fd`` lands mid-request (the store's mutations are copy-on-write).
+* **Coalescing correctness** — merged multi-request traversals scatter
+  back per-request results ≡ private sequential engines at 1e-12
+  (summation order is the only difference).
+* **Exact accounting** — per-tenant counter shares in
+  ``FactorizedService.cache_info()`` sum to the store-level totals.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.factorize import (
+    AggregateQuery,
+    BatchPart,
+    FactorizedEngine,
+    cofactors_factorized,
+    merge_batches,
+    scatter_results,
+)
+from repro.core.regression import VERSIONS, linear_regression
+from repro.core.relation import Relation
+from repro.core.store import Store
+from repro.core.variable_order import VariableOrder
+from repro.data.synthetic import fd_star_schema
+from repro.serve import FactorizedService
+
+CAT2 = ["c0", "c1"]
+
+
+def _star(n_dims=3, domain=8, fact_rows=300, dim_rows=40, seed=0):
+    """Fact(c*, x, y) ⋈ Dim_i(c_i, w_i), bushy order, one subtree per
+    dimension — the service's natural shape (feature pool {w_i} ∪ {x})."""
+    rng = np.random.default_rng(seed)
+    keys = {
+        f"c{i}": rng.integers(0, domain, fact_rows).astype(np.int32)
+        for i in range(n_dims)
+    }
+    x = rng.normal(0, 2.0, fact_rows)
+    y = 0.5 * x + rng.normal(0, 0.5, fact_rows)
+    rels = [
+        Relation.from_columns(
+            "Fact", keys, {"x": x, "y": y},
+            {f"c{i}": domain for i in range(n_dims)},
+        )
+    ]
+    for i in range(n_dims):
+        rels.append(
+            Relation.from_columns(
+                f"Dim{i}",
+                {f"c{i}": rng.integers(0, domain, dim_rows).astype(np.int32)},
+                {f"w{i}": rng.normal(0, 1.0, dim_rows)},
+                {f"c{i}": domain},
+            )
+        )
+    node = VariableOrder(
+        "x", [VariableOrder("y", [VariableOrder.leaf("Fact")])]
+    )
+    for i in reversed(range(n_dims)):
+        w = VariableOrder(f"w{i}", [VariableOrder.leaf(f"Dim{i}")])
+        node = VariableOrder(f"c{i}", [w, node])
+    return rels, VariableOrder.intercept([node])
+
+
+def _fact_delta(rng, n_dims=3, domain=8, n_rows=25):
+    return Relation.from_columns(
+        "delta",
+        {
+            f"c{i}": rng.integers(0, domain, n_rows).astype(np.int32)
+            for i in range(n_dims)
+        },
+        {
+            "x": rng.normal(0, 2.0, n_rows),
+            "y": rng.normal(0, 1.0, n_rows),
+        },
+    )
+
+
+def _allclose_tight(a, b, scale=None):
+    s = float(np.abs(b).max()) if scale is None else scale
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12 * max(1.0, s))
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: snapshot isolation
+# ---------------------------------------------------------------------------
+
+def test_snapshot_reader_bit_identical_across_append():
+    rels, vorder = _star(seed=1)
+    store = Store(rels)
+    cols = ["w0", "x", "y"]
+    oracle = cofactors_factorized(
+        store, vorder, cols, backend="numpy", use_view_cache=False
+    )
+    snap = store.snapshot()
+    rng = np.random.default_rng(2)
+    store.append("Fact", _fact_delta(rng))
+    assert not snap.is_current and snap.live_version == store.version
+    held = FactorizedEngine(snap, vorder, cols, backend="numpy").cofactors()
+    np.testing.assert_allclose(  # bit-identical: same data, same op order
+        held.matrix(), oracle.matrix(), rtol=0, atol=0
+    )
+    fresh = cofactors_factorized(store, vorder, cols, backend="numpy")
+    assert fresh.count > oracle.count  # live store did move
+
+
+def test_snapshot_reader_bit_identical_across_put():
+    rels, vorder = _star(seed=3)
+    store = Store(rels)
+    cols = ["w1", "x", "y"]
+    oracle = cofactors_factorized(
+        store, vorder, cols, backend="numpy", use_view_cache=False
+    )
+    snap = store.snapshot()
+    dim = store.get("Dim1")
+    rng = np.random.default_rng(4)
+    store.put(
+        Relation.from_columns(
+            "Dim1",
+            {"c1": dim.keys["c1"][:10]},
+            {"w1": rng.normal(0, 1.0, 10)},
+            dict(dim.domains),
+        )
+    )
+    held = FactorizedEngine(snap, vorder, cols, backend="numpy").cofactors()
+    np.testing.assert_allclose(held.matrix(), oracle.matrix(), rtol=0, atol=0)
+    fresh = cofactors_factorized(store, vorder, cols, backend="numpy")
+    assert fresh.count != oracle.count
+
+
+def test_snapshot_fd_catalog_frozen_across_drop_fd():
+    bundle = fd_star_schema(n_cat=2, seed=5)
+    store, vorder = bundle.store, bundle.vorder
+    store.infer_fds()
+    cat = CAT2 + ["d0", "d1"]
+    snap = store.snapshot()
+    before = snap.fd_reduction(cat).signature()
+    oracle = snap.cat_cofactors(
+        vorder, ["x", "y"], cat, backend="numpy", reduce_fds=True
+    )
+    store.drop_fd("c0", "d0")
+    assert not snap.is_current  # FD mutation breaks currency, not version
+    assert snap.fd_reduction(cat).signature() == before
+    assert store.fd_reduction(cat).signature() != before
+    held = snap.cat_cofactors(
+        vorder, ["x", "y"], cat, backend="numpy", reduce_fds=True
+    )
+    assert list(held.cat) == list(oracle.cat)  # d0 still reduced away
+    np.testing.assert_allclose(
+        held.matrix(), oracle.matrix(), rtol=0, atol=0
+    )
+
+
+def test_engine_holds_snapshot_across_mid_request_append():
+    """An engine constructed before a mutation keeps serving the frozen
+    catalog: batch 2 on the same engine ≡ batch 1, bit for bit."""
+    rels, vorder = _star(seed=6)
+    store = Store(rels)
+    cols = ["w0", "w2", "x", "y"]
+    eng = FactorizedEngine(
+        store, vorder, cols, backend="numpy", use_view_cache=False
+    )
+    first = eng.cofactors()
+    store.append("Fact", _fact_delta(np.random.default_rng(7)))
+    second = eng.cofactors()  # mid-request mutation landed between batches
+    np.testing.assert_allclose(
+        second.matrix(), first.matrix(), rtol=0, atol=0
+    )
+
+
+def test_stale_snapshot_engine_stays_out_of_view_cache():
+    rels, vorder = _star(seed=8)
+    store = Store(rels)
+    cols = ["w0", "x", "y"]
+    snap = store.snapshot()
+    store.append("Fact", _fact_delta(np.random.default_rng(9)))
+    eng = FactorizedEngine(snap, vorder, cols, backend="numpy")
+    eng.cofactors()
+    assert eng.vc_hits == 0  # stale engine must neither probe...
+    info = store.cache_info()
+    assert info["view_cache_entries"] == 0  # ...nor publish
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: merge_batches / scatter
+# ---------------------------------------------------------------------------
+
+def test_merge_batches_unions_and_dedupes():
+    parts = [
+        BatchPart(
+            rid=1,
+            features=("x", "w0"),
+            queries=(
+                AggregateQuery("cof", (), 2),
+                AggregateQuery("g", ("c0", "c1"), 1),
+            ),
+        ),
+        BatchPart(
+            rid=2,
+            features=("w1", "x"),
+            queries=(
+                AggregateQuery("cof", (), 1),
+                AggregateQuery("p", ("c1", "c0"), 0),
+            ),
+        ),
+    ]
+    merged = merge_batches(parts)
+    assert merged.features == ["x", "w0", "w1"]  # union, first-seen order
+    # () and {c0,c1} each collapse to one query at the max degree
+    assert [(q.group_by, q.degree) for q in merged.queries] == [
+        ((), 2),
+        (("c0", "c1"), 1),
+    ]
+    assert merged.assignments[(1, "cof")] == merged.assignments[(2, "cof")]
+    assert merged.assignments[(1, "g")] == merged.assignments[(2, "p")]
+
+
+def test_merge_batches_rejects_duplicate_names_within_request():
+    with pytest.raises(ValueError, match="duplicate query name"):
+        merge_batches(
+            [
+                BatchPart(
+                    rid=1,
+                    features=("x",),
+                    queries=(
+                        AggregateQuery("q", (), 2),
+                        AggregateQuery("q", ("c0",), 1),
+                    ),
+                )
+            ]
+        )
+
+
+def test_scatter_matches_private_engines():
+    rels, vorder = _star(seed=10)
+    store = Store(rels, view_cache_bytes=0)
+    parts = [
+        BatchPart(
+            rid="a",
+            features=("w0", "x"),
+            queries=(
+                AggregateQuery("cof", (), 2),
+                AggregateQuery("g", ("c1",), 1),
+            ),
+        ),
+        BatchPart(
+            rid="b",
+            features=("x", "w1", "w2"),
+            queries=(AggregateQuery("cof", (), 2),),
+        ),
+    ]
+    merged = merge_batches(parts)
+    shared = FactorizedEngine(
+        store, vorder, merged.features, backend="numpy"
+    ).run_batch(merged.queries)
+    out = scatter_results(merged, parts, shared)
+    for part in parts:
+        private = FactorizedEngine(
+            store, vorder, list(part.features), backend="numpy"
+        ).run_batch(list(part.queries))
+        for q in part.queries:
+            mine, ref = out[part.rid][q.name], private[q.name]
+            assert mine.features == list(part.features if q.degree else ())
+            perm = [mine.features.index(f) for f in ref.features]
+            _allclose_tight(mine.count, ref.count)
+            if q.degree >= 1:
+                _allclose_tight(mine.lin[:, perm], ref.lin)
+            if q.degree == 2:
+                _allclose_tight(
+                    mine.quad[:, perm][:, :, perm], ref.quad
+                )
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: the service
+# ---------------------------------------------------------------------------
+
+def test_service_train_matches_linear_regression():
+    rels, vorder = _star(seed=11)
+    store = Store(rels)
+    svc = FactorizedService(store)
+    feats = ["w0", "x"]
+    t = svc.train("alice", vorder, feats, "y")
+    svc.run()
+    ref = linear_regression(
+        store, vorder, feats, "y", VERSIONS["closed"], backend="numpy",
+        use_cache=True,
+    )
+    np.testing.assert_allclose(
+        t.result().theta, ref.theta, rtol=1e-9, atol=1e-9
+    )
+    s = svc.score("alice", vorder, feats, "y", t.result().theta)
+    svc.run()
+    assert s.result().rmse < 1.0  # the model genuinely fits the planted y
+
+
+def test_service_window_reads_see_pre_write_snapshot():
+    """Reads admitted in the same cycle as a write all see the pre-write
+    catalog; the write is visible from the next cycle on."""
+    rels, vorder = _star(seed=12)
+    store = Store(rels)
+    svc = FactorizedService(store)
+    cols = ["x", "y"]
+    oracle = cofactors_factorized(
+        Store(rels), vorder, cols, backend="numpy", use_view_cache=False
+    )
+    t1 = svc.cofactors("a", vorder, cols)
+    tw = svc.append("w", "Fact", _fact_delta(np.random.default_rng(13)))
+    t2 = svc.cofactors("b", vorder, cols)  # queued BEFORE the drain
+    svc.drain()
+    np.testing.assert_allclose(
+        t1.result().matrix(), oracle.matrix(), rtol=0, atol=0
+    )
+    np.testing.assert_allclose(
+        t2.result().matrix(), oracle.matrix(), rtol=0, atol=0
+    )
+    assert tw.result().num_rows == 325  # 300 base fact rows + 25 appended
+    t3 = svc.cofactors("a", vorder, cols)  # next cycle: append visible
+    svc.drain()
+    assert t3.result().count > oracle.count
+
+
+def test_service_failed_requests_resolve_with_errors():
+    rels, vorder = _star(seed=14)
+    svc = FactorizedService(Store(rels))
+    bad = svc.append("t", "Nope", _fact_delta(np.random.default_rng(0)))
+    ok = svc.cofactors("t", vorder, ["x", "y"])
+    svc.run()
+    assert ok.result().count > 0  # one bad request never wedges the cycle
+    with pytest.raises(KeyError):
+        bad.result()
+    with pytest.raises(RuntimeError, match="not served yet"):
+        FactorizedService(Store(rels)).cofactors(
+            "t", vorder, ["x"]
+        ).result()
+
+
+def _run_schedule(seed, coalesce, n_ops=14):
+    """One deterministic random schedule against a fresh store; returns
+    resolved ticket values in submission order."""
+    rels, vorder = _star(seed=100)  # schema fixed; schedule varies by seed
+    rng = np.random.default_rng(seed)
+    store = Store(rels)
+    svc = FactorizedService(store, coalesce=coalesce)
+    pool = ["w0", "w1", "w2", "x"]
+    tickets = []
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.18:
+            tickets.append(
+                svc.append(
+                    "writer", "Fact", _fact_delta(rng, n_rows=int(rng.integers(5, 30)))
+                )
+            )
+        elif r < 0.30:
+            svc.drain()
+        else:
+            tenant = f"t{int(rng.integers(0, 3))}"
+            feats = sorted(
+                rng.choice(pool, size=int(rng.integers(1, 4)), replace=False)
+            )
+            if rng.random() < 0.5:
+                tickets.append(
+                    svc.cofactors(tenant, vorder, feats + ["y"])
+                )
+            else:
+                tickets.append(
+                    svc.aggregates(
+                        tenant,
+                        vorder,
+                        feats,
+                        [
+                            AggregateQuery("cof", (), 2),
+                            AggregateQuery(
+                                "g", (f"c{int(rng.integers(0, 3))}",), 1
+                            ),
+                        ],
+                    )
+                )
+    svc.run()
+    return [t.result() for t in tickets], svc
+
+
+def _assert_schedules_equivalent(seed):
+    got, svc_c = _run_schedule(seed, coalesce=True)
+    ref, svc_s = _run_schedule(seed, coalesce=False)
+    assert svc_c.cache_info()["coalesced_batches"] >= 0
+    for g, r in zip(got, ref):
+        if isinstance(g, Relation):  # append result
+            assert g.num_rows == r.num_rows
+        elif isinstance(g, dict):  # aggregates
+            for name, blk in r.items():
+                mine = g[name]
+                _allclose_tight(mine.count, blk.count)
+                for attr in blk.keys:
+                    np.testing.assert_array_equal(
+                        mine.keys[attr], blk.keys[attr]
+                    )
+                if blk.lin is not None:
+                    _allclose_tight(mine.lin, blk.lin)
+        else:  # cofactors
+            _allclose_tight(g.matrix(), r.matrix())
+
+
+def test_coalesced_equals_sequential_deterministic():
+    for seed in (0, 1, 2, 3):
+        _assert_schedules_equivalent(seed)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=12,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(seed=st.integers(0, 60))
+    def test_coalesced_equals_sequential_property(seed):
+        """Random request/mutation schedules: coalesced ≡ sequential
+        per-request results at 1e-12, whatever interleaving lands."""
+        _assert_schedules_equivalent(seed)
+
+else:  # pragma: no cover - optional dependency
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_coalesced_equals_sequential_property():
+        pass
+
+
+def test_per_tenant_counters_sum_to_store_totals():
+    rels, vorder = _star(seed=15)
+    store = Store(rels)
+    svc = FactorizedService(store)
+    rng = np.random.default_rng(16)
+    svc.cofactors("a", vorder, ["w0", "x", "y"])
+    svc.cofactors("b", vorder, ["w1", "x", "y"])
+    svc.train("c", vorder, ["w0", "w1"], "y")
+    svc.drain()
+    svc.append("w", "Fact", _fact_delta(rng))
+    svc.cofactors("a", vorder, ["w0", "x", "y"])  # warm + post-append read
+    svc.run()
+    info = svc.cache_info()
+    tenants = info["tenants"].values()
+    assert {"a", "b", "c", "w"} == set(info["tenants"])
+    vc = store.view_cache
+    assert sum(t["passes"] for t in tenants) == info["passes"]
+    assert sum(t["node_visits"] for t in tenants) == info["node_visits"]
+    assert sum(t["vc_hits"] for t in tenants) == vc.hits
+    assert sum(t["vc_misses"] for t in tenants) == vc.misses
+    assert sum(t["vc_bytes"] for t in tenants) == info["view_cache_bytes"]
+    # every tenant's activity is on the books (integer fair-split may
+    # round a rider's share of one shared pass down to 0, so request
+    # counts — not pass shares — carry the per-rider guarantee)
+    assert all(t["requests"] + t["appends"] > 0 for t in tenants)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cross-dtype view reuse
+# ---------------------------------------------------------------------------
+
+def test_fp32_warm_path_casts_fp64_views_zero_node_visits():
+    rels, vorder = _star(seed=17)
+    store = Store(rels)
+    cols = ["w0", "w1", "x", "y"]
+    ref = cofactors_factorized(store, vorder, cols, backend="numpy")
+    store.reset_counters()
+    eng = FactorizedEngine(store, vorder, cols, backend="jax")  # fp32
+    got = eng.cofactors()
+    assert eng.node_visits == 0  # served entirely by casting fp64 views
+    assert store.node_visits == 0
+    assert eng.vc_hits > 0
+    scale = float(np.abs(ref.matrix()).max())
+    np.testing.assert_allclose(
+        got.matrix(), ref.matrix(), rtol=2e-5, atol=2e-5 * max(1.0, scale)
+    )
+
+
+def test_fp32_service_requests_reuse_fp64_views():
+    rels, vorder = _star(seed=18)
+    store = Store(rels)
+    svc = FactorizedService(store)
+    cols = ["w2", "x", "y"]
+    t64 = svc.cofactors("a", vorder, cols)  # numpy/fp64, populates views
+    svc.drain()
+    store.reset_counters()
+    t32 = svc.cofactors("b", vorder, cols, backend="jax")
+    svc.drain()
+    assert store.node_visits == 0
+    info = svc.cache_info()
+    assert info["tenants"]["b"]["node_visits"] == 0
+    assert info["tenants"]["b"]["vc_hits"] > 0
+    scale = float(np.abs(t64.result().matrix()).max())
+    np.testing.assert_allclose(
+        t32.result().matrix(),
+        t64.result().matrix(),
+        rtol=2e-5,
+        atol=2e-5 * max(1.0, scale),
+    )
