@@ -17,6 +17,8 @@ every D ≥ 100.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import VERSIONS, linear_regression, solve_cofactor
@@ -226,10 +228,10 @@ def run_fd(
         red = store.fd_reduction(cat)
 
         def train(use_fds):
-            return linear_regression(
-                store, vorder, feats, "y", cfg, backend="numpy",
-                categorical=cat, use_fds=use_fds,
+            run_cfg = dataclasses.replace(
+                cfg, backend="numpy", categorical=tuple(cat), use_fds=use_fds
             )
+            return linear_regression(store, vorder, feats, "y", run_cfg)
 
         # the acceptance identity: FD-reduced ≡ full to 1e-10
         off_res, on_res = train(False), train(True)

@@ -17,6 +17,8 @@ point of maintaining cofactors close to the data.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import VERSIONS, RegressionConfig, linear_regression
@@ -58,12 +60,13 @@ def run(
     # for every path, so the measured difference is purely cofactor
     # (re)computation vs delta maintenance — no jit retrace noise as the
     # appended shapes grow.
-    cfg = VERSIONS["closed"]
-    kw = dict(config=cfg, backend="numpy")
+    cfg = dataclasses.replace(VERSIONS["closed"], backend="numpy")
+    kw = dict(config=cfg)
 
     # initial training run seeds the cofactor cache
+    warm_cfg = dataclasses.replace(cfg, use_cache=True)
     linear_regression(bundle.store, bundle.vorder, bundle.features,
-                      bundle.label, use_cache=True, **kw)
+                      bundle.label, config=warm_cfg)
 
     rows = []
     for batch in range(n_batches):
@@ -73,7 +76,7 @@ def run(
             bundle.store.append("SalesF", delta)  # pays delta maintenance
             res_inc = linear_regression(
                 bundle.store, bundle.vorder, bundle.features, bundle.label,
-                use_cache=True, **kw,
+                config=warm_cfg,
             )
 
         with stopwatch() as sw_fact:

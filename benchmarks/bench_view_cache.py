@@ -26,6 +26,8 @@ the emitted rows so the nightly artifact tracks the budget.  The
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import VERSIONS, linear_regression
@@ -181,8 +183,10 @@ def run_append(
     base_store = Store(rels, view_cache_bytes=0)  # invalidate-everything
     warm_store = Store(rels)
     feats = ["x"]
-    cfg = VERSIONS["closed"]
-    kw = dict(config=cfg, backend="numpy", use_cache=True)
+    cfg = dataclasses.replace(
+        VERSIONS["closed"], backend="numpy", use_cache=True
+    )
+    kw = dict(config=cfg)
 
     # seed both cofactor caches (and the warm store's view cache) — the
     # initial training run is identical in both arms and not timed.

@@ -13,7 +13,11 @@ Compares two benchmark artifact directories (each as produced by
   keeps micro-timings (sub-ms rows where 2x is measurement jitter) quiet;
 * fields ending in ``_speedup`` / ``speedup_vs_*`` regress when the new
   value drops below ``base / (1 + threshold)`` (they are
-  bigger-is-better).
+  bigger-is-better);
+* fields ending in ``staleness`` (pending retrain staleness from
+  ``bench_ingest`` — smaller-is-better, dimensionless) regress when
+  ``new > base * (1 + threshold) + 0.01`` — the small absolute floor
+  keeps near-zero staleness values from tripping on jitter.
 
 Exit code 1 on any regression, 0 otherwise.  A missing/empty baseline
 directory exits 0 with a notice — the first nightly run has nothing to
@@ -48,6 +52,10 @@ def _is_time_field(name: str) -> bool:
 
 def _is_speedup_field(name: str) -> bool:
     return name.endswith("_speedup") or "speedup_vs_" in name
+
+
+def _is_staleness_field(name: str) -> bool:
+    return name.endswith("staleness")
 
 
 def _load_json(path: str):
@@ -103,7 +111,11 @@ def compare_suite_rows(
             if not isinstance(bv, (int, float)) or isinstance(bv, bool):
                 continue
             if not isinstance(nv, (int, float)) or isinstance(nv, bool):
-                if _is_time_field(field) or _is_speedup_field(field):
+                if (
+                    _is_time_field(field)
+                    or _is_speedup_field(field)
+                    or _is_staleness_field(field)
+                ):
                     # a gated field the suite no longer emits (renamed or
                     # removed since the baseline) — report, don't crash
                     print(
@@ -121,6 +133,11 @@ def compare_suite_rows(
                 if nv < bv / (1.0 + threshold) and bv - nv > 1e-9:
                     out.append(
                         f"{name}[{label}].{field}: {bv:.3g}x -> {nv:.3g}x"
+                    )
+            elif _is_staleness_field(field):
+                if nv > bv * (1.0 + threshold) + 0.01:
+                    out.append(
+                        f"{name}[{label}].{field}: {bv:.3g} -> {nv:.3g}"
                     )
     return out
 

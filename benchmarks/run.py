@@ -8,6 +8,8 @@ One module per paper table/figure (+ substrate benches):
   figure23_aggregates          — Figs. 2–3 (COUNT / SUM over factorization)
   union_commutativity_scaling  — Prop. 4.1 as the distribution rule
   incremental_retrain_after_append — retrain cost after appends (AC/DC)
+  streaming_ingest             — lazy vs eager append p50/p99 latency +
+                                 retrain staleness under sustained writes
   categorical_vs_onehot        — sparse categorical cofactors vs one-hot
   view_cache_cold_warm_append  — persistent view cache: warm batches +
                                  retrain-after-append vs invalidate-all
@@ -45,6 +47,7 @@ SUITES = [
     ("aggregates", "figures2-3 (aggregates)", "bench_aggregates"),
     ("scaling", "union commutativity scaling", "bench_scaling"),
     ("incremental", "incremental retrain after append", "bench_incremental"),
+    ("ingest", "streaming ingest producer/consumer", "bench_ingest"),
     ("categorical", "categorical vs one-hot", "bench_categorical"),
     ("view_cache", "view cache cold/warm/append", "bench_view_cache"),
     ("serve", "multi-tenant serve coalescing", "bench_serve"),

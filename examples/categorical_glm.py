@@ -14,6 +14,8 @@ Walks the new workload end to end on the synthetic Favorita schema:
    oracle.
 """
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import VERSIONS, linear_regression
@@ -46,10 +48,10 @@ def main() -> None:
 
     # -- 2. least squares with categorical features --------------------------
     feats = ["transactions", "store_nbr", "item_nbr"]
-    res = linear_regression(
-        store, vorder, feats, "unit_sales",
-        config=VERSIONS["closed"], categorical=cat, use_cache=True,
+    ls_cfg = dataclasses.replace(
+        VERSIONS["closed"], categorical=tuple(cat), use_cache=True
     )
+    res = linear_regression(store, vorder, feats, "unit_sales", config=ls_cfg)
     err = res.evaluate(store, feats, "unit_sales", categorical=cat)
     print(f"ridge LS   rmse={err['rmse']:.3f}  (θ has {len(res.names)} coords)")
 
@@ -69,10 +71,7 @@ def main() -> None:
             "onpromotion": rng.integers(0, 2, n).astype(np.float64),
         },
     ))
-    res2 = linear_regression(
-        store, vorder, feats, "unit_sales",
-        config=VERSIONS["closed"], categorical=cat, use_cache=True,
-    )
+    res2 = linear_regression(store, vorder, feats, "unit_sales", config=ls_cfg)
     print(f"warm retrain after append: cofactor time {res2.seconds_cofactor * 1e3:.2f} ms")
 
     # -- 3. logistic regression over the compressed join ---------------------

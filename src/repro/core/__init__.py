@@ -17,8 +17,13 @@ Layering (paper section in parentheses):
 * ``distributed``               — union-commutativity as data parallelism
 * ``view_cache``                — persistent cross-batch per-node view cache
                                   (store-owned, delta-maintained under append)
+* ``delta_log``                 — pending-append log behind lazy maintenance
+                                  (O(delta) writes, read-time draining)
+* ``api``                       — the ``StoreReads`` Protocol: the explicit
+                                  Store/StoreSnapshot read contract
 """
 
+from .api import StoreReads
 from .categorical import (
     CatCofactors,
     SparseCounts,
@@ -53,6 +58,7 @@ from .fd import (
     penalty_blocks,
     recover_blocks,
 )
+from .delta_log import DeltaLog, RelationLog
 from .gd import GDConfig, GDResult, bgd_cofactor, bgd_data, solve_cofactor
 from .glm import (
     CompressedDesign,
@@ -77,7 +83,7 @@ from .scaling import (
     predict,
     rescale_theta,
 )
-from .store import Store
+from .store import Store, StoreSnapshot
 from .variable_order import (
     INTERCEPT,
     VariableOrder,
@@ -92,6 +98,7 @@ __all__ = [
     "CatCofactors",
     "Cofactors",
     "CompressedDesign",
+    "DeltaLog",
     "Dictionary",
     "FactorizedEngine",
     "FDReduction",
@@ -105,9 +112,12 @@ __all__ = [
     "Relation",
     "RegressionConfig",
     "RegressionResult",
+    "RelationLog",
     "ScaleFactors",
     "SparseCounts",
     "Store",
+    "StoreReads",
+    "StoreSnapshot",
     "VariableOrder",
     "VERSIONS",
     "ViewCache",

@@ -77,8 +77,8 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from .api import StoreReads
 from .relation import Relation, group_key, join_keys, sort_merge_join
-from .store import Store
 from .variable_order import INTERCEPT, VariableOrder, validate
 from .view_cache import ViewKey
 
@@ -406,7 +406,7 @@ class FactorizedEngine:
 
     def __init__(
         self,
-        store: Store,
+        store: StoreReads,
         vorder: VariableOrder,
         features: Sequence[str],
         backend: str = "jax",
@@ -417,6 +417,15 @@ class FactorizedEngine:
         use_view_cache: Optional[bool] = None,
     ) -> None:
         self.store = store
+        # lazy-maintenance read barrier: fold the pending-delta log of the
+        # covered relations BEFORE freezing the catalog, so this engine
+        # probes a warm, up-to-date view cache.  Delta engines (overrides)
+        # skip it — they ARE the drain's workers, and their overridden
+        # relations must keep their recorded pending state.
+        if not overrides:
+            flush = getattr(store, "flush", None)
+            if callable(flush):
+                flush(vorder.relations())
         # freeze the catalog: all *data* reads (relations, encoded columns)
         # go through an immutable snapshot, so a concurrent ``append`` /
         # ``put`` on the live store can never corrupt an in-flight
@@ -1109,7 +1118,7 @@ class FactorizedEngine:
 
 
 def cofactors_factorized(
-    store: Store,
+    store: StoreReads,
     vorder: VariableOrder,
     features: Sequence[str],
     backend: str = "jax",
@@ -1130,7 +1139,7 @@ def cofactors_factorized(
 
 
 def grouped_cofactors_factorized(
-    store: Store,
+    store: StoreReads,
     vorder: VariableOrder,
     features: Sequence[str],
     group_by: Sequence[str],

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -34,7 +35,11 @@ __all__ = ["RegressionConfig", "RegressionResult", "VERSIONS", "linear_regressio
 
 @dataclasses.dataclass(frozen=True)
 class RegressionConfig:
-    """One row of the paper's Table 2 'version' column."""
+    """One row of the paper's Table 2 'version' column, plus the pipeline
+    routing knobs that used to sprawl across ``linear_regression`` kwargs
+    (``backend`` / ``use_kernel`` / ``use_cache`` / ``categorical`` /
+    ``use_fds`` — the old kwargs still work as deprecation shims that
+    forward onto a copy of the config)."""
 
     name: str = "v1"
     factorized: bool = True  # fact vs noPre
@@ -44,6 +49,12 @@ class RegressionConfig:
     ridge: float = 0.006
     max_iter: int = 200_000
     solver: str = "bgd"  # "bgd" | "closed_form" (beyond-paper)
+    # -- pipeline routing (formerly linear_regression kwargs) ---------------
+    backend: str = "jax"  # engine value math: "jax" | "numpy"
+    use_kernel: bool = False  # in-store SUM/MAX kernels for scaling
+    use_cache: bool = False  # warm-retrain path via sufficient_stats
+    categorical: Tuple[str, ...] = ()  # subset of features, sparse blocks
+    use_fds: bool = True  # FD-reduced categorical solve
 
     def gd(self) -> GDConfig:
         return GDConfig(
@@ -123,29 +134,64 @@ class RegressionResult:
         }
 
 
+#: legacy linear_regression kwargs that already warned this process —
+#: each shim kwarg warns once, not once per call site invocation
+_LEGACY_WARNED: set = set()
+
+
+def _legacy_kwargs(cfg: RegressionConfig, given: Dict[str, object]):
+    """Fold non-None legacy kwargs onto a copy of ``cfg``, warning once
+    per kwarg name.  The shims keep every established call site working
+    while the config fields are the documented surface."""
+    overrides = {k: v for k, v in given.items() if v is not None}
+    if not overrides:
+        return cfg
+    for k in overrides:
+        if k not in _LEGACY_WARNED:
+            _LEGACY_WARNED.add(k)
+            warnings.warn(
+                f"linear_regression(..., {k}=...) is deprecated; set "
+                f"RegressionConfig.{k} instead (e.g. dataclasses.replace"
+                f"(config, {k}=...))",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+    if "categorical" in overrides:
+        overrides["categorical"] = tuple(overrides["categorical"])
+    return dataclasses.replace(cfg, **overrides)
+
+
 def linear_regression(
     store: Store,
     vorder: Optional[VariableOrder],
     features: Sequence[str],
     label: str,
     config: Optional[RegressionConfig] = None,
-    backend: str = "jax",
-    use_kernel: bool = False,
-    use_cache: bool = False,
-    categorical: Sequence[str] = (),
-    use_fds: bool = True,
+    backend: Optional[str] = None,
+    use_kernel: Optional[bool] = None,
+    use_cache: Optional[bool] = None,
+    categorical: Optional[Sequence[str]] = None,
+    use_fds: Optional[bool] = None,
 ) -> RegressionResult:
     """The paper's ``linearRegression(...)`` pipeline.
 
+    All routing lives on :class:`RegressionConfig` — ``factorized`` /
+    ``solver`` as before, plus ``backend`` / ``use_kernel`` / ``use_cache``
+    / ``categorical`` / ``use_fds``.  The same-named keyword arguments are
+    **deprecated shims**: passing one warns (once per kwarg per process)
+    and forwards onto a copy of the config, producing results identical to
+    the config-field spelling.
+
     ``use_cache=True`` (factorized mode only) is the **warm-retrain** path:
     unscaled cofactors come from the store's incrementally-maintained cache
-    (``Store.cofactors``), so after ``Store.append`` a retrain costs only
-    the delta maintenance already paid plus an O(k²) ``Cofactors.rescale``
-    with the fresh scale factors — no rescan of the historical data.  The
-    cached aggregates are always maintained with the fp64 numpy engine
-    (regardless of ``backend``): unscaled quad entries grow with data
-    magnitude and ``rescale`` is a cancelling difference, so a long-lived
-    fp32 accumulator would leak rounding error into the leading digits.
+    (``Store.sufficient_stats``), so after ``Store.append`` a retrain costs
+    only the delta maintenance plus an O(k²) ``Cofactors.rescale`` with the
+    fresh scale factors — no rescan of the historical data.  Under lazy
+    maintenance the read itself drains pending deltas first.  The cached
+    aggregates are always maintained with the fp64 numpy engine (regardless
+    of ``backend``): unscaled quad entries grow with data magnitude and
+    ``rescale`` is a cancelling difference, so a long-lived fp32
+    accumulator would leak rounding error into the leading digits.
 
     ``categorical`` declares a subset of ``features`` as categorical: their
     cofactor blocks become group-by aggregates (sparse, one-hot-free — see
@@ -156,29 +202,39 @@ def linear_regression(
     the default ``VERSIONS['closed']`` — unless the continuous columns are
     pre-scaled).
     """
-    cfg = config or VERSIONS["v1"]
+    cfg = _legacy_kwargs(
+        config or VERSIONS["v1"],
+        {
+            "backend": backend,
+            "use_kernel": use_kernel,
+            "use_cache": use_cache,
+            "categorical": categorical,
+            "use_fds": use_fds,
+        },
+    )
     features = list(features)
     if cfg.factorized and vorder is None:
         raise ValueError("factorized mode requires a variable order")
-    if categorical:
+    if cfg.categorical:
         return _linear_regression_categorical(
-            store, vorder, features, label, cfg, backend,
-            list(categorical), use_cache, use_kernel, use_fds,
+            store, vorder, features, label, cfg
         )
 
     t0 = time.perf_counter()
-    factors = compute_scale_factors(store, features, label, use_kernel=use_kernel)
+    factors = compute_scale_factors(
+        store, features, label, use_kernel=cfg.use_kernel
+    )
     t1 = time.perf_counter()
 
     cols = features + [label]  # cofactor ordering: [intercept] + cols
     if cfg.factorized:
-        if use_cache:
-            cof = store.cofactors(vorder, cols, backend="numpy").rescale(
-                factors
-            )
+        if cfg.use_cache:
+            cof = store.sufficient_stats(
+                vorder, features, label, backend="numpy"
+            ).rescale(factors)
         else:
             cof = cofactors_factorized(
-                store, vorder, cols, backend=backend, scale=factors
+                store, vorder, cols, backend=cfg.backend, scale=factors
             )
         cof_matrix = cof.matrix()
         t2 = time.perf_counter()
@@ -221,11 +277,6 @@ def _linear_regression_categorical(
     features: List[str],
     label: str,
     cfg: RegressionConfig,
-    backend: str,
-    categorical: List[str],
-    use_cache: bool,
-    use_kernel: bool,
-    use_fds: bool = True,
 ) -> RegressionResult:
     """Least squares with categorical features over the sparse cofactor
     algebra: assemble the one-hot cofactor matrix from grouped aggregates
@@ -242,6 +293,7 @@ def _linear_regression_categorical(
     from .categorical import cat_cofactors_factorized, cat_cofactors_materialized
     from .fd import apply_penalty_blocks, recover_theta_blocks
 
+    categorical = list(cfg.categorical)
     missing = set(categorical) - set(features)
     if missing:
         raise ValueError(
@@ -249,25 +301,29 @@ def _linear_regression_categorical(
         )
     cont = [f for f in features if f not in categorical] + [label]
 
-    red = store.fd_reduction(categorical) if use_fds else None
+    red = store.fd_reduction(categorical) if cfg.use_fds else None
     if red is not None and red.is_trivial:
         red = None
     run_cat = list(red.kept) if red is not None else categorical
 
     t0 = time.perf_counter()
     if cfg.factorized:
-        if use_cache:
-            cof = store.cat_cofactors(
-                vorder, cont, categorical, backend="numpy",
+        if cfg.use_cache:
+            cof = store.sufficient_stats(
+                vorder,
+                features,
+                label,
+                categorical=categorical,
+                backend="numpy",
                 reduce_fds=red is not None,
             )
         else:
             cof = cat_cofactors_factorized(
-                store, vorder, cont, run_cat, backend=backend
+                store, vorder, cont, run_cat, backend=cfg.backend
             )
     else:
         cof = cat_cofactors_materialized(
-            store, cont, run_cat, use_kernel=use_kernel
+            store, cont, run_cat, use_kernel=cfg.use_kernel
         )
     mat, names = cof.regression_matrix(label)
     t1 = time.perf_counter()

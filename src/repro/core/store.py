@@ -13,25 +13,45 @@ the store keeps a **cofactor cache** keyed by
   cofactors over the factorized join (scaled variants derive lazily via
   ``Cofactors.rescale``, the paper's §4.2 view algebra, so one cache entry
   serves every scaling).
-* ``append(name, delta)``  — batch row update.  Joins distribute over
-  union — ``(R ∪ ΔR) ⋈ S = (R ⋈ S) ∪ (ΔR ⋈ S)`` — so every cache entry
-  covering ``name`` is maintained by computing the delta cofactors against
-  the *pre-merge* catalog (relation ``name`` replaced by ``delta``) and
-  folding them in with ``Cofactors.__add__`` (Prop. 4.1 union
-  commutativity).  Cost is O(delta factorization), never a rescan of the
-  historical data.
+* ``append(name, delta)``  — batch row update, **O(delta)** on the write
+  path.  The default ``maintenance="lazy"`` mode validates FDs, concats
+  the relation, pushes a metadata-only record onto the per-relation
+  :class:`repro.core.delta_log.DeltaLog` and returns — no view-cache or
+  cofactor folds happen on the write path, so append latency is
+  independent of how many cached entries cover the relation.
+  ``maintenance="eager"`` restores the fold-on-write behaviour (useful
+  when reads vastly outnumber writes, or when append's all-or-nothing
+  exception contract matters).
+* **lazy drain** — any read entry point that touches a relation with
+  pending deltas (``sufficient_stats`` / ``cofactors`` /
+  ``cat_cofactors``, and every ``FactorizedEngine`` construction) first
+  calls :meth:`Store.flush`, which folds the *stacked* delta of every
+  pending relation into the covering entries in one pass per relation
+  (joins distribute over union — ``(R ∪ ΔR) ⋈ S = (R ⋈ S) ∪ (ΔR ⋈ S)``,
+  Prop. 4.1 — so however many appends piled up, one fold pays for all).
+  With several relations pending, relation i's fold freezes every
+  later-pending relation to its pre-append prefix, so the per-relation
+  fold terms telescope to exactly the merged-join total.  Past a size
+  threshold (``compact_ratio`` / ``compact_rows``) folding a huge stacked
+  delta would cost more than recomputing from base, so ``append``
+  *compacts* instead: covered entries are invalidated and the log
+  cleared.
 * ``put(rel)``             — catalog mutation: overwriting a relation
   **invalidates** every cache entry that references it (deltas are unions;
   arbitrary replacement is not).  Entries over unrelated relations survive.
 * ``column_moments(col)``  — cached per-column (sum, max|x|, count) over the
   union of relations containing the column, maintained under ``append``
-  (sum/count accumulate, max folds) so feature scaling never rescans the
-  historical data either.
+  (sum/count accumulate, max folds — always eager: O(delta) columnar work)
+  so feature scaling never rescans the historical data either.
 
-Cache versioning: ``version`` increments on every catalog mutation; every
-mutation re-stamps the entries it keeps valid (``append`` after folding the
-delta, ``put`` for entries over untouched relations), and lookups recompute
-on any version mismatch — a backstop against invalidation-rule bugs.
+Cache versioning: ``version`` increments on every catalog mutation, and
+``_rel_versions[name]`` records the version of the last mutation affecting
+relation ``name`` (its *watermark*).  An entry is valid iff its stamp is
+``>=`` the watermark of every relation its join covers — so an append
+makes exactly the covering entries stale ("stale but foldable": the drain
+folds them and restamps at the current version) while entries over
+untouched relations stay valid with **no** restamping loop on the write
+path.
 
 Below the result-level caches sits the **persistent view cache**
 (``repro.core.view_cache``): per-node engine views keyed by
@@ -43,8 +63,10 @@ overlapping attribute sets (FD on/off, GLM designs, per-attribute sweeps,
 warm retrains) skip finished descents.  ``append`` maintains it with
 delta-path folds: only views on the appended relation's root path are
 touched (each folded with a delta view computed by an engine that itself
-reuses the cached sibling views), everything else is restamped.  ``put``
-invalidates exactly the entries covering the replaced relation.
+reuses the cached sibling views); entries over untouched relations stay
+valid under the same watermark rule (``ViewCache.watermarks`` aliases
+``_rel_versions``).  ``put`` invalidates exactly the entries covering the
+replaced relation.
 
 Two pieces of store-owned state make those views reusable at all:
 
@@ -71,6 +93,7 @@ from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .delta_log import DeltaLog
 from .fd import (
     FDReduction,
     FunctionalDependency,
@@ -87,12 +110,15 @@ if TYPE_CHECKING:  # avoid a circular import at runtime (factorize -> store)
 
 __all__ = ["Store", "StoreSnapshot"]
 
+#: the zero-work return value of :meth:`Store.flush`
+_NO_DRAIN = {"relations": 0, "rows": 0, "appends": 0}
+
 
 @dataclasses.dataclass
 class _CacheEntry:
     cofactors: object  # Cofactors | CatCofactors — unscaled; treat as immutable
     relations: frozenset  # relation names the entry's join covers
-    version: int  # store version the entry is valid at
+    version: int  # stamp: valid iff >= every covered relation's watermark
 
 
 class _AttrDict:
@@ -150,22 +176,47 @@ class Store:
         self,
         relations: Optional[Sequence[Relation]] = None,
         view_cache_bytes: int = DEFAULT_MAX_BYTES,
+        maintenance: str = "lazy",
+        compact_ratio: Optional[float] = 0.5,
+        compact_rows: Optional[int] = None,
     ) -> None:
+        if maintenance not in ("lazy", "eager"):
+            raise ValueError(
+                f"maintenance must be 'lazy' or 'eager', got {maintenance!r}"
+            )
+        #: "lazy" (default): append is O(delta), folds deferred to reads;
+        #: "eager": append folds every covering entry before returning.
+        self.maintenance = maintenance
+        #: compact (invalidate + clear log) when a relation's pending rows
+        #: exceed ``compact_ratio`` × its pre-append row count …
+        self.compact_ratio = compact_ratio
+        #: … or this absolute row cap (either None disables that trigger).
+        self.compact_rows = compact_rows
         self._relations: Dict[str, Relation] = {}
         self._cofactor_cache: Dict[tuple, _CacheEntry] = {}
         # categorical entries live in their own cache: the key includes the
         # categorical signature (cont tuple, cat tuple) and the delta
         # maintenance runs the grouped engine instead of the plain one.
         self._cat_cache: Dict[tuple, _CacheEntry] = {}
+        # per-relation watermarks: version of the last mutation affecting
+        # the relation.  Entry validity = stamp >= every covered watermark;
+        # shared with the view cache so both levels use one rule.
+        self._rel_versions: Dict[str, int] = {}
+        # per-relation pending-append log (lazy maintenance write path)
+        self._delta_log = DeltaLog()
+        self._draining = False  # re-entrancy guard for flush()
         # persistent cross-batch per-node view cache (see module docstring);
         # view_cache_bytes=0 disables it (the cold-baseline escape hatch).
         self.view_cache = ViewCache(max_bytes=view_cache_bytes)
+        self.view_cache.watermarks = self._rel_versions
         # attr -> append-only global dictionary; (rel, attr) -> cached ids
         self._dicts: Dict[str, _AttrDict] = {}
         self._enc_cols: Dict[Tuple[str, str], np.ndarray] = {}
-        # per-append memo of the active delta's encoded columns (see
-        # attr_encoding): (delta relation, {attr: ids}) while inside append
-        self._override_enc: Optional[tuple] = None
+        # per-fold memo of active override relations' encoded columns (see
+        # attr_encoding): {id(override relation): {attr: ids}} while a fold
+        # or drain is running — one relation may spawn several delta
+        # engines, and a drain overrides several relations at once.
+        self._override_enc: Optional[Dict[int, Dict[str, np.ndarray]]] = None
         # functional-dependency catalog: (lhs, rhs) -> FD with its witnessed
         # id mapping.  Declared FDs are contracts; inferred ones are dropped
         # when an append falsifies them (see append / _plan_fd_updates).
@@ -209,17 +260,18 @@ class Store:
         relation's column instead — used by delta engines — without
         touching the cache."""
         if override is not None:
-            # one append spawns several delta engines (view-cache folds
-            # per feature group + the result-cache folds); encode each
-            # delta column once per append, not once per engine.
+            # one fold spawns several delta engines (view-cache folds per
+            # feature group + the result-cache folds), and a drain folds
+            # several override relations; encode each override column once
+            # per fold, not once per engine.
             memo = self._override_enc
-            if memo is not None and memo[0] is override:
-                ids = memo[1].get(attr)
+            if memo is not None:
+                by_attr = memo.setdefault(id(override), {})
+                ids = by_attr.get(attr)
                 if ids is None:
-                    ids = self._dict_for(attr).extend_encode(
+                    ids = by_attr[attr] = self._dict_for(attr).extend_encode(
                         override.column(attr)
                     )
-                    memo[1][attr] = ids
                 return ids
             return self._dict_for(attr).extend_encode(override.column(attr))
         key = (rel_name, attr)
@@ -309,9 +361,15 @@ class Store:
         if stale_fds:
             self._bump_fds()
         self.version += 1
+        # watermark bump: entries covering the name fail validity from now
+        # on (they are dropped below anyway); survivors stay valid with no
+        # restamping loop.
+        self._rel_versions[rel.name] = self.version
         self._invalidate(rel.name)
         self._invalidate_fd_entries()
-        self._restamp()  # survivors stay valid
+        # pending deltas of the replaced relation describe rows that no
+        # longer exist, and the entries they would have maintained are gone
+        self._delta_log.clear(rel.name)
         stale_attrs = set(rel.attributes) | set(
             old.attributes if old else ()
         )
@@ -503,157 +561,316 @@ class Store:
         """Append the rows of ``delta`` to relation ``name`` (batch update).
 
         ``delta`` must carry the same key/value attribute sets as the stored
-        relation (its own ``name`` is ignored).  Cached cofactor entries
-        whose join covers ``name`` are maintained in place: the delta
-        cofactors are computed against the pre-merge catalog and summed in
-        (see module docstring); entries over other relations are untouched.
-        Returns the merged relation now in the catalog.
+        relation (its own ``name`` is ignored).  Returns the merged relation
+        now in the catalog.
 
-        FD maintenance: the delta is checked against the FD catalog first —
-        a violated *declared* FD rejects the append outright (nothing
-        mutated); a falsified *inferred* FD is dropped after the fold and
-        every FD-reduced cache entry built under it is invalidated; new lhs
-        ids with consistent rhs values extend the FD mappings in place.
+        Under the default ``maintenance="lazy"`` the write path is
+        **O(delta)**: FD validation, the concat, the moments / encoded-
+        column extension, and a metadata push onto the pending-delta log —
+        no view-cache or cofactor folds, whatever the cache population.
+        Cached entries covering ``name`` become stale-but-foldable; the
+        next read that touches them drains the log (:meth:`flush`), folding
+        the *stacked* delta in one pass (Prop. 4.1 union commutativity).
+        If the pending rows cross the compaction threshold
+        (``compact_ratio`` / ``compact_rows``), covering entries are
+        invalidated instead — recomputing from the merged base is cheaper
+        than folding a delta comparable to it.
 
-        Exception safety: if any delta fold raises mid-loop, every cache
-        entry covering ``name`` is invalidated (some may already hold the
-        folded delta while the catalog still holds the pre-append rows) and
-        the exception re-raised — the catalog, moments and FD catalog are
-        left exactly as before the call.
+        ``maintenance="eager"`` folds every covering entry before the
+        catalog is touched (the pre-lazy behaviour): the delta cofactors
+        are computed against the pre-merge catalog and summed in, and a
+        fold that raises leaves the catalog, moments and FD catalog
+        exactly as before the call (covering entries invalidated).
+
+        FD maintenance (both modes): the delta is checked against the FD
+        catalog first — a violated *declared* FD rejects the append
+        outright (nothing mutated); a falsified *inferred* FD is dropped
+        and every FD-reduced cache entry built under it is invalidated;
+        new lhs ids with consistent rhs values extend the FD mappings.
         """
         if name not in self._relations:
             raise KeyError(f"append target {name!r} not in catalog")
         base = self._relations[name]
         merged = base.concat(delta)  # validates attribute sets first
 
-        if delta.num_rows:
-            delta_named = dataclasses.replace(
-                delta,
-                name=name,
-                keys=dict(delta.keys),
-                values=dict(delta.values),
-                domains=dict(delta.domains),
-            )
-            # FD check is a pure plan: raises on a declared-FD violation
-            # before anything below has mutated.
-            falsified, extensions = self._plan_fd_updates(delta_named)
-            self._override_enc = (delta_named, {})
+        if not delta.num_rows:
+            # empty delta: publish the (identical) merged relation and bump
+            # the version WITHOUT moving the watermark — nothing about the
+            # data changed, so every cached entry stays valid.
+            self._relations = {**self._relations, name: merged}
+            self.version += 1
+            return merged
+
+        delta_named = dataclasses.replace(
+            delta,
+            name=name,
+            keys=dict(delta.keys),
+            values=dict(delta.values),
+            domains=dict(delta.domains),
+        )
+        # FD check is a pure plan: raises on a declared-FD violation
+        # before anything below has mutated.
+        falsified, extensions = self._plan_fd_updates(delta_named)
+        if self.maintenance == "eager":
+            # fold-on-write, against the pre-merge catalog; stamped at the
+            # post-publish version so the entries are valid the moment the
+            # catalog lands.  A poisoned delta raises out of here with the
+            # store untouched (covering entries invalidated).
+            self._override_enc = {}
             try:
-                # persistent view cache first: entries on the appended
-                # relation's root path are folded with delta views (their
-                # sibling subtrees' entries stay valid untouched), so the
-                # result-cache delta engines below — and every later warm
-                # batch — start from an already-maintained view layer.
-                self._maintain_view_cache(name, delta_named)
-                # one delta factorization per (vorder, backend) over the
-                # union of cached feature sets; entries derive via project —
-                # entries differing only in features don't pay the join
-                # again.
-                groups: Dict[tuple, List[tuple]] = {}
-                for key, entry in self._cofactor_cache.items():
-                    if name in entry.relations:
-                        sig, feats, backend = key
-                        groups.setdefault((sig, backend), []).append(key)
-                for (sig, backend), keys in groups.items():
-                    feats_union = list(
-                        dict.fromkeys(f for k in keys for f in k[1])
-                    )
-                    delta_cof = self._delta_cofactors(
-                        name, delta_named, sig, feats_union, backend
-                    )
-                    for key in keys:
-                        entry = self._cofactor_cache[key]
-                        entry.cofactors = entry.cofactors + delta_cof.project(
-                            list(key[1])
-                        )
-                # categorical entries: same union algebra, grouped engine,
-                # and the same delta-sharing scheme as above — one delta
-                # pass per (vorder, backend) over the union feature sets,
-                # entries derive via ``CatCofactors.project``.  FD-reduced
-                # entries only carry their KEPT attributes
-                # (entry.cofactors.cat), so the union delta is computed over
-                # kept attributes too — the reduced blocks are plain
-                # cofactors over the kept set and fold with the same
-                # algebra.  The delta carries the delta's (possibly larger)
-                # domains; ``__add__`` zero-pads, so unseen category ids
-                # appended here grow the cached blocks in place.
-                cat_groups: Dict[tuple, List[tuple]] = {}
-                for key, entry in self._cat_cache.items():
-                    if name in entry.relations:
-                        sig, cont, cat, backend, fdsig = key
-                        cat_groups.setdefault((sig, backend), []).append(key)
-                for (sig, backend), keys in cat_groups.items():
-                    cont_union = list(
-                        dict.fromkeys(f for k in keys for f in k[1])
-                    )
-                    cat_union = list(
-                        dict.fromkeys(
-                            c
-                            for k in keys
-                            for c in self._cat_cache[k].cofactors.cat
-                        )
-                    )
-                    delta_cof = self._delta_cat_cofactors(
-                        name, delta_named, sig, cont_union, cat_union, backend
-                    )
-                    for key in keys:
-                        entry = self._cat_cache[key]
-                        entry.cofactors = entry.cofactors + delta_cof.project(
-                            list(key[1]), list(entry.cofactors.cat)
-                        )
-                # per-column moments: accumulate under union.  Built as a
-                # fresh map and published below with the catalog — a
-                # snapshot holding the old map never sees a partial update.
-                new_moments = dict(self._moments)
-                for attr, (s, mx, cnt) in list(self._moments.items()):
-                    if attr not in delta_named.attributes:
-                        continue
-                    col = delta_named.column(attr).astype(np.float64)
-                    new_moments[attr] = (
-                        s + float(col.sum()),
-                        max(mx, float(np.abs(col).max())),
-                        cnt + len(col),
-                    )
+                self._fold_relation(name, delta_named, {}, self.version + 1)
             except Exception:
                 self._invalidate(name)
                 raise
             finally:
                 self._override_enc = None
-            if falsified or extensions:
-                new_fds = dict(self._fds)
-                for key in falsified:
-                    del new_fds[key]
-                for key, mapping in extensions.items():
-                    new_fds[key] = dataclasses.replace(
-                        new_fds[key], mapping=mapping
-                    )
-                self._fds = new_fds
-                self._bump_fds()
-            if falsified:
-                self._invalidate_fd_entries()
-            # encoded-column cache: the merged relation is base ++ delta,
-            # so cached id columns extend with the delta's ids (global
-            # dictionaries grow append-only — existing ids never move).
-            new_enc = dict(self._enc_cols)
-            for attr in delta_named.attributes:
-                enc_key = (name, attr)
-                ids = new_enc.get(enc_key)
-                if ids is not None:
-                    delta_ids = self._dict_for(attr).extend_encode(
-                        delta_named.column(attr)
-                    )
-                    new_enc[enc_key] = np.concatenate([ids, delta_ids])
-            self._enc_cols = new_enc
-            self._moments = new_moments
+        # per-column moments: accumulate under union.  Eager in BOTH modes
+        # — the O(delta) column scan costs no more than the log push and
+        # keeps feature scaling off the drain path.  Built as a fresh map
+        # and published below with the catalog — a snapshot holding the
+        # old map never sees a partial update.
+        new_moments = dict(self._moments)
+        for attr, (s, mx, cnt) in list(self._moments.items()):
+            if attr not in delta_named.attributes:
+                continue
+            col = delta_named.column(attr).astype(np.float64)
+            new_moments[attr] = (
+                s + float(col.sum()),
+                max(mx, float(np.abs(col).max())),
+                cnt + len(col),
+            )
+        if falsified or extensions:
+            new_fds = dict(self._fds)
+            for key in falsified:
+                del new_fds[key]
+            for key, mapping in extensions.items():
+                new_fds[key] = dataclasses.replace(
+                    new_fds[key], mapping=mapping
+                )
+            self._fds = new_fds
+            self._bump_fds()
+        if falsified:
+            self._invalidate_fd_entries()
+        # encoded-column cache: the merged relation is base ++ delta,
+        # so cached id columns extend with the delta's ids (global
+        # dictionaries grow append-only — existing ids never move).
+        new_enc = dict(self._enc_cols)
+        for attr in delta_named.attributes:
+            enc_key = (name, attr)
+            ids = new_enc.get(enc_key)
+            if ids is not None:
+                delta_ids = self._dict_for(attr).extend_encode(
+                    delta_named.column(attr)
+                )
+                new_enc[enc_key] = np.concatenate([ids, delta_ids])
+        self._enc_cols = new_enc
+        self._moments = new_moments
         # COW publish: snapshot readers holding the old maps are untouched.
         self._relations = {**self._relations, name: merged}
+        log = None
+        if self.maintenance == "lazy":
+            # metadata only: the stacked delta IS merged[base_rows:], so
+            # the log records row counts, never rows.
+            log = self._delta_log.record(
+                name, base.num_rows, delta.num_rows, self.version
+            )
         self.version += 1
-        self._restamp()
+        self._rel_versions[name] = self.version
+        if log is not None and self._should_compact(log):
+            self._compact(name)
         return merged
 
-    def _maintain_view_cache(self, name: str, delta: Relation) -> None:
-        """Delta-path maintenance of the persistent view cache under
-        ``append(name, delta)``.
+    # -- lazy maintenance: pending-delta log + drain ---------------------------
+    def flush(self, names: Optional[Sequence[str]] = None) -> Dict[str, int]:
+        """Fold every pending append into the caches NOW (the lazy-
+        maintenance read barrier, also callable as an explicit idle-window
+        pass).  ``names`` is an optional scope hint: when given and no
+        pending relation is among them, the call is a no-op — but a drain,
+        once started, always folds ALL pending relations (partial drains
+        would leave entries covering several pending relations half
+        folded).
+
+        Returns ``{"relations", "rows", "appends"}`` actually drained
+        (zeros when there was nothing to do).  Never bumps ``version`` —
+        folding changes no data, so snapshots taken before a flush remain
+        current through it."""
+        if self._draining or not self._delta_log:
+            return dict(_NO_DRAIN)
+        if names is not None and not (
+            set(names) & set(self._delta_log.names())
+        ):
+            return dict(_NO_DRAIN)
+        return self._drain_all()
+
+    def _drain_all(self) -> Dict[str, int]:
+        """Fold the stacked delta of every pending relation into the
+        covering view-cache / cofactor entries, in first-pending order.
+
+        Multi-relation exactness (the telescoping sum): when relations
+        A, B, … are pending, relation i's fold runs with relation i
+        overridden to its stacked delta and every LATER pending relation
+        frozen to its pre-append prefix.  Summing the per-relation fold
+        terms then telescopes to exactly the merged-join total — the
+        ΔA ⋈ ΔB cross terms are picked up exactly once (by the earlier
+        relation's fold, whose catalog view of the later one is still the
+        prefix), independent of drain order.
+
+        Exception safety: a fold that raises invalidates every entry
+        covering a still-pending relation (the failed one may be half
+        folded), clears those logs, and re-raises to the reader — the
+        catalog itself was published at append time and stays correct.
+        """
+        log = self._delta_log
+        pend = log.items()
+        stats = {
+            "relations": len(pend),
+            "rows": log.total_rows(),
+            "appends": log.total_appends(),
+        }
+        self._draining = True
+        try:
+            for i, (name, rlog) in enumerate(pend):
+                # fresh memo per relation: the override slices below are
+                # keyed by object id, which a freed slice could recycle
+                self._override_enc = {}
+                delta = self._slice_rows(name, rlog.base_rows, None)
+                frozen = {
+                    later: self._slice_rows(later, 0, later_log.base_rows)
+                    for later, later_log in pend[i + 1 :]
+                }
+                self._fold_relation(name, delta, frozen, self.version)
+                log.clear(name, drained=True)
+        except Exception:
+            for name, _ in pend:
+                if name in log:
+                    self._invalidate(name)
+                    log.clear(name)
+            raise
+        finally:
+            self._draining = False
+            self._override_enc = None
+        log.drains += 1
+        return stats
+
+    def _slice_rows(
+        self, name: str, start: int, stop: Optional[int]
+    ) -> Relation:
+        """A row-range view of cataloged relation ``name`` — the stacked
+        pending delta (``[base_rows:]``) or the frozen pre-append prefix
+        (``[:base_rows]``) used as a drain override.  Its encoded columns
+        are pre-seeded into the override memo by slicing the cached merged
+        encodings, so delta engines never re-encode drained rows."""
+        merged = self._relations[name]
+        sl = slice(start, stop)
+        rel = Relation(
+            name=name,
+            keys={a: c[sl] for a, c in merged.keys.items()},
+            values={a: c[sl] for a, c in merged.values.items()},
+            domains=dict(merged.domains),
+        )
+        memo = self._override_enc
+        if memo is not None:
+            # overwrite (never setdefault): a dead slice's recycled id must
+            # not leak its encodings to this fresh one
+            by_attr = memo[id(rel)] = {}
+            for attr in rel.attributes:
+                by_attr[attr] = self.attr_encoding(name, attr)[sl]
+        return rel
+
+    def _should_compact(self, log) -> bool:
+        if self.compact_rows is not None and log.rows > self.compact_rows:
+            return True
+        return (
+            self.compact_ratio is not None
+            and log.rows > self.compact_ratio * max(log.base_rows, 1)
+        )
+
+    def _compact(self, name: str) -> None:
+        """Pending rows crossed the fold-vs-recompute crossover: folding a
+        stacked delta comparable to the base costs as much as a fresh
+        descent, so drop the covering entries and the log — the next read
+        recomputes from the merged base and re-seeds the caches."""
+        self._invalidate(name)
+        self._delta_log.clear(name)
+        self._delta_log.compactions += 1
+
+    def _fold_relation(
+        self,
+        name: str,
+        delta: Relation,
+        frozen: Dict[str, Relation],
+        stamp: int,
+    ) -> None:
+        """Fold ``delta`` (relation ``name``'s update rows) into every
+        cache entry covering ``name``, stamping survivors at ``stamp``.
+        ``frozen`` overrides other relations to their pre-append prefixes
+        (the drain's telescoping guard; empty for eager single-relation
+        folds).  Callers own exception handling and the override memo."""
+        overrides = {name: delta, **frozen}
+        # persistent view cache first: entries on the appended relation's
+        # root path are folded with delta views (their sibling subtrees'
+        # entries stay valid untouched), so the result-cache delta engines
+        # below — and every later warm batch — start from an already-
+        # maintained view layer.
+        self._maintain_view_cache(name, overrides, stamp)
+        # one delta factorization per (vorder, backend) over the union of
+        # cached feature sets; entries derive via project — entries
+        # differing only in features don't pay the join again.
+        groups: Dict[tuple, List[tuple]] = {}
+        for key, entry in self._cofactor_cache.items():
+            if name in entry.relations:
+                sig, feats, backend = key
+                groups.setdefault((sig, backend), []).append(key)
+        for (sig, backend), keys in groups.items():
+            feats_union = list(dict.fromkeys(f for k in keys for f in k[1]))
+            delta_cof = self._delta_cofactors(
+                sig, feats_union, backend, overrides
+            )
+            for key in keys:
+                entry = self._cofactor_cache[key]
+                entry.cofactors = entry.cofactors + delta_cof.project(
+                    list(key[1])
+                )
+                entry.version = stamp
+        # categorical entries: same union algebra, grouped engine, and the
+        # same delta-sharing scheme as above — one delta pass per (vorder,
+        # backend) over the union feature sets, entries derive via
+        # ``CatCofactors.project``.  FD-reduced entries only carry their
+        # KEPT attributes (entry.cofactors.cat), so the union delta is
+        # computed over kept attributes too — the reduced blocks are plain
+        # cofactors over the kept set and fold with the same algebra.  The
+        # delta carries the delta's (possibly larger) domains; ``__add__``
+        # zero-pads, so unseen category ids appended here grow the cached
+        # blocks in place.
+        cat_groups: Dict[tuple, List[tuple]] = {}
+        for key, entry in self._cat_cache.items():
+            if name in entry.relations:
+                sig, cont, cat, backend, fdsig = key
+                cat_groups.setdefault((sig, backend), []).append(key)
+        for (sig, backend), keys in cat_groups.items():
+            cont_union = list(dict.fromkeys(f for k in keys for f in k[1]))
+            cat_union = list(
+                dict.fromkeys(
+                    c
+                    for k in keys
+                    for c in self._cat_cache[k].cofactors.cat
+                )
+            )
+            delta_cof = self._delta_cat_cofactors(
+                sig, cont_union, cat_union, backend, overrides
+            )
+            for key in keys:
+                entry = self._cat_cache[key]
+                entry.cofactors = entry.cofactors + delta_cof.project(
+                    list(key[1]), list(entry.cofactors.cat)
+                )
+                entry.version = stamp
+
+    def _maintain_view_cache(
+        self, name: str, overrides: Dict[str, Relation], stamp: int
+    ) -> None:
+        """Delta-path maintenance of the persistent view cache for one
+        relation's fold.
 
         Joins distribute over union, per node: the view of a subtree
         containing ``name`` over the post-append catalog equals its
@@ -690,11 +907,13 @@ class Store:
                     list(key.feats),
                     backend=key.backend,
                     dtype=np.dtype(key.dtype),
-                    overrides={name: delta},
+                    overrides=overrides,
                     use_view_cache=True,
                 )
                 engines[ekey] = eng
-            vc.replace(key, eng.fold_delta_view(key, entry.view))
+            vc.replace(
+                key, eng.fold_delta_view(key, entry.view), version=stamp
+            )
 
     def column_moments(self, col: str) -> Tuple[float, float, int]:
         """(sum, max|x|, count) of ``col`` over the union of relations that
@@ -718,18 +937,18 @@ class Store:
 
     def _delta_cofactors(
         self,
-        name: str,
-        delta: Relation,
         vorder_sig: tuple,
         features: List[str],
         backend: str,
+        overrides: Dict[str, Relation],
     ) -> "Cofactors":
-        """Cofactors of the join with relation ``name`` replaced by the
-        delta rows — the additive update term for one cache entry.  Runs
-        as a delta engine against THIS store (``overrides``), so the
-        descent reuses cached sibling-subtree views and the shared
-        dictionaries instead of re-encoding the whole pre-merge catalog
-        into a throwaway store."""
+        """Cofactors of the join with the folding relation replaced by its
+        delta rows (and, during a multi-relation drain, later pending
+        relations frozen to their prefixes) — the additive update term for
+        one cache entry.  Runs as a delta engine against THIS store
+        (``overrides``), so the descent reuses cached sibling-subtree views
+        and the shared dictionaries instead of re-encoding the whole
+        pre-merge catalog into a throwaway store."""
         from .factorize import FactorizedEngine
 
         vorder = self._vorders[vorder_sig]
@@ -738,22 +957,21 @@ class Store:
             vorder,
             features,
             backend=backend,
-            overrides={name: delta},
+            overrides=overrides,
         ).cofactors()
 
     def _delta_cat_cofactors(
         self,
-        name: str,
-        delta: Relation,
         vorder_sig: tuple,
         cont: List[str],
         cat: List[str],
         backend: str,
+        overrides: Dict[str, Relation],
     ):
         """Categorical delta term: the full fused cofactor batch of the join
-        with relation ``name`` replaced by the delta rows — ONE multi-output
-        engine traversal per fold, not one per attribute/pair, reusing
-        cached sibling-subtree views through ``overrides``."""
+        under ``overrides`` — ONE multi-output engine traversal per fold,
+        not one per attribute/pair, reusing cached sibling-subtree views
+        through ``overrides``."""
         from .categorical import cat_cofactors_factorized
 
         vorder = self._vorders[vorder_sig]
@@ -765,13 +983,75 @@ class Store:
             cat,
             backend=backend,
             stats=stats,
-            overrides={name: delta},
+            overrides=overrides,
         )
         self.cat_passes += stats["passes"]
         self.cat_node_visits += stats["node_visits"]
         return out
 
     # -- cofactor cache --------------------------------------------------------
+    def sufficient_stats(
+        self,
+        vorder: "VariableOrder",
+        features: Sequence[str],
+        label: Optional[str] = None,
+        categorical: Sequence[str] = (),
+        backend: Optional[str] = None,
+        refresh: bool = False,
+        reduce_fds: bool = False,
+    ):
+        """Sufficient statistics of a regression over the factorized join —
+        THE public read entry point for model training (and the single
+        choke point the lazy-maintenance drain instruments).
+
+        ``features`` are the model inputs; ``label`` (if given) is appended
+        to the continuous block.  With ``categorical=()`` this returns the
+        continuous :class:`~repro.core.factorize.Cofactors` over
+        ``features + [label]`` (default backend ``"jax"``); with
+        categorical attributes it returns the
+        :class:`~repro.core.categorical.CatCofactors` whose continuous
+        block covers the non-categorical features + label (default backend
+        ``"numpy"``; ``reduce_fds`` applies the FD reduction — see
+        :meth:`cat_cofactors`).  Results are cached and maintained under
+        append exactly as before; ``refresh=True`` forces a from-scratch
+        recompute.  Do not mutate returned objects.
+
+        Under lazy maintenance this is a read barrier: pending deltas are
+        drained (:meth:`flush`) before the cache is consulted, so entries
+        are folded up to date or recomputed — never served stale.
+
+        :meth:`cofactors` and :meth:`cat_cofactors` are thin wrappers kept
+        for the established call sites.
+        """
+        cont = [f for f in features if f not in set(categorical)]
+        if label is not None:
+            cont.append(label)
+        cat = list(categorical)
+        if cat:
+            return self.cat_cofactors(
+                vorder,
+                cont,
+                cat,
+                backend=backend if backend is not None else "numpy",
+                refresh=refresh,
+                reduce_fds=reduce_fds,
+            )
+        return self.cofactors(
+            vorder,
+            cont,
+            backend=backend if backend is not None else "jax",
+            refresh=refresh,
+        )
+
+    def _entry_current(self, entry: _CacheEntry) -> bool:
+        """Entry validity under per-relation watermarks: valid iff stamped
+        at or after the last mutation of every relation it covers.  A lazy
+        append moves the covered relations' watermarks without touching
+        the entry; the pre-read drain folds the entry and restamps it —
+        this check is the backstop against drain/invalidation bugs."""
+        rv = self._rel_versions
+        return all(entry.version >= rv.get(r, 0) for r in entry.relations)
+
     def cofactors(
         self,
         vorder: "VariableOrder",
@@ -780,20 +1060,20 @@ class Store:
         refresh: bool = False,
     ) -> "Cofactors":
         """Cached *unscaled* cofactors over the factorized join of
-        ``vorder`` for ``features``.  Computes on miss; appends maintain the
-        entry incrementally; ``refresh=True`` forces a from-scratch
-        recompute (and re-seeds the cache).  Do not mutate the result —
-        derive scaled views with ``Cofactors.rescale``."""
+        ``vorder`` for ``features`` (continuous wrapper around
+        :meth:`sufficient_stats` — the features here already include any
+        label column).  Computes on miss; appends maintain the entry
+        incrementally (eagerly or via the pending-delta drain);
+        ``refresh=True`` forces a from-scratch recompute (and re-seeds the
+        cache).  Do not mutate the result — derive scaled views with
+        ``Cofactors.rescale``."""
         from .factorize import FactorizedEngine
 
+        self.flush(vorder.relations())
         sig = vorder.signature()
         key = (sig, tuple(features), backend)
         entry = self._cofactor_cache.get(key)
-        if (
-            entry is not None
-            and not refresh
-            and entry.version == self.version  # backstop vs invalidation bugs
-        ):
+        if entry is not None and not refresh and self._entry_current(entry):
             return entry.cofactors
         cof = FactorizedEngine(
             self, vorder, list(features), backend=backend
@@ -816,13 +1096,15 @@ class Store:
         reduce_fds: bool = False,
     ):
         """Cached categorical cofactors over the factorized join — the
-        categorical twin of :meth:`cofactors`.  The cache key includes the
-        categorical signature (which attributes are declared categorical, in
-        order), so continuous and categorical entries over the same join
-        never alias, and ``append`` maintains both kinds incrementally.
-        Cold computes and delta folds both run the fused multi-output plan
-        — exactly one engine traversal each, audited by ``cat_passes`` /
-        ``cat_node_visits`` in :meth:`cache_info`.
+        categorical twin of :meth:`cofactors` (wrapper around
+        :meth:`sufficient_stats`; ``cont`` already includes the label).
+        The cache key includes the categorical signature (which attributes
+        are declared categorical, in order), so continuous and categorical
+        entries over the same join never alias, and ``append`` maintains
+        both kinds incrementally.  Cold computes and delta folds both run
+        the fused multi-output plan — exactly one engine traversal each,
+        audited by ``cat_passes`` / ``cat_node_visits`` in
+        :meth:`cache_info`.
 
         ``reduce_fds=True`` applies the FD reduction of ``cat`` under the
         store's catalog: functionally-determined attributes are dropped
@@ -835,16 +1117,13 @@ class Store:
         Returns a ``repro.core.categorical.CatCofactors``; do not mutate."""
         from .categorical import cat_cofactors_factorized
 
+        self.flush(vorder.relations())
         sig = vorder.signature()
         red = self.fd_reduction(cat) if reduce_fds else None
         fdsig = red.signature() if red is not None else None
         key = (sig, tuple(cont), tuple(cat), backend, fdsig)
         entry = self._cat_cache.get(key)
-        if (
-            entry is not None
-            and not refresh
-            and entry.version == self.version
-        ):
+        if entry is not None and not refresh and self._entry_current(entry):
             return entry.cofactors
         run_cat = list(red.kept) if red is not None else list(cat)
         stats: Dict[str, int] = {}
@@ -863,11 +1142,12 @@ class Store:
 
     def cache_info(self) -> Dict[str, int]:
         vc = self.view_cache
-        return {
+        info = {
             "entries": len(self._cofactor_cache),
             "cat_entries": len(self._cat_cache),
             "fds": len(self._fds),
             "version": self.version,
+            "maintenance": self.maintenance,
             "passes": self.passes,
             "node_visits": self.node_visits,
             "cat_passes": self.cat_passes,
@@ -878,12 +1158,8 @@ class Store:
             "view_cache_misses": vc.misses,
             "view_cache_evictions": vc.evictions,
         }
-
-    def _restamp(self) -> None:
-        for cache in (self._cofactor_cache, self._cat_cache):
-            for entry in cache.values():
-                entry.version = self.version
-        self.view_cache.restamp(self.version)
+        info.update(self._delta_log.info())
+        return info
 
     def _invalidate(self, name: str) -> None:
         for cache in (self._cofactor_cache, self._cat_cache):
@@ -1097,6 +1373,48 @@ class StoreSnapshot:
         return plan
 
     # -- aggregate entry points ------------------------------------------------
+    def flush(self, names: Optional[Sequence[str]] = None) -> Dict[str, int]:
+        """Lazy-maintenance read barrier, snapshot flavour: forwards to the
+        parent while current (a drain folds caches without changing any
+        data, so currency survives it); a no-op with zero stats on a stale
+        snapshot, whose frozen catalog needs no cache maintenance."""
+        if self.is_current:
+            return self._store.flush(names)
+        return dict(_NO_DRAIN)
+
+    def sufficient_stats(
+        self,
+        vorder: "VariableOrder",
+        features: Sequence[str],
+        label: Optional[str] = None,
+        categorical: Sequence[str] = (),
+        backend: Optional[str] = None,
+        refresh: bool = False,
+        reduce_fds: bool = False,
+    ):
+        """See :meth:`Store.sufficient_stats` — the same routing against
+        this frozen view (cached via the parent while current, computed
+        over the frozen catalog once stale)."""
+        cont = [f for f in features if f not in set(categorical)]
+        if label is not None:
+            cont.append(label)
+        cat = list(categorical)
+        if cat:
+            return self.cat_cofactors(
+                vorder,
+                cont,
+                cat,
+                backend=backend if backend is not None else "numpy",
+                refresh=refresh,
+                reduce_fds=reduce_fds,
+            )
+        return self.cofactors(
+            vorder,
+            cont,
+            backend=backend if backend is not None else "jax",
+            refresh=refresh,
+        )
+
     def cofactors(
         self,
         vorder: "VariableOrder",

@@ -24,14 +24,20 @@ Keying.  A view is identified by :class:`ViewKey`:
   ``degree``      the monomial degree the view was evaluated at (a cached
                   degree-2 view serves degree-0/1 requests by trimming).
 
-Validity.  Entries are stamped with the store version and restamped by
-every mutation that keeps them valid (the same backstop protocol as the
-store's cofactor caches).  ``Store.append`` does **not** blanket-
-invalidate: entries whose subtree misses the appended relation survive
-untouched, and entries on the appended relation's root path are folded in
-place with a delta view (union commutativity, Prop. 4.1) — see
-``Store._maintain_view_cache``.  ``put`` invalidates exactly the entries
-whose subtree covers the replaced relation.
+Validity.  Entries are stamped with the store version they were built (or
+last folded) at, and the owning store wires its per-relation watermark map
+into ``watermarks`` — an entry is valid iff its stamp is >= the watermark
+of every relation its subtree covers.  That distinguishes three states:
+*valid* (no covered relation mutated since the stamp), *stale but
+foldable* (a covered relation has pending appended rows — the store's
+drain folds the entry with a delta view, union commutativity Prop. 4.1,
+and restamps it; see ``Store._maintain_view_cache``), and *invalid*
+(``put`` replaced a covered relation — those entries are dropped
+outright).  ``Store.append`` therefore does **not** blanket-invalidate,
+and under lazy maintenance does not touch this cache at all; a
+watermark-violating entry found by ``get`` is dropped on sight as the
+backstop against drain-rule bugs.  Without a ``watermarks`` map the cache
+falls back to exact version equality (standalone use in tests).
 
 Eviction.  The cache is bytes-accounted (device arrays report ``nbytes``
 without transfer) with LRU eviction; ``Store.cache_info()`` surfaces
@@ -116,18 +122,29 @@ class ViewCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        #: per-relation watermark map, aliased to the owning store's
+        #: ``_rel_versions`` — when set, validity is the watermark rule
+        #: (see module docstring) instead of exact version equality.
+        self.watermarks: Optional[Dict[str, int]] = None
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    def _valid(self, entry: _Entry, version: int) -> bool:
+        wm = self.watermarks
+        if wm is None:
+            return entry.version == version
+        return all(entry.version >= wm.get(r, 0) for r in entry.relations)
+
     def get(self, key: ViewKey, version: int):
         """The view under ``key`` valid at store ``version``, else None.
-        A version-mismatched entry is dropped on sight (backstop against
-        invalidation-rule bugs, as in the store's cofactor caches)."""
+        An entry failing the validity rule is dropped on sight (backstop
+        against invalidation-rule bugs, as in the store's cofactor
+        caches)."""
         entry = self._entries.get(key)
         if entry is None:
             return None
-        if entry.version != version:
+        if not self._valid(entry, version):
             self.discard(key)
             return None
         self._entries.move_to_end(key)
@@ -163,11 +180,19 @@ class ViewCache:
             self.bytes -= old.nbytes
             self.evictions += 1
 
-    def replace(self, key: ViewKey, view, nbytes: Optional[int] = None) -> None:
+    def replace(
+        self,
+        key: ViewKey,
+        view,
+        nbytes: Optional[int] = None,
+        version: Optional[int] = None,
+    ) -> None:
         """Swap the view of an existing entry in place (delta fold),
-        keeping its relations; no-op if absent.  The entry counts as
-        freshly used (moved to the LRU tail), and growth re-runs eviction
-        so folds cannot creep past the byte budget."""
+        keeping its relations; no-op if absent.  ``version`` (if given)
+        restamps the entry — the fold brought it up to date with the
+        covered relations' watermarks.  The entry counts as freshly used
+        (moved to the LRU tail), and growth re-runs eviction so folds
+        cannot creep past the byte budget."""
         entry = self._entries.get(key)
         if entry is None:
             return
@@ -176,6 +201,8 @@ class ViewCache:
         self.bytes += nbytes - entry.nbytes
         entry.view = view
         entry.nbytes = nbytes
+        if version is not None:
+            entry.version = version
         self._entries.move_to_end(key)
         self._evict()
 

@@ -17,20 +17,34 @@ batch.  This layer shares it across **concurrent tenants**: requests
    post-processing (closed-form solve for train, SSE quadratic form for
    score),
 4. applies queued ``append`` writes and publishes a fresh
-   :class:`repro.core.store.StoreSnapshot` for the next cycle.
+   :class:`repro.core.store.StoreSnapshot` for the next cycle,
+5. optionally folds the store's pending-delta log during the idle window
+   (``flush_policy``), so the next cycle's readers find warm caches.
+
+Streaming ingest: under the store's default lazy maintenance, step 4 is
+O(delta) per write — appends push onto the pending-delta log and return,
+bounding write latency regardless of cache population.  The folding work
+moves to step 5 (``flush_policy="idle"``, the default: fold when no reads
+remain queued; ``"always"``: fold every cycle; ``"never"``: leave folding
+to the next reader's engine-construction barrier) and is charged to the
+tenants whose writes queued the deltas.
 
 Isolation: every read in a cycle runs against the cycle's frozen snapshot
 — the store's copy-on-write mutation discipline means a write landing
 between (or during) cycles can never change what an admitted reader
 observes.  Reads admitted in the same cycle as a write therefore see the
 pre-write catalog; the write is visible from the next cycle on (snapshot
-isolation with writes serialized between read windows).
+isolation with writes serialized between read windows).  Draining pending
+deltas folds caches without changing data, so it never invalidates the
+published snapshot.
 
 Accounting: shared traversals are attributed back to tenants with an exact
 integer fair-split (first-come remainder), so per-tenant ``passes`` /
 ``node_visits`` / view-cache counters in :meth:`FactorizedService.cache_info`
 **sum to the store-level totals exactly** — the audit the multi-tenant
-story is held to in tests.
+story is held to in tests.  Reads are charged the *store-level* counter
+deltas of their group (traversal plus any read-barrier fold their engine
+triggered); idle-window folds are charged to the writers.
 """
 
 from __future__ import annotations
@@ -192,7 +206,11 @@ class FactorizedService:
     gives every request its own engine and traversal — the fair baseline
     ``benchmarks/bench_serve.py`` measures the coalescing win against.
     ``window`` caps how many queued reads one drain cycle admits
-    (``None`` = drain everything queued at entry).
+    (``None`` = drain everything queued at entry).  ``flush_policy``
+    schedules the store's pending-delta folds: ``"idle"`` (default) folds
+    at the end of a cycle that leaves no reads queued, ``"always"`` folds
+    every cycle that applied writes, ``"never"`` leaves folding to the
+    read barrier of the next engine construction.
     """
 
     def __init__(
@@ -201,11 +219,15 @@ class FactorizedService:
         coalesce: bool = True,
         backend: str = "numpy",
         window: Optional[int] = None,
+        flush_policy: str = "idle",
     ) -> None:
+        if flush_policy not in ("idle", "always", "never"):
+            raise ValueError(f"unknown flush_policy {flush_policy!r}")
         self.store = store
         self.coalesce = coalesce
         self.backend = backend
         self.window = window
+        self.flush_policy = flush_policy
         self._snapshot: StoreSnapshot = store.snapshot()
         self._reads: Deque[_Read] = deque()
         self._writes: Deque[_Write] = deque()
@@ -213,6 +235,7 @@ class FactorizedService:
         self._seq = 0
         self._batches = 0  # coalesced traversals run
         self._coalesced_requests = 0  # reads that shared a traversal
+        self._writers_since_flush: List[str] = []  # fold-cost attribution
         self._lock = threading.Lock()
 
     # -- request submission ----------------------------------------------------
@@ -380,6 +403,11 @@ class FactorizedService:
                 done += 1
             if writes:
                 self._snapshot = self.store.snapshot()
+            if self._writers_since_flush and (
+                self.flush_policy == "always"
+                or (self.flush_policy == "idle" and not self._reads)
+            ):
+                self._flush_pending()
             return done
 
     def run(self) -> int:
@@ -389,12 +417,27 @@ class FactorizedService:
             total += self.drain()
         return total
 
+    def flush(self) -> Dict[str, int]:
+        """Fold the store's pending-delta log NOW (between drain cycles) —
+        the explicit idle-window pass.  Returns the store's drain stats;
+        fold cost is charged to the writers whose appends queued the
+        deltas."""
+        with self._lock:
+            return self._flush_pending()
+
     # -- internals -------------------------------------------------------------
     def _run_batch_group(self, batch: List[_Read]) -> int:
         parts = [
             BatchPart(rid=r.seq, features=r.features, queries=r.queries)
             for r in batch
         ]
+        # charge by store-level counter deltas, captured BEFORE engine
+        # construction: the engine's init is the lazy read barrier and may
+        # fold pending deltas, work that lands in store counters only.
+        store = self.store
+        vc = store.view_cache
+        before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
+        tenants = [r.tenant for r in batch]
         try:
             merged = merge_batches(parts)
             first = batch[0]
@@ -406,22 +449,14 @@ class FactorizedService:
                 backend=first.backend,
                 dtype=dtype,
             )
-            vc = self.store.view_cache
-            bytes_before = vc.bytes
             results = engine.run_batch(merged.queries)
             per_rid = scatter_results(merged, parts, results)
         except Exception as err:
+            self._charge_store_delta(tenants, before)
             for r in batch:
                 r.ticket._fail(err)
             return len(batch)
-        self._charge(
-            batch,
-            passes=engine.passes,
-            node_visits=engine.node_visits,
-            vc_hits=engine.vc_hits,
-            vc_misses=engine.vc_misses,
-            vc_bytes=vc.bytes - bytes_before,
-        )
+        self._charge_store_delta(tenants, before)
         if len(batch) > 1:
             self._batches += 1
             self._coalesced_requests += len(batch)
@@ -435,14 +470,49 @@ class FactorizedService:
                 r.ticket._fail(err)
         return len(batch)
 
-    def _charge(self, batch: List[_Read], **counters: int) -> None:
+    def _flush_pending(self) -> Dict[str, int]:
+        """Fold pending deltas, charging the fold across the writers that
+        queued them (all known tenants as fallback).  Lock-free — called
+        from inside :meth:`drain` which already holds the lock; the public
+        :meth:`flush` wraps it."""
+        store = self.store
+        flush = getattr(store, "flush", None)
+        if not callable(flush):
+            self._writers_since_flush.clear()
+            return {"relations": 0, "rows": 0, "appends": 0}
+        payers = list(self._writers_since_flush) or sorted(self._tenants)
+        vc = store.view_cache
+        before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
+        stats = flush()
+        if payers:
+            self._charge_store_delta(payers, before)
+        self._writers_since_flush.clear()
+        return stats
+
+    def _charge_store_delta(
+        self, tenants: List[str], before: Tuple[int, int, int, int, int]
+    ) -> None:
+        """Fair-split the store-level counter growth since ``before``
+        across ``tenants``."""
+        store = self.store
+        vc = store.view_cache
+        self._charge(
+            tenants,
+            passes=store.passes - before[0],
+            node_visits=store.node_visits - before[1],
+            vc_hits=vc.hits - before[2],
+            vc_misses=vc.misses - before[3],
+            vc_bytes=vc.bytes - before[4],
+        )
+
+    def _charge(self, tenants: List[str], **counters: int) -> None:
         """Attribute one shared traversal's counters across its riders —
         exact integer fair-split in admission order, so per-tenant sums
         equal the store-level deltas to the unit."""
-        k = len(batch)
+        k = len(tenants)
         for field, total in counters.items():
-            for r, share in zip(batch, _fair_split(int(total), k)):
-                st = self._stats(r.tenant)
+            for tenant, share in zip(tenants, _fair_split(int(total), k)):
+                st = self._stats(tenant)
                 setattr(st, field, getattr(st, field) + share)
 
     def _finish(self, r: _Read, blocks: Dict[str, AggregateBlock]):
@@ -496,6 +566,9 @@ class FactorizedService:
             w.ticket._fail(err)
         else:
             w.ticket._resolve(merged)
+            # lazy maintenance: this tenant's delta may now be pending —
+            # remember who to charge when the idle-window fold runs
+            self._writers_since_flush.append(w.tenant)
         st = self._stats(w.tenant)
         st.appends += 1
         # delta maintenance ran on the writer's behalf — attribute it whole

@@ -1,0 +1,145 @@
+"""Public-API consolidation: the ``StoreReads`` protocol, the
+``sufficient_stats`` entry point, and the ``RegressionConfig`` migration
+of ``linear_regression``'s legacy keyword flags.
+
+The shims are held to an identity standard: a legacy call must produce
+the SAME result object as the config-field spelling (not merely a close
+one), and each legacy keyword warns exactly once per process.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core.regression as regmod
+from repro.core import (
+    VERSIONS,
+    RegressionConfig,
+    Store,
+    StoreReads,
+    linear_regression,
+)
+from repro.data.synthetic import favorita_like, many_cat_schema
+
+CONT = ["x", "y"]
+
+
+# ---------------------------------------------------------------------------
+# StoreReads protocol
+# ---------------------------------------------------------------------------
+
+def test_store_and_snapshot_satisfy_store_reads():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=100, seed=1)
+    assert isinstance(b.store, StoreReads)
+    assert isinstance(b.store.snapshot(), StoreReads)
+
+
+def test_engine_accepts_snapshot_as_store_reads():
+    """The annotation change is real: the engine runs against either side
+    of the protocol and returns identical answers on identical data."""
+    from repro.core.factorize import FactorizedEngine
+
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=100, seed=2)
+    live = FactorizedEngine(b.store, b.vorder, CONT, backend="numpy")
+    snap = FactorizedEngine(
+        b.store.snapshot(), b.vorder, CONT, backend="numpy"
+    )
+    np.testing.assert_allclose(
+        live.cofactors().matrix(), snap.cofactors().matrix(), rtol=0, atol=0
+    )
+
+
+# ---------------------------------------------------------------------------
+# sufficient_stats: the consolidated read entry point
+# ---------------------------------------------------------------------------
+
+def test_sufficient_stats_routes_continuous():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=120, seed=3)
+    via = b.store.sufficient_stats(b.vorder, ["x"], "y", backend="numpy")
+    direct = b.store.cofactors(b.vorder, ["x", "y"], backend="numpy")
+    assert via is direct  # same cache entry, not merely equal
+
+
+def test_sufficient_stats_routes_categorical():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=120, seed=4)
+    via = b.store.sufficient_stats(
+        b.vorder, ["x", "c0"], "y", categorical=["c0"]
+    )
+    direct = b.store.cat_cofactors(b.vorder, ["x", "y"], ["c0"])
+    assert via is direct
+
+
+def test_sufficient_stats_on_snapshot():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=120, seed=5)
+    snap = b.store.snapshot()
+    out = snap.sufficient_stats(b.vorder, ["x"], "y", backend="numpy")
+    ref = b.store.sufficient_stats(b.vorder, ["x"], "y", backend="numpy")
+    np.testing.assert_allclose(out.matrix(), ref.matrix(), rtol=1e-12,
+                               atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# linear_regression legacy-keyword shims
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def fresh_warnings():
+    regmod._LEGACY_WARNED.clear()
+    yield
+    regmod._LEGACY_WARNED.clear()
+
+
+def _theta(bundle, **kw):
+    return linear_regression(
+        bundle.store, bundle.vorder, bundle.features, bundle.label, **kw
+    ).theta
+
+
+def test_legacy_backend_kwarg_identity(fresh_warnings):
+    b = favorita_like(n_dates=12, n_stores=4, n_items=6)
+    cfg = VERSIONS["closed"]
+    with pytest.warns(DeprecationWarning, match="backend"):
+        legacy = _theta(b, config=cfg, backend="numpy")
+    modern = _theta(b, config=dataclasses.replace(cfg, backend="numpy"))
+    np.testing.assert_allclose(legacy, modern, rtol=0, atol=0)
+
+
+def test_legacy_use_cache_and_fds_identity(fresh_warnings):
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=150, seed=6)
+    b.store.infer_fds()
+    cfg = dataclasses.replace(VERSIONS["closed"], backend="numpy")
+    with pytest.warns(DeprecationWarning):
+        legacy = linear_regression(
+            b.store, b.vorder, ["x", "c0"], "y",
+            config=cfg, categorical=["c0"], use_cache=True, use_fds=False,
+        )
+    modern = linear_regression(
+        b.store, b.vorder, ["x", "c0"], "y",
+        config=dataclasses.replace(
+            cfg, categorical=("c0",), use_cache=True, use_fds=False
+        ),
+    )
+    np.testing.assert_allclose(legacy.theta, modern.theta, rtol=0, atol=0)
+    assert legacy.names == modern.names
+
+
+def test_legacy_kwargs_warn_once_per_process(fresh_warnings):
+    b = favorita_like(n_dates=12, n_stores=4, n_items=6)
+    cfg = VERSIONS["closed"]
+    with pytest.warns(DeprecationWarning, match="backend"):
+        _theta(b, config=cfg, backend="numpy")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second warning would raise
+        _theta(b, config=cfg, backend="numpy")
+    # a DIFFERENT legacy kwarg still gets its own (single) warning
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        _theta(b, config=cfg, backend="numpy", use_kernel=False)
+
+
+def test_config_fields_cover_all_legacy_flags():
+    cfg = RegressionConfig(name="t", factorized=True, solver="closed_form")
+    for field in ("backend", "use_kernel", "use_cache", "categorical",
+                  "use_fds"):
+        assert hasattr(cfg, field)

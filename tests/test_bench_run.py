@@ -100,6 +100,11 @@ def test_serve_suite_registered():
     assert "serve" in run_mod.suite_names()
 
 
+def test_ingest_suite_registered():
+    """bench_ingest must ride in the default sweep (smoke + nightly gate)."""
+    assert "ingest" in run_mod.suite_names()
+
+
 # ---------------------------------------------------------------------------
 # benchmarks.compare — the nightly regression detector
 # ---------------------------------------------------------------------------
@@ -155,6 +160,29 @@ def test_compare_tolerates_noise_within_threshold(tmp_path):
     _write_artifact(str(tmp_path / "new"), summary, {"a": noisy})
     assert (
         compare_dirs(str(tmp_path / "base"), str(tmp_path / "new"), 0.5) == 0
+    )
+
+
+def test_compare_gates_staleness_smaller_better(tmp_path, capsys):
+    """``staleness`` fields are smaller-better: growth past the threshold
+    is a regression, shrinkage never is."""
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    base = [{"cached_queries": 4, "staleness": 0.2}]
+    worse = [{"cached_queries": 4, "staleness": 0.5}]  # 2.5x > 1.5x
+    better = [{"cached_queries": 4, "staleness": 0.05}]
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    _write_artifact(str(tmp_path / "worse"), summary, {"a": worse})
+    _write_artifact(str(tmp_path / "better"), summary, {"a": better})
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "worse"), 0.5)
+        == 1
+    )
+    assert "REGRESSION" in capsys.readouterr().out
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "better"), 0.5)
+        == 0
     )
 
 

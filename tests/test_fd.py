@@ -370,8 +370,11 @@ def test_put_reverifies_fds(bundle):
 def test_poisoned_delta_invalidates_instead_of_corrupting(bundle, monkeypatch):
     """If a delta fold raises mid-loop, no cache may be left half-updated:
     entries covering the appended relation are invalidated, the catalog is
-    unchanged, and the next lookups recompute coherently."""
+    unchanged, and the next lookups recompute coherently.  Fold-on-write is
+    the eager mode's job — the lazy drain's twin guarantee is covered in
+    test_ingest.py."""
     store, vorder = bundle.store, bundle.vorder
+    store.maintenance = "eager"  # fold on the write path, as pre-lazy
     cols = ["x", "y"]
     store.cofactors(vorder, cols, backend="numpy")
     store.cat_cofactors(vorder, cols, ["c0"], backend="numpy")

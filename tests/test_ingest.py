@@ -1,0 +1,383 @@
+"""Streaming ingest: the pending-delta log behind lazy maintenance.
+
+The contract this PR is held to:
+
+* **O(delta) writes** — ``Store.append`` under the default
+  ``maintenance="lazy"`` touches no view-cache or cofactor entry: zero
+  engine passes and zero node visits on the write path, counter-audited,
+  independent of how many queries are warm.
+* **Lazy ≡ eager** — any interleaving of appends, reads, puts and FD
+  churn produces the same cached answers under lazy and eager
+  maintenance, and both equal an uncached recompute at 1e-12.
+* **Bounded staleness** — pending rows never exceed the compaction
+  threshold; drains fold the whole stack in one pass; a drain that
+  raises invalidates rather than half-updates.
+* **Snapshot currency** — a snapshot taken with deltas pending reads the
+  already-published rows; the later drain (which bumps no version) does
+  not invalidate it.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core.categorical as catmod
+from repro.core.categorical import cat_cofactors_factorized
+from repro.core.relation import Relation
+from repro.core.store import Store
+from repro.data.synthetic import many_cat_schema, random_acyclic_schema
+from repro.serve import FactorizedService
+
+CONT = ["x", "y"]
+
+
+def _delta_for(rel: Relation, rng, n_rows: int, grow: bool = False) -> Relation:
+    keys = {}
+    for i, (a, col) in enumerate(rel.keys.items()):
+        dom = int(rel.domains[a])
+        ids = rng.integers(0, dom, n_rows).astype(np.int32)
+        if grow and i == 0 and n_rows:
+            ids[0] = dom  # one id past the current dictionary
+        keys[a] = ids
+    values = {a: rng.normal(0, 2.0, n_rows) for a in rel.values}
+    return Relation.from_columns("delta", keys, values)
+
+
+def _clone(store: Store, **kwargs) -> Store:
+    return Store([store.get(n) for n in store.names()], **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# O(delta) write path: counter-audited, independent of cache population
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_warm", [0, 1, 3])
+def test_append_write_path_zero_visits(n_warm):
+    """The write path folds nothing no matter how many queries are warm —
+    the latency-regression guard for bounded-latency ingest."""
+    b = many_cat_schema(n_cat=3, domain=8, n_rows=300, seed=7)
+    cat = [f"c{i}" for i in range(3)]
+    for k in range(n_warm):  # population level: k distinct cached queries
+        b.store.cat_cofactors(b.vorder, CONT, cat[: k + 1])
+    if n_warm:
+        b.store.cofactors(b.vorder, CONT, backend="numpy")
+    vc = b.store.view_cache
+    b.store.reset_counters()
+    hits, misses = vc.hits, vc.misses
+
+    rng = np.random.default_rng(1)
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 40))
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 25))
+
+    assert b.store.passes == 0 and b.store.node_visits == 0
+    assert b.store.cat_passes == 0 and b.store.cat_node_visits == 0
+    assert (vc.hits, vc.misses) == (hits, misses)  # cache never probed
+    info = b.store.cache_info()
+    assert info["maintenance"] == "lazy"
+    assert info["pending_relations"] == 1
+    assert info["pending_rows"] == 65 and info["pending_appends"] == 2
+
+
+def test_maintenance_mode_validated():
+    with pytest.raises(ValueError, match="maintenance"):
+        Store(maintenance="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# Drain mechanics: stacked deltas, one pass, idempotent flush
+# ---------------------------------------------------------------------------
+
+def test_stacked_appends_drain_in_one_pass():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=250, seed=8)
+    cat = ["c0", "c1"]
+    warm = b.store.cat_cofactors(b.vorder, CONT, cat)
+    rng = np.random.default_rng(2)
+    for n in (10, 20, 15):
+        b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, n))
+
+    stats = b.store.flush()
+    assert stats == {"relations": 1, "rows": 45, "appends": 3}
+    info = b.store.cache_info()
+    assert info["pending_rows"] == 0 and info["pending_relations"] == 0
+    assert info["drains"] == 1 and info["drained_rows"] == 45
+
+    assert b.store.flush() == {"relations": 0, "rows": 0, "appends": 0}
+    assert b.store.cache_info()["drains"] == 1  # no-op flush, no drain
+
+    out = b.store.cat_cofactors(b.vorder, CONT, cat)  # folded, not rebuilt
+    ref = cat_cofactors_factorized(
+        b.store, b.vorder, CONT, cat, use_view_cache=False
+    )
+    scale = max(1.0, float(np.abs(ref.matrix()).max()))
+    np.testing.assert_allclose(
+        out.matrix(), ref.matrix(), rtol=1e-12, atol=1e-12 * scale
+    )
+    assert out.matrix().shape == warm.matrix().shape
+
+
+def test_flush_names_scope_hint():
+    """A flush scoped to relations with nothing pending is a no-op; any
+    overlap drains the WHOLE log (partial drains would half-fold entries
+    spanning several pending relations)."""
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=200, seed=9)
+    rng = np.random.default_rng(3)
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 12))
+    # small dim delta: stays under the 0.5 compaction ratio of 8 base rows
+    b.store.append("Dim0", _delta_for(b.store.get("Dim0"), rng, 3))
+
+    assert b.store.flush(["Dim1"])["rows"] == 0  # disjoint: no drain
+    assert b.store.cache_info()["pending_rows"] == 15
+    assert b.store.flush(["Dim0"]) == {
+        "relations": 2, "rows": 15, "appends": 2,
+    }
+    assert b.store.cache_info()["pending_rows"] == 0
+
+
+def test_zero_row_append_keeps_entries_current():
+    """An empty delta bumps the version but moves no watermark: warm
+    entries stay valid and the next read recomputes nothing."""
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=200, seed=10)
+    b.store.cat_cofactors(b.vorder, CONT, ["c0"])
+    rel = b.store.get("Fact")
+    empty = _delta_for(rel, np.random.default_rng(4), 0)
+    v = b.store.version
+    b.store.append("Fact", empty)
+    assert b.store.version == v + 1
+    assert not b.store.cache_info()["pending_appends"]  # nothing logged
+    before = b.store.cat_passes
+    b.store.cat_cofactors(b.vorder, CONT, ["c0"])
+    assert b.store.cat_passes == before  # served from the entry
+
+
+def test_compaction_bounds_pending_rows():
+    """Past the absolute threshold the log is compacted — covering
+    entries invalidated, pending cleared — so retrain staleness (and the
+    drain debt) is bounded; the next read recomputes correctly."""
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=200, seed=11)
+    store = _clone(b.store, compact_rows=30)
+    store.cat_cofactors(b.vorder, CONT, ["c0"])
+    rng = np.random.default_rng(5)
+    store.append("Fact", _delta_for(store.get("Fact"), rng, 20))
+    assert store.cache_info()["compactions"] == 0
+    store.append("Fact", _delta_for(store.get("Fact"), rng, 20))  # 40 > 30
+    info = store.cache_info()
+    assert info["compactions"] == 1 and info["pending_rows"] == 0
+    out = store.cat_cofactors(b.vorder, CONT, ["c0"])
+    ref = cat_cofactors_factorized(
+        store, b.vorder, CONT, ["c0"], use_view_cache=False
+    )
+    np.testing.assert_allclose(out.matrix(), ref.matrix(), rtol=1e-12,
+                               atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Lazy ≡ eager under random interleavings (deterministic property)
+# ---------------------------------------------------------------------------
+
+def _assert_modes_agree(lazy, eager, vorder, cont, cat):
+    a = lazy.cat_cofactors(vorder, cont, cat)  # read barrier drains
+    c = eager.cat_cofactors(vorder, cont, cat)
+    fresh = cat_cofactors_factorized(
+        lazy, vorder, cont, cat, use_view_cache=False
+    )
+    scale = max(1.0, float(np.abs(fresh.matrix()).max()))
+    tol = dict(rtol=1e-12, atol=1e-12 * scale)
+    np.testing.assert_allclose(a.matrix(), fresh.matrix(), **tol)
+    np.testing.assert_allclose(c.matrix(), fresh.matrix(), **tol)
+
+
+def _apply_everywhere(stores, op: int, rng) -> None:
+    """One mutation applied identically to every store (data states are
+    always equal across maintenance modes — only cache states differ)."""
+    lead = stores[0]
+    names = lead.names()
+    name = names[op % len(names)]
+    rel = lead.get(name)
+    kind = (op // len(names)) % 3
+    if kind == 0:  # append (occasionally with unseen ids)
+        delta = _delta_for(rel, rng, int(rng.integers(1, 8)),
+                           grow=bool(op % 2))
+        for s in stores:
+            s.append(name, delta)
+    elif kind == 1:  # put: replace with a perturbed copy
+        values = {
+            a: c + rng.normal(0, 0.1, len(c)) for a, c in rel.values.items()
+        }
+        put = Relation(rel.name, dict(rel.keys), values, dict(rel.domains))
+        for s in stores:
+            s.put(put)
+    else:  # FD churn
+        drop = None
+        for s in stores:
+            s.infer_fds()
+            fds = s.fds()
+            if drop is None and fds:
+                drop = fds[int(rng.integers(0, len(fds)))]
+        if drop is not None:
+            for s in stores:
+                s.drop_fd(drop.lhs, drop.rhs)
+
+
+def test_lazy_equals_eager_interleavings_deterministic():
+    for seed in range(5):
+        b = random_acyclic_schema(seed, n_branches=(seed % 3) + 1)
+        lazy = b.store  # default maintenance
+        assert lazy.maintenance == "lazy"
+        eager = _clone(lazy, maintenance="eager")
+        cat = ["k0"] + [f"k{i + 1}" for i in range(len(b.features) // 2)]
+        cont = b.features + [b.label]
+        rng = np.random.default_rng(seed)
+        _assert_modes_agree(lazy, eager, b.vorder, cont, cat)
+        for op in range(5):
+            _apply_everywhere([lazy, eager], int(rng.integers(0, 30)), rng)
+            _assert_modes_agree(lazy, eager, b.vorder, cont, cat)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot currency across pending deltas and drains
+# ---------------------------------------------------------------------------
+
+def test_snapshot_with_pending_deltas_reads_published_rows():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=200, seed=12)
+    rng = np.random.default_rng(6)
+    b.store.cat_cofactors(b.vorder, CONT, ["c0"])
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 30))
+
+    snap = b.store.snapshot()  # taken with 30 rows pending
+    assert snap.is_current
+    assert b.store.cache_info()["pending_rows"] == 30
+    ref = cat_cofactors_factorized(
+        _clone(b.store), b.vorder, CONT, ["c0"], use_view_cache=False
+    )
+    # the snapshot read's barrier drains the live log; the drain bumps no
+    # version, so the snapshot stays current through its own read
+    out = snap.cat_cofactors(b.vorder, CONT, ["c0"])
+    np.testing.assert_allclose(out.matrix(), ref.matrix(), rtol=1e-12,
+                               atol=1e-9)
+    assert b.store.cache_info()["pending_rows"] == 0
+    assert snap.is_current
+    again = snap.cat_cofactors(b.vorder, CONT, ["c0"])
+    scale = max(1.0, float(np.abs(ref.matrix()).max()))
+    np.testing.assert_allclose(
+        again.matrix(), ref.matrix(), rtol=1e-12, atol=1e-12 * scale
+    )
+
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 5))
+    assert not snap.is_current  # a real mutation does retire it
+    assert snap.flush() == {"relations": 0, "rows": 0, "appends": 0}
+
+
+def test_snapshot_flush_forwards_while_current():
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=150, seed=13)
+    b.store.append(
+        "Fact", _delta_for(b.store.get("Fact"), np.random.default_rng(7), 9)
+    )
+    snap = b.store.snapshot()
+    assert snap.flush()["rows"] == 9  # forwarded to the live store
+    assert b.store.cache_info()["pending_rows"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Drain exception safety (the lazy twin of the poisoned-delta test)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_drain_invalidates_instead_of_corrupting(monkeypatch):
+    """A fold that raises at DRAIN time (the append already published the
+    rows) must invalidate every covering entry and clear the log — the
+    reader sees the error, the next read recomputes coherently."""
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=250, seed=14)
+    b.store.cofactors(b.vorder, CONT, backend="numpy")
+    b.store.cat_cofactors(b.vorder, CONT, ["c0"])
+    rng = np.random.default_rng(8)
+    b.store.append("Fact", _delta_for(b.store.get("Fact"), rng, 15))
+    rows_after = b.store.get("Fact").num_rows
+
+    def boom(*a, **k):
+        raise RuntimeError("poisoned drain")
+
+    # the plain cofactor fold mutates its entry BEFORE the categorical
+    # fold raises — exactly the half-updated hazard
+    monkeypatch.setattr(catmod, "cat_cofactors_factorized", boom)
+    with pytest.raises(RuntimeError, match="poisoned drain"):
+        b.store.flush()
+    monkeypatch.undo()
+
+    assert b.store.get("Fact").num_rows == rows_after  # rows stay published
+    info = b.store.cache_info()
+    assert info["entries"] == 0 and info["cat_entries"] == 0
+    assert info["pending_rows"] == 0  # log cleared, not wedged
+    out = b.store.cat_cofactors(b.vorder, CONT, ["c0"])
+    ref = cat_cofactors_factorized(
+        b.store, b.vorder, CONT, ["c0"], use_view_cache=False
+    )
+    np.testing.assert_allclose(out.matrix(), ref.matrix(), rtol=1e-12,
+                               atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Service: idle-window folding between drain cycles
+# ---------------------------------------------------------------------------
+
+def _svc_schema(seed=20):
+    b = many_cat_schema(n_cat=2, domain=8, n_rows=200, seed=seed)
+    return b
+
+
+def test_service_flush_policy_validated():
+    b = _svc_schema()
+    with pytest.raises(ValueError, match="flush_policy"):
+        FactorizedService(b.store, flush_policy="eventually")
+
+
+def test_service_idle_policy_folds_after_writes():
+    """Default policy: a cycle that ends with no queued reads folds the
+    pending writes, so the next read starts warm with nothing pending."""
+    b = _svc_schema(21)
+    svc = FactorizedService(b.store)
+    rng = np.random.default_rng(9)
+    svc.cofactors("a", b.vorder, CONT)
+    svc.drain()
+    svc.append("w", "Fact", _delta_for(b.store.get("Fact"), rng, 12))
+    svc.drain()  # write lands, queue empty afterwards -> idle fold
+    assert b.store.cache_info()["pending_rows"] == 0
+    b.store.reset_counters()
+    svc.cofactors("a", b.vorder, CONT)
+    svc.drain()
+    assert b.store.node_visits == 0  # idle fold kept the entry warm
+
+
+def test_service_never_policy_defers_until_explicit_flush():
+    b = _svc_schema(22)
+    svc = FactorizedService(b.store, flush_policy="never")
+    rng = np.random.default_rng(10)
+    svc.append("w", "Fact", _delta_for(b.store.get("Fact"), rng, 8))
+    svc.drain()
+    assert b.store.cache_info()["pending_rows"] == 8
+    svc.flush()  # the explicit idle-window pass
+    assert b.store.cache_info()["pending_rows"] == 0
+
+
+def test_service_counters_stay_exact_across_flush_policies():
+    """Per-tenant shares still sum to store totals when drain work happens
+    inside service-triggered folds (charged to the tenants that wrote)."""
+    for policy in ("idle", "always", "never"):
+        b = _svc_schema(23)
+        svc = FactorizedService(b.store, flush_policy=policy)
+        rng = np.random.default_rng(11)
+        svc.cofactors("a", b.vorder, CONT)
+        svc.train("c", b.vorder, ["x"], "y")
+        svc.drain()
+        svc.append("w", "Fact", _delta_for(b.store.get("Fact"), rng, 10))
+        svc.cofactors("b", b.vorder, CONT)
+        svc.run()
+        if policy == "never":
+            svc.flush()
+        info = svc.cache_info()
+        tenants = info["tenants"].values()
+        vc = b.store.view_cache
+        assert sum(t["passes"] for t in tenants) == info["passes"]
+        assert (
+            sum(t["node_visits"] for t in tenants) == info["node_visits"]
+        )
+        assert sum(t["vc_hits"] for t in tenants) == vc.hits
+        assert sum(t["vc_misses"] for t in tenants) == vc.misses
+        assert b.store.cache_info()["pending_rows"] == 0

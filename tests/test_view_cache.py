@@ -136,10 +136,10 @@ def _bushy_star(n_dims: int = 3, domain: int = 8, fact_rows: int = 400,
 
 
 def test_append_folds_root_path_only():
-    """After an append, a warm batch still reports zero visits (the
-    maintenance folded every affected entry), and the maintenance itself
-    visited only the appended relation's root path — the dimension
-    subtrees' views were served from the cache, not re-descended."""
+    """After an append + flush, a warm batch still reports zero visits
+    (the drain folded every affected entry), and the fold itself visited
+    only the appended relation's root path — the dimension subtrees'
+    views were served from the cache, not re-descended."""
     store, vorder = _bushy_star()
     cat = ["c0", "c1", "c2"]
     cat_cofactors_factorized(store, vorder, CONT, cat)
@@ -150,6 +150,8 @@ def test_append_folds_root_path_only():
     delta = _delta_for(store.get("Fact"), rng, 40)
     store.reset_counters()
     store.append("Fact", delta)
+    assert store.node_visits == 0  # lazy write path: O(delta), no folds
+    store.flush()
     append_visits = store.node_visits
     # only nodes covering Fact (root path + Fact leaf) are re-evaluated;
     # every w_i/Dim_i subtree view is a cache hit during the delta folds
