@@ -21,6 +21,11 @@ disjoint — the sweep reports both regimes; ``coalesce_speedup`` (the
 high-overlap row) is the field gated by ``benchmarks/compare.py`` in
 nightly (target ≥2x).  Correctness is asserted before timing: coalesced
 ≡ per-request results at 1e-12 (summation-order differences only).
+
+A second sweep (``run_fault_sweep``) measures degraded-mode throughput
+under seeded node-visit faults via ``FaultInjector`` — its
+``throughput_retention`` field (rps at fault rate r / rps at rate 0) is
+the nightly-gated robustness metric.
 """
 
 from __future__ import annotations
@@ -30,7 +35,7 @@ import numpy as np
 from repro.core.store import Store
 from repro.core.relation import Relation
 from repro.core.variable_order import VariableOrder
-from repro.serve import FactorizedService
+from repro.serve import FactorizedService, FaultInjector, RetryPolicy
 
 from .common import emit, stopwatch
 
@@ -198,6 +203,105 @@ def run_overlap_sweep(
     return rows
 
 
+def run_fault_sweep(
+    n_dims: int = 8,
+    domain: int = 24,
+    fact_rows: int = 20_000,
+    dim_rows: int = 12_000,
+    n_requests: int = 96,
+    n_subsets: int = 16,
+    window: int = 8,
+    n_tenants: int = 8,
+    zipf_s: float = 1.1,
+    rates: tuple = (0.0, 0.05, 0.2),
+    seed: int = 29,
+) -> list:
+    """Degraded-mode throughput under a seeded per-node-visit fault
+    hazard (:class:`repro.serve.faults.FaultInjector`).
+
+    The same Zipfian schedule is served at each fault rate through a
+    coalesced service with a retry policy; faults poison merged
+    traversals, so the service pays bisection + retry work to keep
+    serving.  Correctness is asserted before timing counts: every ticket
+    resolves (no wedges), and every SUCCESSFUL result is identical (at
+    1e-12) to the zero-fault run's.  The nonzero-rate rows carry
+    ``throughput_retention`` = rps / zero-fault rps — the nightly-gated
+    bigger-is-better field (a robustness-code regression that makes fault
+    recovery dramatically more expensive drops it)."""
+    rels, vorder = _star(n_dims, domain, fact_rows, dim_rows, seed)
+    pool = [f"w{i}" for i in range(n_dims)] + ["x"]
+    schedule = _schedule(pool, 6, n_subsets, n_requests, zipf_s, seed)
+    retry = RetryPolicy(max_attempts=6, backoff=1e-4, max_backoff=1e-3)
+
+    rows, base_rps, base_results = [], None, None
+    for rate in rates:
+        inj = FaultInjector(Store(rels), seed=seed)
+        svc = FactorizedService(
+            inj, coalesce=True, backend="numpy", window=window, retry=retry
+        )
+        tickets = []
+        inj.arm_random_node_faults(rate, transient=True)
+        with stopwatch() as sw:
+            for i, feats in enumerate(schedule):
+                tickets.append(
+                    svc.cofactors(
+                        f"tenant{i % n_tenants}", vorder, list(feats) + ["y"]
+                    )
+                )
+            svc.run()
+        results, failures = [], 0
+        for t in tickets:
+            assert t.done, "wedged ticket in fault sweep"
+            try:
+                results.append(t.result().matrix())
+            except Exception:
+                results.append(None)
+                failures += 1
+        if base_results is None:
+            base_results = results
+            assert failures == 0, "zero-fault arm must serve everything"
+        else:
+            for got, want in zip(results, base_results):
+                if got is None:
+                    continue
+                scale = max(1.0, float(np.abs(want).max()))
+                np.testing.assert_allclose(
+                    got, want, rtol=0, atol=1e-12 * scale
+                )
+        rps = n_requests / max(sw.seconds, 1e-9)
+        if base_rps is None:
+            base_rps = rps
+        info = svc.cache_info()
+        row = {
+            "fault_rate": rate,
+            "n_requests": n_requests,
+            "window": window,
+            "fact_rows": fact_rows,
+            "elapsed_s": sw.seconds,
+            "rps": rps,
+            "success_rate": (n_requests - failures) / n_requests,
+            "retries": info["retries"],
+            "quarantined": info["quarantined"],
+            "faults_fired": len(inj.fired),
+            "node_visits": info["node_visits"],
+        }
+        if rate > 0:
+            row["throughput_retention"] = rps / max(base_rps, 1e-9)
+        rows.append(row)
+        print(
+            f"-- fault_rate={rate}: {rps:.0f} req/s, "
+            f"{row['success_rate'] * 100:.1f}% served, "
+            f"{row['retries']} retries, {row['faults_fired']} faults"
+            + (
+                f", retention {row['throughput_retention']:.2f}x"
+                if rate > 0
+                else " (baseline)"
+            )
+        )
+    emit("serve_faults", rows)
+    return rows
+
+
 def main(smoke: bool = False) -> None:
     if smoke:
         # small but not toy: the coalescing win must stay measurable above
@@ -206,8 +310,13 @@ def main(smoke: bool = False) -> None:
             n_dims=6, domain=12, fact_rows=6_000, dim_rows=4_000,
             n_requests=64, n_subsets=12, window=16,
         )
+        run_fault_sweep(
+            n_dims=6, domain=12, fact_rows=4_000, dim_rows=3_000,
+            n_requests=48, n_subsets=10, window=8,
+        )
     else:
         run_overlap_sweep()
+        run_fault_sweep()
 
 
 if __name__ == "__main__":

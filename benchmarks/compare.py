@@ -17,7 +17,12 @@ Compares two benchmark artifact directories (each as produced by
 * fields ending in ``staleness`` (pending retrain staleness from
   ``bench_ingest`` — smaller-is-better, dimensionless) regress when
   ``new > base * (1 + threshold) + 0.01`` — the small absolute floor
-  keeps near-zero staleness values from tripping on jitter.
+  keeps near-zero staleness values from tripping on jitter;
+* fields ending in ``_retention`` (degraded-mode throughput retention
+  from the ``bench_serve`` fault sweep — bigger-is-better, a ratio in
+  (0, 1]) regress when the new value drops below ``base / (1 +
+  threshold)`` with an absolute guard of 0.01 against jitter on
+  near-equal ratios.
 
 Exit code 1 on any regression, 0 otherwise.  A missing/empty baseline
 directory exits 0 with a notice — the first nightly run has nothing to
@@ -56,6 +61,10 @@ def _is_speedup_field(name: str) -> bool:
 
 def _is_staleness_field(name: str) -> bool:
     return name.endswith("staleness")
+
+
+def _is_retention_field(name: str) -> bool:
+    return name.endswith("_retention")
 
 
 def _load_json(path: str):
@@ -115,6 +124,7 @@ def compare_suite_rows(
                     _is_time_field(field)
                     or _is_speedup_field(field)
                     or _is_staleness_field(field)
+                    or _is_retention_field(field)
                 ):
                     # a gated field the suite no longer emits (renamed or
                     # removed since the baseline) — report, don't crash
@@ -133,6 +143,11 @@ def compare_suite_rows(
                 if nv < bv / (1.0 + threshold) and bv - nv > 1e-9:
                     out.append(
                         f"{name}[{label}].{field}: {bv:.3g}x -> {nv:.3g}x"
+                    )
+            elif _is_retention_field(field):
+                if nv < bv / (1.0 + threshold) and bv - nv > 0.01:
+                    out.append(
+                        f"{name}[{label}].{field}: {bv:.3g} -> {nv:.3g}"
                     )
             elif _is_staleness_field(field):
                 if nv > bv * (1.0 + threshold) + 0.01:

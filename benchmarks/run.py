@@ -14,7 +14,9 @@ One module per paper table/figure (+ substrate benches):
   view_cache_cold_warm_append  — persistent view cache: warm batches +
                                  retrain-after-append vs invalidate-all
   serve_coalescing             — multi-tenant service: coalesced vs
-                                 private traversals under Zipfian overlap
+                                 private traversals under Zipfian overlap,
+                                 plus degraded-mode throughput retention
+                                 under injected faults (fault-rate sweep)
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)

@@ -121,6 +121,11 @@ class DeltaLog:
     def total_rows(self) -> int:
         return sum(log.rows for log in self._logs.values())
 
+    def debt(self) -> Tuple[int, int]:
+        """(pending relations, pending rows) — the cheap should-I-run
+        probe the background fold thread polls between idle windows."""
+        return len(self._logs), self.total_rows()
+
     def total_appends(self) -> int:
         return sum(log.appends for log in self._logs.values())
 

@@ -807,7 +807,7 @@ class FactorizedEngine:
             view = self._vc.get(self._vc_key(node, keep, d), version)
             if view is not None:
                 self.vc_hits += 1
-                self._vc.hits += 1
+                self._vc.note_hit()
                 return self._trim_view(view, degree)
         # cross-dtype reuse: a float64 view of the same node (any backend)
         # serves a lower-precision request by casting its blocks — an O(view)
@@ -826,10 +826,10 @@ class FactorizedEngine:
                     view = self._vc.get(key64, version)
                     if view is not None:
                         self.vc_hits += 1
-                        self._vc.hits += 1
+                        self._vc.note_hit()
                         return self._cast_view(self._trim_view(view, degree))
         self.vc_misses += 1
-        self._vc.misses += 1
+        self._vc.note_miss()
         return None
 
     def _cast_view(self, view: _View) -> _View:

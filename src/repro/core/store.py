@@ -89,7 +89,17 @@ tests no longer depend on call order.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+import functools
+import threading
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -114,6 +124,23 @@ __all__ = ["Store", "StoreSnapshot"]
 _NO_DRAIN = {"relations": 0, "rows": 0, "appends": 0}
 
 
+def _locked(method: Callable) -> Callable:
+    """Serialize a catalog-mutating method under ``self._mutate_lock``.
+
+    The lock is re-entrant because mutators nest (``cofactors`` →
+    ``flush`` → ``_fold_relation``; ``append`` in eager mode folds
+    inline).  Readers off the snapshot path stay lock-free: catalog maps
+    are replaced copy-on-write, so a concurrent reader sees either the
+    old or the new map, never a half-mutated one."""
+
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        with self._mutate_lock:
+            return method(self, *args, **kwargs)
+
+    return wrapper
+
+
 @dataclasses.dataclass
 class _CacheEntry:
     cofactors: object  # Cofactors | CatCofactors — unscaled; treat as immutable
@@ -135,37 +162,42 @@ class _AttrDict:
     so captured references stay valid.
     """
 
-    __slots__ = ("values", "_sorted_vals", "_sorted_ids")
+    __slots__ = ("values", "_sorted_vals", "_sorted_ids", "_mu")
 
     def __init__(self) -> None:
         self.values = np.zeros(0, dtype=np.float64)
         self._sorted_vals = np.zeros(0, dtype=np.float64)  # values, sorted
         self._sorted_ids = np.zeros(0, dtype=np.int64)  # ids aligned above
+        # a drain-thread snapshot encoding an override column races an
+        # appender extending the same attribute's dictionary — growth must
+        # be atomic so issued ids never alias two values
+        self._mu = threading.Lock()
 
     def extend_encode(self, col: np.ndarray) -> np.ndarray:
         col = np.asarray(col, dtype=np.float64)
         if not len(col):
             return np.zeros(0, dtype=np.int32)
-        uniq, inv = np.unique(col, return_inverse=True)
-        if len(self._sorted_vals):
-            pos = np.searchsorted(self._sorted_vals, uniq)
-            pos_c = np.minimum(pos, len(self._sorted_vals) - 1)
-            known = self._sorted_vals[pos_c] == uniq
-            uid = np.where(known, self._sorted_ids[pos_c], -1)
-        else:
-            uid = np.full(len(uniq), -1, dtype=np.int64)
-        fresh_mask = uid < 0
-        if fresh_mask.any():
-            fresh = uniq[fresh_mask]  # sorted (np.unique), first-seen here
-            uid[fresh_mask] = len(self.values) + np.arange(len(fresh))
-            self.values = np.concatenate([self.values, fresh])
-            merged_vals = np.concatenate([self._sorted_vals, fresh])
-            order = np.argsort(merged_vals, kind="stable")
-            self._sorted_vals = merged_vals[order]
-            self._sorted_ids = np.concatenate(
-                [self._sorted_ids, uid[fresh_mask]]
-            )[order]
-        return uid[inv].astype(np.int32)
+        with self._mu:
+            uniq, inv = np.unique(col, return_inverse=True)
+            if len(self._sorted_vals):
+                pos = np.searchsorted(self._sorted_vals, uniq)
+                pos_c = np.minimum(pos, len(self._sorted_vals) - 1)
+                known = self._sorted_vals[pos_c] == uniq
+                uid = np.where(known, self._sorted_ids[pos_c], -1)
+            else:
+                uid = np.full(len(uniq), -1, dtype=np.int64)
+            fresh_mask = uid < 0
+            if fresh_mask.any():
+                fresh = uniq[fresh_mask]  # sorted (unique), first-seen here
+                uid[fresh_mask] = len(self.values) + np.arange(len(fresh))
+                self.values = np.concatenate([self.values, fresh])
+                merged_vals = np.concatenate([self._sorted_vals, fresh])
+                order = np.argsort(merged_vals, kind="stable")
+                self._sorted_vals = merged_vals[order]
+                self._sorted_ids = np.concatenate(
+                    [self._sorted_ids, uid[fresh_mask]]
+                )[order]
+            return uid[inv].astype(np.int32)
 
 
 class Store:
@@ -205,6 +237,15 @@ class Store:
         # per-relation pending-append log (lazy maintenance write path)
         self._delta_log = DeltaLog()
         self._draining = False  # re-entrancy guard for flush()
+        # serializes catalog mutation (put/append/fold/FD-catalog changes)
+        # across threads — see the ``_locked`` decorator.  Snapshot readers
+        # never take it.
+        self._mutate_lock = threading.RLock()
+        # fault-injection seam: when set, called as hook("fold", name) at
+        # the top of every delta fold so tests can poison maintenance
+        # deterministically (repro.serve.faults.FaultInjector).  None in
+        # production.
+        self.fault_hook: Optional[Callable[[str, str], None]] = None
         # persistent cross-batch per-node view cache (see module docstring);
         # view_cache_bytes=0 disables it (the cold-baseline escape hatch).
         self.view_cache = ViewCache(max_bytes=view_cache_bytes)
@@ -248,7 +289,10 @@ class Store:
     def _dict_for(self, attr: str) -> _AttrDict:
         d = self._dicts.get(attr)
         if d is None:
-            d = self._dicts[attr] = _AttrDict()
+            with self._mutate_lock:  # two threads must not race the create
+                d = self._dicts.get(attr)
+                if d is None:
+                    d = self._dicts[attr] = _AttrDict()
         return d
 
     def attr_encoding(
@@ -305,6 +349,7 @@ class Store:
         self.view_cache.evictions = 0
 
     # -- catalog -------------------------------------------------------------
+    @_locked
     def put(self, rel: Relation) -> None:
         """Insert or replace a relation.  Replacement is an arbitrary
         mutation, so cache entries covering the name are invalidated, and
@@ -415,6 +460,7 @@ class Store:
         return max(doms)
 
     # -- functional dependencies ----------------------------------------------
+    @_locked
     def add_fd(self, lhs: str, rhs: str) -> FunctionalDependency:
         """Declare the functional dependency ``lhs → rhs`` between two
         dictionary-encoded key attributes.  Verified against the data now
@@ -435,6 +481,7 @@ class Store:
         self._invalidate_fd_entries()
         return fd
 
+    @_locked
     def infer_fds(
         self, attrs: Optional[Sequence[str]] = None
     ) -> List[Tuple[str, str]]:
@@ -482,6 +529,7 @@ class Store:
     def fds(self) -> List[FunctionalDependency]:
         return list(self._fds.values())
 
+    @_locked
     def drop_fd(self, lhs: str, rhs: str) -> None:
         if (lhs, rhs) in self._fds:
             self._fds = {
@@ -557,6 +605,7 @@ class Store:
             del self._cat_cache[key]
 
     # -- incremental updates ---------------------------------------------------
+    @_locked
     def append(self, name: str, delta: Relation) -> Relation:
         """Append the rows of ``delta`` to relation ``name`` (batch update).
 
@@ -681,6 +730,7 @@ class Store:
         return merged
 
     # -- lazy maintenance: pending-delta log + drain ---------------------------
+    @_locked
     def flush(self, names: Optional[Sequence[str]] = None) -> Dict[str, int]:
         """Fold every pending append into the caches NOW (the lazy-
         maintenance read barrier, also callable as an explicit idle-window
@@ -806,6 +856,9 @@ class Store:
         ``frozen`` overrides other relations to their pre-append prefixes
         (the drain's telescoping guard; empty for eager single-relation
         folds).  Callers own exception handling and the override memo."""
+        hook = self.fault_hook
+        if hook is not None:
+            hook("fold", name)
         overrides = {name: delta, **frozen}
         # persistent view cache first: entries on the appended relation's
         # root path are folded with delta views (their sibling subtrees'
@@ -1052,6 +1105,7 @@ class Store:
         rv = self._rel_versions
         return all(entry.version >= rv.get(r, 0) for r in entry.relations)
 
+    @_locked
     def cofactors(
         self,
         vorder: "VariableOrder",
@@ -1086,6 +1140,7 @@ class Store:
         )
         return cof
 
+    @_locked
     def cat_cofactors(
         self,
         vorder: "VariableOrder",

@@ -44,10 +44,20 @@ without transfer) with LRU eviction; ``Store.cache_info()`` surfaces
 ``view_cache_bytes`` / ``view_cache_evictions`` so benchmarks can audit
 the budget.  This module is deliberately free of engine imports — views
 are opaque objects with ``keys``/``c``/``l``/``q`` array attributes.
+
+Thread safety.  Every structural operation (get / put / replace /
+discard / invalidate / eviction) and the hit/miss counters
+(:meth:`ViewCache.note_hit` / :meth:`note_miss`) run under one internal
+re-entrant lock, so the OrderedDict and the byte accounting stay
+consistent when a mutator thread invalidates entries while a drain
+thread publishes new ones — the concurrent-service scenario
+(``repro.serve.runtime``).  Views themselves are immutable once stored,
+so returning one outside the lock is safe.
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Dict, FrozenSet, Iterable, List, NamedTuple, Optional, Tuple
 
@@ -116,6 +126,8 @@ class ViewCache:
         self, max_bytes: int = DEFAULT_MAX_BYTES, enabled: bool = True
     ) -> None:
         self._entries: "OrderedDict[ViewKey, _Entry]" = OrderedDict()
+        # re-entrant: put() discards subsumed entries while already locked
+        self._mu = threading.RLock()
         self.max_bytes = int(max_bytes)
         self.enabled = enabled and self.max_bytes > 0
         self.bytes = 0
@@ -141,14 +153,15 @@ class ViewCache:
         An entry failing the validity rule is dropped on sight (backstop
         against invalidation-rule bugs, as in the store's cofactor
         caches)."""
-        entry = self._entries.get(key)
-        if entry is None:
-            return None
-        if not self._valid(entry, version):
-            self.discard(key)
-            return None
-        self._entries.move_to_end(key)
-        return entry.view
+        with self._mu:
+            entry = self._entries.get(key)
+            if entry is None:
+                return None
+            if not self._valid(entry, version):
+                self.discard(key)
+                return None
+            self._entries.move_to_end(key)
+            return entry.view
 
     def put(
         self,
@@ -162,23 +175,25 @@ class ViewCache:
             nbytes = view_nbytes(view)
         if nbytes > self.max_bytes:
             return  # single oversized view: never worth the whole budget
-        self.discard(key)
-        # a higher-degree view subsumes the lower-degree variants — drop
-        # them so the budget isn't spent twice on the same subtree
-        for d in range(key.degree):
-            self.discard(key._replace(degree=d))
-        self._entries[key] = _Entry(view, relations, version, nbytes)
-        self.bytes += nbytes
-        self._evict()
+        with self._mu:
+            self.discard(key)
+            # a higher-degree view subsumes the lower-degree variants —
+            # drop them so the budget isn't spent twice on the same subtree
+            for d in range(key.degree):
+                self.discard(key._replace(degree=d))
+            self._entries[key] = _Entry(view, relations, version, nbytes)
+            self.bytes += nbytes
+            self._evict()
 
     def _evict(self) -> None:
         """LRU-evict until the byte budget holds.  The most recent entry
         (tail) is never popped: ``popitem(last=False)`` takes the head and
         the loop stops once a single entry remains."""
-        while self.bytes > self.max_bytes and len(self._entries) > 1:
-            _, old = self._entries.popitem(last=False)
-            self.bytes -= old.nbytes
-            self.evictions += 1
+        with self._mu:
+            while self.bytes > self.max_bytes and len(self._entries) > 1:
+                _, old = self._entries.popitem(last=False)
+                self.bytes -= old.nbytes
+                self.evictions += 1
 
     def replace(
         self,
@@ -193,58 +208,86 @@ class ViewCache:
         covered relations' watermarks.  The entry counts as freshly used
         (moved to the LRU tail), and growth re-runs eviction so folds
         cannot creep past the byte budget."""
-        entry = self._entries.get(key)
-        if entry is None:
-            return
-        if nbytes is None:
-            nbytes = view_nbytes(view)
-        self.bytes += nbytes - entry.nbytes
-        entry.view = view
-        entry.nbytes = nbytes
-        if version is not None:
-            entry.version = version
-        self._entries.move_to_end(key)
-        self._evict()
+        with self._mu:
+            entry = self._entries.get(key)
+            if entry is None:
+                return
+            if nbytes is None:
+                nbytes = view_nbytes(view)
+            self.bytes += nbytes - entry.nbytes
+            entry.view = view
+            entry.nbytes = nbytes
+            if version is not None:
+                entry.version = version
+            self._entries.move_to_end(key)
+            self._evict()
 
     def discard(self, key: ViewKey) -> None:
-        entry = self._entries.pop(key, None)
-        if entry is not None:
-            self.bytes -= entry.nbytes
+        with self._mu:
+            entry = self._entries.pop(key, None)
+            if entry is not None:
+                self.bytes -= entry.nbytes
+
+    def note_hit(self) -> None:
+        """Engine-side probe accounting, made atomic for threaded serving
+        (a bare ``vc.hits += 1`` read-modify-write loses counts under
+        concurrent engines, and the counter audits demand exactness)."""
+        with self._mu:
+            self.hits += 1
+
+    def note_miss(self) -> None:
+        with self._mu:
+            self.misses += 1
 
     def items(self) -> List[Tuple[ViewKey, _Entry]]:
         """Snapshot of (key, entry) pairs — safe to mutate while iterating."""
-        return list(self._entries.items())
+        with self._mu:
+            return list(self._entries.items())
 
     def invalidate_relation(self, name: str) -> None:
         """Drop every entry whose subtree covers relation ``name`` (the
         ``put`` rule).  Entries over unrelated subtrees survive."""
-        for key in [
-            k for k, e in self._entries.items() if name in e.relations
-        ]:
-            self.discard(key)
+        with self._mu:
+            for key in [
+                k for k, e in self._entries.items() if name in e.relations
+            ]:
+                self.discard(key)
 
     def restamp(self, version: int, keys: Optional[Iterable[ViewKey]] = None):
         """Mark entries valid at ``version`` (after a mutation whose
         maintenance kept them correct)."""
-        if keys is None:
-            for entry in self._entries.values():
-                entry.version = version
-        else:
-            for key in keys:
-                entry = self._entries.get(key)
-                if entry is not None:
+        with self._mu:
+            if keys is None:
+                for entry in self._entries.values():
                     entry.version = version
+            else:
+                for key in keys:
+                    entry = self._entries.get(key)
+                    if entry is not None:
+                        entry.version = version
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.bytes = 0
+        with self._mu:
+            self._entries.clear()
+            self.bytes = 0
+
+    def evict_all(self) -> int:
+        """Evict every entry, counted as evictions — the fault-injection
+        harness's cache-pressure storm, and an operator pressure valve."""
+        with self._mu:
+            n = len(self._entries)
+            self._entries.clear()
+            self.bytes = 0
+            self.evictions += n
+            return n
 
     def info(self) -> Dict[str, int]:
-        return {
-            "entries": len(self._entries),
-            "bytes": self.bytes,
-            "max_bytes": self.max_bytes,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-        }
+        with self._mu:
+            return {
+                "entries": len(self._entries),
+                "bytes": self.bytes,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }

@@ -45,12 +45,38 @@ integer fair-split (first-come remainder), so per-tenant ``passes`` /
 story is held to in tests.  Reads are charged the *store-level* counter
 deltas of their group (traversal plus any read-barrier fold their engine
 triggered); idle-window folds are charged to the writers.
+
+Fault tolerance (see also ``repro.serve.runtime``):
+
+* **Threaded front-end** — :meth:`FactorizedService.start` spawns a drain
+  worker plus a low-priority background fold thread;
+  :meth:`FactorizedService.stop` resolves or fails every in-flight
+  ticket before returning.  Two locks split the scheduler: ``_lock``
+  guards the admission queues (held briefly by submitters and the
+  cycle's pop), ``_cycle_lock`` serializes whole drain cycles / flushes
+  / introspection (lock order: cycle before queue, never the reverse).
+* **Deadlines & backpressure** — requests carry optional deadlines
+  (expired ones fail with ``ServiceTimeout`` at admission to a cycle,
+  without touching the rest of their window); ``max_queue`` bounds
+  admission with ``block`` / ``reject`` / ``shed_oldest`` policies.
+* **Graceful degradation** — when a merged traversal raises, the window
+  is bisected until the poisoned request is isolated: it alone fails
+  (and is quarantined in ``cache_info()['quarantined']``), every other
+  rider re-runs and gets its answer.  With a ``RetryPolicy``, transient
+  faults requeue the lone request with a backoff stamp instead of
+  failing it.
+* **Fold failures** — an idle-window fold that raises is absorbed (the
+  store's drain exception safety already invalidated the covered
+  entries and cleared the logs); readers recompute from the merged
+  catalog, which mutates only at append time and is never corrupted by
+  a failed fold.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -70,6 +96,14 @@ from ..core.relation import Relation
 from ..core.scaling import compute_scale_factors, rescale_theta
 from ..core.store import Store, StoreSnapshot
 from ..core.variable_order import VariableOrder
+from .runtime import (
+    RetryPolicy,
+    RuntimeConfig,
+    ServiceOverloaded,
+    ServiceRuntime,
+    ServiceStopped,
+    ServiceTimeout,
+)
 
 __all__ = [
     "FactorizedService",
@@ -92,6 +126,8 @@ class TenantStats:
     requests: int = 0  # read requests served
     appends: int = 0  # writes applied
     batches: int = 0  # coalesced traversals this tenant rode in
+    failures: int = 0  # tickets failed (fault, deadline, shutdown, shed)
+    retries: int = 0  # transient-fault requeues under the retry policy
     passes: int = 0
     node_visits: int = 0
     vc_hits: int = 0
@@ -131,36 +167,68 @@ class ScoreResult:
 
 
 class Ticket:
-    """Handle for a queued request: resolved during the next drain cycle."""
+    """Handle for a queued request: resolved by a drain cycle.
 
-    __slots__ = ("_done", "_value", "_error")
+    ``result(timeout=None)`` semantics:
+
+    * resolved → return the value (or raise the recorded error);
+    * ``timeout`` given → wait up to that many seconds, then raise
+      :class:`~repro.serve.runtime.ServiceTimeout`;
+    * no timeout, service running threaded → wait until resolved (the
+      runtime's shutdown protocol guarantees resolution — no ticket is
+      ever wedged);
+    * no timeout, synchronous service → raise ``RuntimeError``
+      immediately (waiting would deadlock: nothing else will drain).
+    """
+
+    __slots__ = ("_done", "_value", "_error", "_event", "_blocking")
 
     def __init__(self) -> None:
         self._done = False
         self._value = None
         self._error: Optional[BaseException] = None
+        self._event = threading.Event()
+        self._blocking = False  # True once a runtime thread owns draining
 
     @property
     def done(self) -> bool:
         return self._done
 
-    def result(self):
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until resolved (or ``timeout`` elapses); True if done."""
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None):
         if not self._done:
-            raise RuntimeError(
-                "request not served yet — call FactorizedService.drain() "
-                "or run()"
-            )
+            if timeout is not None:
+                if not self._event.wait(timeout):
+                    raise ServiceTimeout(
+                        f"request not served within {timeout:g}s"
+                    )
+            elif self._blocking:
+                self._event.wait()
+            else:
+                raise RuntimeError(
+                    "request not served yet — call FactorizedService."
+                    "drain() or run()"
+                )
         if self._error is not None:
             raise self._error
         return self._value
 
     def _resolve(self, value) -> None:
+        if self._done:
+            return
         self._value = value
         self._done = True
+        self._event.set()
 
     def _fail(self, err: BaseException) -> None:
+        if self._done:
+            return
         self._error = err
         self._done = True
+        self._event.set()
 
 
 @dataclasses.dataclass
@@ -177,6 +245,9 @@ class _Read:
     theta: Optional[np.ndarray] = None
     ridge: float = 0.006
     dtype: Optional[object] = None
+    deadline: Optional[float] = None  # absolute time.monotonic()
+    not_before: float = 0.0  # retry backoff stamp (monotonic)
+    attempts: int = 0  # failed attempts so far
 
 
 @dataclasses.dataclass
@@ -211,6 +282,25 @@ class FactorizedService:
     at the end of a cycle that leaves no reads queued, ``"always"`` folds
     every cycle that applied writes, ``"never"`` leaves folding to the
     read barrier of the next engine construction.
+
+    Robustness knobs (all optional; defaults preserve the synchronous
+    PR 6/7 behavior):
+
+    ``max_queue`` bounds total queued requests; when full, admission
+    follows ``backpressure``: ``"block"`` waits for capacity (up to
+    ``admission_timeout`` seconds, then ``ServiceOverloaded``; ``None``
+    waits forever — only sensible with the threaded runtime),
+    ``"reject"`` raises ``ServiceOverloaded`` at submit, and
+    ``"shed_oldest"`` fails the oldest queued *read*'s ticket to make
+    room (queued writes are never shed — data loss is worse than
+    latency).  ``retry`` is a :class:`~repro.serve.runtime.RetryPolicy`
+    applied to transient read faults.  ``default_deadline`` (seconds)
+    applies to reads submitted without an explicit deadline.
+
+    ``start()`` / ``stop()`` attach the threaded runtime
+    (:class:`~repro.serve.runtime.ServiceRuntime`): a drain worker plus
+    a background fold thread; ``stop()`` resolves or fails every
+    in-flight ticket — no ticket is ever left unresolved.
     """
 
     def __init__(
@@ -220,14 +310,26 @@ class FactorizedService:
         backend: str = "numpy",
         window: Optional[int] = None,
         flush_policy: str = "idle",
+        max_queue: Optional[int] = None,
+        backpressure: str = "block",
+        admission_timeout: Optional[float] = 30.0,
+        retry: Optional[RetryPolicy] = None,
+        default_deadline: Optional[float] = None,
     ) -> None:
         if flush_policy not in ("idle", "always", "never"):
             raise ValueError(f"unknown flush_policy {flush_policy!r}")
+        if backpressure not in ("block", "reject", "shed_oldest"):
+            raise ValueError(f"unknown backpressure {backpressure!r}")
         self.store = store
         self.coalesce = coalesce
         self.backend = backend
         self.window = window
         self.flush_policy = flush_policy
+        self.max_queue = max_queue
+        self.backpressure = backpressure
+        self.admission_timeout = admission_timeout
+        self.retry = retry
+        self.default_deadline = default_deadline
         self._snapshot: StoreSnapshot = store.snapshot()
         self._reads: Deque[_Read] = deque()
         self._writes: Deque[_Write] = deque()
@@ -236,7 +338,24 @@ class FactorizedService:
         self._batches = 0  # coalesced traversals run
         self._coalesced_requests = 0  # reads that shared a traversal
         self._writers_since_flush: List[str] = []  # fold-cost attribution
+        # queue lock: admission queues + seq + runtime handle.  Held for
+        # O(1) critical sections only; condition variable for "block".
         self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        # cycle lock: serializes drain cycles, flushes, shutdown sweeps,
+        # and cache_info() snapshots.  Held across traversals.  Lock
+        # order is ALWAYS cycle -> queue.
+        self._cycle_lock = threading.RLock()
+        # leaf lock for per-tenant counter mutation: taken by drain-side
+        # charging AND submitter-side shed accounting; nothing else is
+        # ever acquired while holding it.
+        self._stats_lock = threading.RLock()
+        self._runtime: Optional[ServiceRuntime] = None
+        self._accepting = True
+        self._quarantined: Deque[Dict[str, object]] = deque(maxlen=64)
+        self._retries = 0  # transient-fault requeues (service-wide)
+        self._shed = 0  # tickets failed by shed_oldest backpressure
+        self._fold_failures = 0  # idle-window folds that raised
 
     # -- request submission ----------------------------------------------------
     def cofactors(
@@ -246,8 +365,12 @@ class FactorizedService:
         features: Sequence[str],
         backend: Optional[str] = None,
         dtype=None,
+        deadline: Optional[float] = None,
     ) -> Ticket:
-        """Queue an unscaled-cofactors request → ``Cofactors``."""
+        """Queue an unscaled-cofactors request → ``Cofactors``.
+        ``deadline`` (here and on every read submitter) is seconds from
+        now; a request still queued when it expires fails with
+        ``ServiceTimeout`` instead of running."""
         return self._submit_read(
             tenant,
             "cofactors",
@@ -255,6 +378,7 @@ class FactorizedService:
             tuple(features),
             (AggregateQuery("cof", (), 2),),
             backend,
+            deadline,
             dtype=dtype,
         )
 
@@ -266,6 +390,7 @@ class FactorizedService:
         queries: Sequence[AggregateQuery],
         backend: Optional[str] = None,
         dtype=None,
+        deadline: Optional[float] = None,
     ) -> Ticket:
         """Queue a raw aggregate batch → ``{name: AggregateBlock}``."""
         return self._submit_read(
@@ -275,6 +400,7 @@ class FactorizedService:
             tuple(features),
             tuple(queries),
             backend,
+            deadline,
             dtype=dtype,
         )
 
@@ -286,6 +412,7 @@ class FactorizedService:
         label: str,
         ridge: float = 0.006,
         backend: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> Ticket:
         """Queue a closed-form ridge train → ``TrainResult`` (semantics of
         ``linear_regression(..., VERSIONS['closed'], use_cache=True)``:
@@ -297,6 +424,7 @@ class FactorizedService:
             tuple(features) + (label,),
             (AggregateQuery("cof", (), 2),),
             backend,
+            deadline,
             label=label,
             ridge=ridge,
         )
@@ -309,6 +437,7 @@ class FactorizedService:
         label: str,
         theta: np.ndarray,
         backend: Optional[str] = None,
+        deadline: Optional[float] = None,
     ) -> Ticket:
         """Queue an SSE evaluation of ``theta`` (original units, as
         returned by :meth:`train`) → ``ScoreResult``."""
@@ -319,6 +448,7 @@ class FactorizedService:
             tuple(features) + (label,),
             (AggregateQuery("cof", (), 2),),
             backend,
+            deadline,
             label=label,
             theta=np.asarray(theta, dtype=np.float64),
         )
@@ -327,11 +457,14 @@ class FactorizedService:
         """Queue a row append, applied after the current read window →
         the merged ``Relation``.  Visible to reads from the next cycle."""
         with self._lock:
+            self._admit()
             ticket = Ticket()
+            ticket._blocking = self._runtime is not None
             self._writes.append(
                 _Write(tenant, name, delta, ticket, self._next_seq())
             )
-            return ticket
+        self._notify()
+        return ticket
 
     def _submit_read(
         self,
@@ -341,10 +474,18 @@ class FactorizedService:
         features: Tuple[str, ...],
         queries: Tuple[AggregateQuery, ...],
         backend: Optional[str],
+        deadline: Optional[float],
         **extra,
     ) -> Ticket:
+        if deadline is None:
+            deadline = self.default_deadline
+        abs_deadline = (
+            time.monotonic() + deadline if deadline is not None else None
+        )
         with self._lock:
+            self._admit()
             ticket = Ticket()
+            ticket._blocking = self._runtime is not None
             self._reads.append(
                 _Read(
                     tenant=tenant,
@@ -355,75 +496,237 @@ class FactorizedService:
                     backend=backend or self.backend,
                     ticket=ticket,
                     seq=self._next_seq(),
+                    deadline=abs_deadline,
                     **extra,
                 )
             )
-            return ticket
+        self._notify()
+        return ticket
+
+    def _admit(self) -> None:
+        """Admission control (``self._lock`` held): refuse after stop,
+        then apply the backpressure policy while the queue is full."""
+        if not self._accepting:
+            raise ServiceStopped(
+                "service stopped — not accepting new requests"
+            )
+        if self.max_queue is None:
+            return
+        start = time.monotonic()
+        while len(self._reads) + len(self._writes) >= self.max_queue:
+            if self.backpressure == "reject":
+                raise ServiceOverloaded(
+                    f"admission queue full ({self.max_queue})"
+                )
+            if self.backpressure == "shed_oldest":
+                if not self._reads:
+                    # only writes queued: never shed data — refuse instead
+                    raise ServiceOverloaded(
+                        f"admission queue full ({self.max_queue}) with "
+                        "writes only — refusing to shed"
+                    )
+                victim = self._reads.popleft()
+                victim.ticket._fail(
+                    ServiceOverloaded("shed under backpressure")
+                )
+                self._shed += 1
+                with self._stats_lock:
+                    self._stats(victim.tenant).failures += 1
+                continue
+            # "block": wait for a cycle to pop the queues
+            remaining = None
+            if self.admission_timeout is not None:
+                remaining = self.admission_timeout - (
+                    time.monotonic() - start
+                )
+                if remaining <= 0:
+                    raise ServiceOverloaded(
+                        "admission blocked longer than "
+                        f"{self.admission_timeout:g}s"
+                    )
+            self._not_full.wait(remaining)
+            if not self._accepting:
+                raise ServiceStopped(
+                    "service stopped — not accepting new requests"
+                )
+
+    def _notify(self) -> None:
+        rt = self._runtime
+        if rt is not None:
+            rt.notify()
 
     def _next_seq(self) -> int:
         self._seq += 1
         return self._seq
 
     def _stats(self, tenant: str) -> TenantStats:
-        st = self._tenants.get(tenant)
-        if st is None:
-            st = self._tenants[tenant] = TenantStats()
-        return st
+        with self._stats_lock:
+            st = self._tenants.get(tenant)
+            if st is None:
+                st = self._tenants[tenant] = TenantStats()
+            return st
 
     # -- drain cycle -----------------------------------------------------------
     def drain(self) -> int:
         """Serve one cycle: a window of queued reads against the current
         snapshot (coalesced per engine group), then all queued writes,
-        then publish a fresh snapshot.  Returns requests completed."""
+        then publish a fresh snapshot.  Returns requests completed.
+        Thread-safe: cycles are serialized, the queue lock is held only
+        while popping the window."""
+        with self._cycle_lock:
+            return self._drain_cycle()
+
+    def _drain_cycle(self) -> int:
+        now = time.monotonic()
+        expired: List[_Read] = []
+        reads: List[_Read] = []
         with self._lock:
             take = len(self._reads) if self.window is None else self.window
-            reads = [
-                self._reads.popleft()
-                for _ in range(min(take, len(self._reads)))
-            ]
+            deferred: List[_Read] = []
+            while self._reads and len(reads) < take:
+                r = self._reads.popleft()
+                if r.deadline is not None and now >= r.deadline:
+                    expired.append(r)
+                elif r.not_before > now:
+                    deferred.append(r)  # retry backoff not elapsed yet
+                else:
+                    reads.append(r)
+            # deferred retries keep their queue position, in order
+            for r in reversed(deferred):
+                self._reads.appendleft(r)
             writes = list(self._writes)
             self._writes.clear()
+            self._not_full.notify_all()
 
-            done = 0
-            # engine group = everything one traversal can legally share
-            groups: Dict[tuple, List[_Read]] = {}
-            for r in reads:
-                dt = np.dtype(r.dtype).name if r.dtype is not None else None
-                gkey = (r.vorder.signature(), r.backend, dt)
-                groups.setdefault(gkey, []).append(r)
-            for members in groups.values():
-                batches = (
-                    [members] if self.coalesce else [[r] for r in members]
-                )
-                for batch in batches:
-                    done += self._run_batch_group(batch)
+        done = 0
+        # an expired deadline fails ITS ticket only — the rest of the
+        # window runs untouched
+        for r in expired:
+            self._fail_read(
+                r,
+                ServiceTimeout(
+                    f"deadline expired before service (tenant {r.tenant!r})"
+                ),
+                quarantine=False,
+            )
+            done += 1
+        # engine group = everything one traversal can legally share
+        groups: Dict[tuple, List[_Read]] = {}
+        for r in reads:
+            dt = np.dtype(r.dtype).name if r.dtype is not None else None
+            gkey = (r.vorder.signature(), r.backend, dt)
+            groups.setdefault(gkey, []).append(r)
+        for members in groups.values():
+            batches = (
+                [members] if self.coalesce else [[r] for r in members]
+            )
+            for batch in batches:
+                done += self._run_batch_group(batch)
 
-            for w in writes:
-                self._apply_write(w)
-                done += 1
-            if writes:
-                self._snapshot = self.store.snapshot()
-            if self._writers_since_flush and (
-                self.flush_policy == "always"
-                or (self.flush_policy == "idle" and not self._reads)
-            ):
-                self._flush_pending()
-            return done
+        for w in writes:
+            self._apply_write(w)
+            done += 1
+        if writes:
+            self._snapshot = self.store.snapshot()
+        with self._lock:
+            idle = not self._reads
+        if self._writers_since_flush and (
+            self.flush_policy == "always"
+            or (self.flush_policy == "idle" and idle)
+        ):
+            self._flush_pending()
+        return done
+
+    def pending(self) -> int:
+        """Queued (unserved) requests right now — reads plus writes."""
+        with self._lock:
+            return len(self._reads) + len(self._writes)
+
+    def fold_debt_rows(self) -> int:
+        """Pending delta rows in the store's log — the background fold
+        thread's should-I-run probe (0 for stores without a log)."""
+        log = getattr(self.store, "_delta_log", None)
+        return log.debt()[1] if log is not None else 0
 
     def run(self) -> int:
-        """Drain until both queues are empty; returns requests completed."""
+        """Drain until both queues are empty; returns requests completed.
+        Waits out retry backoffs (a cycle that completes nothing while
+        work is queued means every queued read is a deferred retry)."""
         total = 0
-        while self._reads or self._writes:
-            total += self.drain()
+        while self.pending():
+            n = self.drain()
+            total += n
+            if n == 0:
+                time.sleep(0.001)
         return total
 
     def flush(self) -> Dict[str, int]:
         """Fold the store's pending-delta log NOW (between drain cycles) —
-        the explicit idle-window pass.  Returns the store's drain stats;
-        fold cost is charged to the writers whose appends queued the
-        deltas."""
-        with self._lock:
+        the explicit idle-window pass, also what the background fold
+        thread calls.  Returns the store's drain stats; fold cost is
+        charged to the writers whose appends queued the deltas."""
+        with self._cycle_lock:
             return self._flush_pending()
+
+    # -- threaded runtime ------------------------------------------------------
+    def start(
+        self, config: Optional[RuntimeConfig] = None
+    ) -> "FactorizedService":
+        """Attach the threaded runtime: a drain worker serving queued
+        requests as they arrive plus a low-priority fold thread servicing
+        delta-log debt in idle windows.  Returns ``self`` (chainable)."""
+        with self._lock:
+            if self._runtime is not None:
+                raise RuntimeError("service already started")
+            self._accepting = True
+            rt = self._runtime = ServiceRuntime(self, config)
+        rt.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = None):
+        """Clean shutdown.  Stops admission immediately; with
+        ``drain=True`` (default) serves what is already queued within
+        ``timeout`` seconds (runtime default 30).  ANY request still
+        queued afterwards — drain disabled, budget exhausted, or retries
+        still deferred — fails with ``ServiceStopped``.  Every ticket
+        ever admitted is resolved or failed when this returns.  Safe to
+        call on a never-started service (drains synchronously)."""
+        with self._lock:
+            self._accepting = False
+            rt = self._runtime
+            self._runtime = None
+            # unblock submitters parked on backpressure so they see the
+            # stop instead of waiting out their admission timeout
+            self._not_full.notify_all()
+        if rt is not None:
+            rt.stop(drain=drain, timeout=timeout)
+            for err in rt.errors:
+                self._quarantined.append(
+                    {"kind": "runtime", "error": repr(err)}
+                )
+        elif drain:
+            self.run()
+        self._fail_pending(
+            ServiceStopped("service stopped before the request was served")
+        )
+
+    @property
+    def running(self) -> bool:
+        return self._runtime is not None
+
+    def _fail_pending(self, err: Exception) -> None:
+        """Fail every queued request (shutdown sweep).  Takes the cycle
+        lock so it cannot race an in-flight cycle's window."""
+        with self._cycle_lock:
+            with self._lock:
+                items = list(self._reads) + list(self._writes)
+                self._reads.clear()
+                self._writes.clear()
+                self._not_full.notify_all()
+            for it in items:
+                it.ticket._fail(err)
+                with self._stats_lock:
+                    self._stats(it.tenant).failures += 1
 
     # -- internals -------------------------------------------------------------
     def _run_batch_group(self, batch: List[_Read]) -> int:
@@ -452,29 +755,86 @@ class FactorizedService:
             results = engine.run_batch(merged.queries)
             per_rid = scatter_results(merged, parts, results)
         except Exception as err:
+            # whatever partial work happened is still real store work —
+            # charge it to this sub-batch before degrading
             self._charge_store_delta(tenants, before)
-            for r in batch:
-                r.ticket._fail(err)
-            return len(batch)
+            if len(batch) > 1:
+                # graceful degradation: bisect the window to isolate the
+                # poisoned request — its co-riders must still get answers
+                mid = len(batch) // 2
+                return self._run_batch_group(
+                    batch[:mid]
+                ) + self._run_batch_group(batch[mid:])
+            return self._fail_or_retry(batch[0], err)
         self._charge_store_delta(tenants, before)
         if len(batch) > 1:
             self._batches += 1
             self._coalesced_requests += len(batch)
         for r in batch:
-            st = self._stats(r.tenant)
-            st.requests += 1
-            st.batches += 1
+            with self._stats_lock:
+                st = self._stats(r.tenant)
+                st.requests += 1
+                st.batches += 1
             try:
                 r.ticket._resolve(self._finish(r, per_rid[r.seq]))
             except Exception as err:
-                r.ticket._fail(err)
+                # per-request post-processing (solve/score) failed: the
+                # traversal was healthy, so no bisect/retry — just fail
+                self._fail_read(r, err, quarantine=False)
         return len(batch)
+
+    def _fail_or_retry(self, r: _Read, err: BaseException) -> int:
+        """A single isolated request failed.  Transient fault + retry
+        policy + deadline headroom → requeue with a backoff stamp (counts
+        as 0 completed); otherwise fail + quarantine the request."""
+        policy = self.retry
+        now = time.monotonic()
+        if (
+            policy is not None
+            and isinstance(err, policy.retry_on)
+            and r.attempts + 1 < policy.max_attempts
+            and (r.deadline is None or now < r.deadline)
+        ):
+            r.attempts += 1
+            r.not_before = now + policy.delay(r.attempts)
+            with self._stats_lock:
+                self._stats(r.tenant).retries += 1
+            self._retries += 1
+            with self._lock:
+                self._reads.append(r)
+            self._notify()
+            return 0
+        self._fail_read(r, err, quarantine=True)
+        return 1
+
+    def _fail_read(
+        self, r: _Read, err: BaseException, quarantine: bool
+    ) -> None:
+        r.ticket._fail(err)
+        with self._stats_lock:
+            self._stats(r.tenant).failures += 1
+        if quarantine:
+            self._quarantined.append(
+                {
+                    "kind": r.kind,
+                    "tenant": r.tenant,
+                    "seq": r.seq,
+                    "attempts": r.attempts + 1,
+                    "error": repr(err),
+                }
+            )
 
     def _flush_pending(self) -> Dict[str, int]:
         """Fold pending deltas, charging the fold across the writers that
-        queued them (all known tenants as fallback).  Lock-free — called
-        from inside :meth:`drain` which already holds the lock; the public
-        :meth:`flush` wraps it."""
+        queued them (all known tenants as fallback).  Runs under the
+        cycle lock — called from inside a cycle or the public
+        :meth:`flush`.
+
+        A fold that raises is absorbed here: the store's drain exception
+        safety has already invalidated the covered entries and cleared
+        the logs, so the catalog stays correct and the next reader
+        recomputes cold.  The failure is surfaced via
+        ``cache_info()['fold_failures']`` and the quarantine log."""
         store = self.store
         flush = getattr(store, "flush", None)
         if not callable(flush):
@@ -483,7 +843,14 @@ class FactorizedService:
         payers = list(self._writers_since_flush) or sorted(self._tenants)
         vc = store.view_cache
         before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
-        stats = flush()
+        try:
+            stats = flush()
+        except Exception as err:
+            self._fold_failures += 1
+            self._quarantined.append(
+                {"kind": "fold", "tenants": payers, "error": repr(err)}
+            )
+            stats = {"relations": 0, "rows": 0, "appends": 0}
         if payers:
             self._charge_store_delta(payers, before)
         self._writers_since_flush.clear()
@@ -510,10 +877,11 @@ class FactorizedService:
         exact integer fair-split in admission order, so per-tenant sums
         equal the store-level deltas to the unit."""
         k = len(tenants)
-        for field, total in counters.items():
-            for tenant, share in zip(tenants, _fair_split(int(total), k)):
-                st = self._stats(tenant)
-                setattr(st, field, getattr(st, field) + share)
+        with self._stats_lock:
+            for field, total in counters.items():
+                for tenant, share in zip(tenants, _fair_split(int(total), k)):
+                    st = self._stats(tenant)
+                    setattr(st, field, getattr(st, field) + share)
 
     def _finish(self, r: _Read, blocks: Dict[str, AggregateBlock]):
         if r.kind == "aggregates":
@@ -560,36 +928,58 @@ class FactorizedService:
         store = self.store
         vc = store.view_cache
         before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
+        failed = None
         try:
             merged = store.append(w.name, w.delta)
         except Exception as err:
+            failed = err
             w.ticket._fail(err)
         else:
             w.ticket._resolve(merged)
             # lazy maintenance: this tenant's delta may now be pending —
             # remember who to charge when the idle-window fold runs
             self._writers_since_flush.append(w.tenant)
-        st = self._stats(w.tenant)
-        st.appends += 1
-        # delta maintenance ran on the writer's behalf — attribute it whole
-        st.passes += store.passes - before[0]
-        st.node_visits += store.node_visits - before[1]
-        st.vc_hits += vc.hits - before[2]
-        st.vc_misses += vc.misses - before[3]
-        st.vc_bytes += vc.bytes - before[4]
+        with self._stats_lock:
+            st = self._stats(w.tenant)
+            st.appends += 1
+            if failed is not None:
+                st.failures += 1
+            # delta maintenance ran on the writer's behalf — attribute it
+            # whole
+            st.passes += store.passes - before[0]
+            st.node_visits += store.node_visits - before[1]
+            st.vc_hits += vc.hits - before[2]
+            st.vc_misses += vc.misses - before[3]
+            st.vc_bytes += vc.bytes - before[4]
 
     # -- introspection ---------------------------------------------------------
     def cache_info(self) -> Dict[str, object]:
         """Store-level ``cache_info`` plus the service's per-tenant shares
-        (``tenants[name]`` sums to the store totals) and coalescing
-        counters."""
-        info: Dict[str, object] = dict(self.store.cache_info())
-        info["tenants"] = {
-            name: dataclasses.asdict(st)
-            for name, st in sorted(self._tenants.items())
-        }
-        info["coalesced_batches"] = self._batches
-        info["coalesced_requests"] = self._coalesced_requests
-        info["queued_reads"] = len(self._reads)
-        info["queued_writes"] = len(self._writes)
-        return info
+        (``tenants[name]`` sums to the store totals), coalescing counters,
+        and robustness counters.  Snapshot-under-lock: taken between
+        cycles (cycle lock), so store totals and per-tenant shares are
+        mutually consistent even while worker threads run."""
+        with self._cycle_lock:
+            info: Dict[str, object] = dict(self.store.cache_info())
+            with self._stats_lock:
+                info["tenants"] = {
+                    name: dataclasses.asdict(st)
+                    for name, st in sorted(self._tenants.items())
+                }
+            info["coalesced_batches"] = self._batches
+            info["coalesced_requests"] = self._coalesced_requests
+            with self._lock:
+                info["queued_reads"] = len(self._reads)
+                info["queued_writes"] = len(self._writes)
+            info["running"] = self.running
+            info["retries"] = self._retries
+            info["shed"] = self._shed
+            info["fold_failures"] = self._fold_failures
+            info["quarantined"] = len(self._quarantined)
+            return info
+
+    def quarantined(self) -> List[Dict[str, object]]:
+        """Recent quarantine records (poisoned requests isolated by the
+        window bisection, failed folds, runtime errors) — newest last."""
+        with self._cycle_lock:
+            return list(self._quarantined)

@@ -186,6 +186,52 @@ def test_compare_gates_staleness_smaller_better(tmp_path, capsys):
     )
 
 
+def test_compare_gates_retention_bigger_better(tmp_path, capsys):
+    """``*_retention`` fields (bench_serve fault sweep) are bigger-better:
+    a drop past the threshold is a regression, growth never is, and the
+    0.01 absolute guard keeps near-equal ratios quiet."""
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": [{"suite": "a", "status": "ok", "seconds": 1.0}]}
+    base = [{"fault_rate": 1, "throughput_retention": 0.8}]
+    worse = [{"fault_rate": 1, "throughput_retention": 0.3}]  # < 0.8/1.5
+    better = [{"fault_rate": 1, "throughput_retention": 0.95}]
+    jitter = [{"fault_rate": 1, "throughput_retention": 0.795}]
+    for tag, rows in (
+        ("worse", worse), ("better", better), ("jitter", jitter)
+    ):
+        _write_artifact(str(tmp_path / tag), summary, {"a": rows})
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "worse"), 0.5)
+        == 1
+    )
+    assert "throughput_retention" in capsys.readouterr().out
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "better"), 0.5)
+        == 0
+    )
+    assert (
+        compare_dirs(str(tmp_path / "base"), str(tmp_path / "jitter"), 0.5)
+        == 0
+    )
+
+
+def test_compare_retention_missing_in_new_run_skipped(tmp_path, capsys):
+    """A gated retention field the new run no longer emits is
+    reported-and-skipped (shape drift), never a crash."""
+    from benchmarks.compare import compare_dirs
+
+    summary = {"suites": []}
+    base = [{"fault_rate": 1, "throughput_retention": 0.8}]
+    new = [{"fault_rate": 1}]
+    _write_artifact(str(tmp_path / "base"), summary, {"a": base})
+    _write_artifact(str(tmp_path / "new"), summary, {"a": new})
+    assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+    out = capsys.readouterr().out
+    assert "throughput_retention" in out and "skipped" in out
+
+
 def test_compare_detects_new_suite_failure(tmp_path, capsys):
     from benchmarks.compare import compare_dirs
 

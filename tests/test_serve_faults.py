@@ -1,0 +1,384 @@
+"""Fault-injection matrix: the service under deterministic seeded faults.
+
+Every test drives :class:`repro.serve.faults.FaultInjector` (wrapping the
+real store) through :class:`FactorizedService` and then holds the system
+to the same three invariants, whatever was injected:
+
+* **No wedged tickets** — every admitted ticket resolves or fails with a
+  typed error; ``run()`` / ``stop()`` always return.
+* **Post-fault state ≡ fresh store** — after the faults, reads against
+  the (possibly fault-scarred) store match a store rebuilt from scratch
+  with the same logical content at 1e-12, and no delta debt lingers.
+* **Exact accounting** — per-tenant counters still sum to store totals,
+  aborted traversals included (the injector forwards counter increments
+  before raising).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.factorize import cofactors_factorized
+from repro.core.relation import Relation
+from repro.core.store import Store
+from repro.core.variable_order import VariableOrder
+from repro.serve import (
+    FactorizedService,
+    FaultInjector,
+    InjectedFault,
+    RetryPolicy,
+    TransientInjectedFault,
+)
+
+DOMAIN = 8
+N_ROWS = 260
+
+
+def _schema(seed=0):
+    """Fact(c0, c1, x, y) ⋈ Dim0(c0, w0) ⋈ Dim1(c1, w1), bushy order."""
+    rng = np.random.default_rng(seed)
+    keys = {
+        f"c{i}": rng.integers(0, DOMAIN, N_ROWS).astype(np.int32)
+        for i in range(2)
+    }
+    x = rng.normal(0, 2.0, N_ROWS)
+    y = 0.5 * x + rng.normal(0, 0.5, N_ROWS)
+    rels = [
+        Relation.from_columns(
+            "Fact", keys, {"x": x, "y": y},
+            {f"c{i}": DOMAIN for i in range(2)},
+        )
+    ]
+    for i in range(2):
+        rels.append(
+            Relation.from_columns(
+                f"Dim{i}",
+                {f"c{i}": rng.integers(0, DOMAIN, 30).astype(np.int32)},
+                {f"w{i}": rng.normal(0, 1.0, 30)},
+                {f"c{i}": DOMAIN},
+            )
+        )
+    node = VariableOrder(
+        "x", [VariableOrder("y", [VariableOrder.leaf("Fact")])]
+    )
+    for i in reversed(range(2)):
+        w = VariableOrder(f"w{i}", [VariableOrder.leaf(f"Dim{i}")])
+        node = VariableOrder(f"c{i}", [w, node])
+    return rels, VariableOrder.intercept([node])
+
+
+def _delta(seed=50, n_rows=20):
+    rng = np.random.default_rng(seed)
+    return Relation.from_columns(
+        "delta",
+        {
+            f"c{i}": rng.integers(0, DOMAIN, n_rows).astype(np.int32)
+            for i in range(2)
+        },
+        {"x": rng.normal(0, 2.0, n_rows), "y": rng.normal(0, 1.0, n_rows)},
+    )
+
+
+def _fresh_matrix(seed, feats, appended=()):
+    """Oracle: the same logical content on a never-faulted store."""
+    rels, vorder = _schema(seed)
+    store = Store(rels)
+    for d in appended:
+        store.append("Fact", d)
+    store.flush()
+    return cofactors_factorized(
+        store, vorder, list(feats), backend="numpy", use_view_cache=False
+    ).matrix()
+
+
+def _tight(got, want):
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12 * scale)
+
+
+def _assert_consistent(svc, inj, seed, vorder, appended=()):
+    """Post-fault closure: state ≡ fresh store at 1e-12, zero delta debt,
+    per-tenant counters sum to store totals exactly."""
+    inj.disarm()
+    feats = ["w0", "w1", "x", "y"]
+    t = svc.cofactors("_audit", vorder, feats)
+    svc.run()
+    _tight(t.result().matrix(), _fresh_matrix(seed, feats, appended))
+    assert inj.store.cache_info()["pending_rows"] == 0
+    info = svc.cache_info()
+    tenants = info["tenants"].values()
+    for field in ("passes", "node_visits"):
+        assert sum(t[field] for t in tenants) == info[field]
+    assert sum(t["vc_hits"] for t in tenants) == info["view_cache_hits"]
+    assert sum(t["vc_misses"] for t in tenants) == info["view_cache_misses"]
+
+
+# ---------------------------------------------------------------------------
+# node-visit faults: bisection, retry, exhaustion
+# ---------------------------------------------------------------------------
+
+def test_transient_node_fault_bisected_out_of_coalesced_window():
+    """A transient fault poisons the MERGED traversal; the service
+    bisects, the halves re-run clean (one-shot trap), every ticket
+    resolves correctly, nothing is quarantined."""
+    rels, vorder = _schema(3)
+    inj = FaultInjector(Store(rels), seed=3)
+    svc = FactorizedService(inj, backend="numpy", window=4)
+    featsets = [["w0", "x", "y"], ["w1", "x", "y"], ["x", "y"], ["w0", "w1", "y"]]
+    tickets = [
+        svc.cofactors(f"t{i}", vorder, fs) for i, fs in enumerate(featsets)
+    ]
+    inj.fail_at_node_visit(3, transient=True)
+    svc.run()
+    assert [k for k, _ in inj.fired] == ["node_visit"]
+    for t, fs in zip(tickets, featsets):
+        _tight(t.result().matrix(), _fresh_matrix(3, fs))
+    info = svc.cache_info()
+    assert info["retries"] == 0 and info["quarantined"] == 0
+    _assert_consistent(svc, inj, 3, vorder)
+
+
+def test_poisoned_request_isolated_by_bisection():
+    """One genuinely bad request in a coalesced window fails ALONE: the
+    bisection narrows the failure to it, quarantines it, and serves the
+    three innocent co-riders correctly."""
+    rels, vorder = _schema(4)
+    inj = FaultInjector(Store(rels), seed=4)
+    svc = FactorizedService(inj, backend="numpy", window=4)
+    good_fs = [["w0", "x", "y"], ["x", "y"], ["w1", "y"]]
+    good = [svc.cofactors(f"g{i}", vorder, fs) for i, fs in enumerate(good_fs)]
+    bad = svc.cofactors("evil", vorder, ["no_such_feature", "x"])
+    svc.run()
+    with pytest.raises(Exception):
+        bad.result()
+    for t, fs in zip(good, good_fs):
+        _tight(t.result().matrix(), _fresh_matrix(4, fs))
+    info = svc.cache_info()
+    assert info["quarantined"] == 1
+    assert info["tenants"]["evil"]["failures"] == 1
+    (rec,) = svc.quarantined()
+    assert rec["tenant"] == "evil" and rec["kind"] == "cofactors"
+    _assert_consistent(svc, inj, 4, vorder)
+
+
+def test_retry_with_backoff_recovers_transient_fault():
+    rels, vorder = _schema(5)
+    inj = FaultInjector(Store(rels), seed=5)
+    svc = FactorizedService(
+        inj, backend="numpy",
+        retry=RetryPolicy(max_attempts=3, backoff=0.001),
+    )
+    t = svc.cofactors("a", vorder, ["w0", "x", "y"])
+    inj.fail_at_node_visit(2, transient=True)
+    svc.run()
+    _tight(t.result().matrix(), _fresh_matrix(5, ["w0", "x", "y"]))
+    info = svc.cache_info()
+    assert info["retries"] == 1
+    assert info["tenants"]["a"]["retries"] == 1
+    assert info["quarantined"] == 0  # recovered, not quarantined
+    _assert_consistent(svc, inj, 5, vorder)
+
+
+def test_retry_exhaustion_fails_ticket_without_wedging():
+    """Under a near-certain per-visit hazard every retry fails too: the
+    ticket fails typed after max_attempts, is quarantined with its
+    attempt count, and the service keeps serving."""
+    rels, vorder = _schema(6)
+    inj = FaultInjector(Store(rels), seed=6)
+    svc = FactorizedService(
+        inj, backend="numpy",
+        retry=RetryPolicy(max_attempts=2, backoff=0.0005),
+    )
+    inj.arm_random_node_faults(0.95, transient=True)
+    t = svc.cofactors("a", vorder, ["x", "y"])
+    svc.run()  # returns: no wedge even when everything faults
+    with pytest.raises(TransientInjectedFault):
+        t.result()
+    (rec,) = svc.quarantined()
+    assert rec["attempts"] == 2
+    assert svc.cache_info()["retries"] == 1
+    _assert_consistent(svc, inj, 6, vorder)
+
+
+def test_terminal_fault_fails_fast_despite_retry_policy():
+    rels, vorder = _schema(7)
+    inj = FaultInjector(Store(rels), seed=7)
+    svc = FactorizedService(
+        inj, backend="numpy", retry=RetryPolicy(max_attempts=5)
+    )
+    inj.fail_at_node_visit(2, transient=False)  # NOT retryable
+    t = svc.cofactors("a", vorder, ["x", "y"])
+    svc.run()
+    with pytest.raises(InjectedFault):
+        t.result()
+    assert svc.cache_info()["retries"] == 0
+    _assert_consistent(svc, inj, 7, vorder)
+
+
+# ---------------------------------------------------------------------------
+# fold faults: lazy drain, idle flush, eager append
+# ---------------------------------------------------------------------------
+
+def test_poisoned_idle_fold_absorbed_and_state_recovers():
+    """A fold that dies mid-drain is absorbed by the service (counted +
+    quarantined, never raised at a caller); the store's exception path
+    invalidated the half-folded entries, so the very next read recomputes
+    and matches a fresh store exactly."""
+    rels, vorder = _schema(8)
+    inj = FaultInjector(Store(rels), seed=8)
+    svc = FactorizedService(inj, backend="numpy", flush_policy="never")
+    svc.cofactors("reader", vorder, ["w0", "x", "y"])
+    svc.run()  # warm caches → the append below leaves real fold debt
+    d = _delta(51)
+    svc.append("writer", "Fact", d)
+    svc.run()
+    assert inj.store.cache_info()["pending_rows"] > 0
+    inj.fail_next_fold(transient=False)
+    stats = svc.flush()  # absorbed, not raised
+    assert stats["rows"] == 0
+    assert [k for k, _ in inj.fired] == ["fold"]
+    info = svc.cache_info()
+    assert info["fold_failures"] == 1
+    recs = svc.quarantined()
+    assert recs and recs[-1]["kind"] == "fold"
+    _assert_consistent(svc, inj, 8, vorder, appended=[d])
+
+
+def test_poisoned_read_barrier_fold_retried_to_success():
+    """A transient fold fault at the drain cycle's read barrier is
+    absorbed; the retry path (recompute on invalidated entries) serves
+    the read correctly in the same run."""
+    rels, vorder = _schema(9)
+    inj = FaultInjector(Store(rels), seed=9)
+    svc = FactorizedService(
+        inj, backend="numpy",
+        retry=RetryPolicy(max_attempts=3, backoff=0.001),
+    )
+    svc.cofactors("reader", vorder, ["w1", "x", "y"])
+    svc.run()
+    d = _delta(52)
+    svc.append("writer", "Fact", d)
+    svc.run()
+    inj.fail_next_fold(transient=True)
+    t = svc.cofactors("reader", vorder, ["w1", "x", "y"])
+    svc.run()
+    _tight(t.result().matrix(), _fresh_matrix(9, ["w1", "x", "y"], [d]))
+    _assert_consistent(svc, inj, 9, vorder, appended=[d])
+
+
+def test_eager_poisoned_append_rejected_store_untouched():
+    """Under eager maintenance a poisoned delta raises out of the append
+    with the catalog EXACTLY as before: the write ticket fails, readers
+    never see a partial append."""
+    rels, vorder = _schema(10)
+    inj = FaultInjector(Store(rels, maintenance="eager"), seed=10)
+    svc = FactorizedService(inj, backend="numpy")
+    svc.cofactors("reader", vorder, ["w0", "x", "y"])
+    svc.run()  # caches populated → the append has entries to fold into
+    inj.fail_next_fold(transient=False)
+    bad = svc.append("writer", "Fact", _delta(53))
+    svc.run()
+    with pytest.raises(InjectedFault):
+        bad.result()
+    assert svc.cache_info()["tenants"]["writer"]["failures"] == 1
+    # catalog untouched: state ≡ fresh store WITHOUT the delta
+    _assert_consistent(svc, inj, 10, vorder, appended=())
+
+
+# ---------------------------------------------------------------------------
+# cache-pressure storms
+# ---------------------------------------------------------------------------
+
+def test_eviction_storms_never_change_results():
+    """Evicting the ENTIRE view cache at every snapshot forces cold
+    recomputes mid-workload: results stay exact, only the hit/miss mix
+    moves."""
+    rels, vorder = _schema(11)
+    inj = FaultInjector(Store(rels), seed=11)
+    svc = FactorizedService(inj, backend="numpy")
+    inj.arm_eviction_storms(every_snapshots=1)
+    feats = ["w0", "w1", "x", "y"]
+    d = _delta(55)
+    tickets = []
+    for _ in range(3):
+        tickets.append(svc.cofactors("a", vorder, feats))
+        # a write per cycle republishes the snapshot → storm fires
+        svc.append("writer", "Fact", d)
+        svc.drain()
+    final = svc.cofactors("a", vorder, feats)
+    svc.run()
+    for t, k in zip(tickets, (0, 1, 2)):
+        _tight(
+            t.result().matrix(), _fresh_matrix(11, feats, appended=[d] * k)
+        )
+    want = _fresh_matrix(11, feats, appended=[d] * 3)
+    _tight(final.result().matrix(), want)
+    assert any(k == "evict_storm" for k, _ in inj.fired)
+    assert inj.store.view_cache.evictions > 0
+    inj.disarm()
+    # post-storm warm path works again and counters audit (vc_bytes is
+    # excluded: storms drop bytes outside request brackets by design)
+    t = svc.cofactors("b", vorder, feats)
+    svc.run()
+    _tight(t.result().matrix(), want)
+    info = svc.cache_info()
+    tenants = info["tenants"].values()
+    for field in ("passes", "node_visits"):
+        assert sum(t[field] for t in tenants) == info[field]
+    assert sum(t["vc_hits"] for t in tenants) == info["view_cache_hits"]
+    assert sum(t["vc_misses"] for t in tenants) == info["view_cache_misses"]
+    assert inj.store.cache_info()["pending_rows"] == 0
+
+
+# ---------------------------------------------------------------------------
+# threaded runtime under randomized faults: the no-wedge theorem
+# ---------------------------------------------------------------------------
+
+def test_threaded_runtime_under_random_faults_no_wedged_tickets():
+    """The full gauntlet: threaded runtime, random per-visit hazard,
+    eviction storms, and a mid-run fold trap.  Every ticket resolves
+    (value or typed error), the drained store equals a fresh one, and
+    the accounting still sums — determinism comes from the seeded
+    injector, not from the schedule."""
+    from repro.serve import RuntimeConfig
+
+    rels, vorder = _schema(12)
+    inj = FaultInjector(Store(rels), seed=12)
+    svc = FactorizedService(
+        inj, backend="numpy", window=3,
+        retry=RetryPolicy(max_attempts=3, backoff=0.0005),
+    )
+    inj.arm_random_node_faults(0.02, transient=True)
+    inj.arm_eviction_storms(every_snapshots=3)
+    inj.fail_next_fold(nth=2, transient=True)
+    svc.start(RuntimeConfig(poll_interval=0.002, fold_interval=0.004))
+    d = _delta(54)
+    featsets = [["w0", "x", "y"], ["w1", "x", "y"], ["x", "y"]]
+    tickets = []
+    n_appends = 0
+    for i in range(24):
+        if i % 6 == 5:
+            tickets.append(svc.append("writer", "Fact", d))
+            n_appends += 1
+        else:
+            fs = featsets[i % len(featsets)]
+            tickets.append(svc.cofactors(f"t{i % 3}", vorder, fs))
+    svc.stop(drain=True, timeout=60)
+    resolved = 0
+    for t in tickets:
+        assert t.done, "wedged ticket"
+        try:
+            t.result()
+            resolved += 1
+        except Exception:
+            pass  # typed failure is a legal outcome under injected faults
+    assert resolved > 0  # the hazard is mild: most requests succeed
+    svc2 = FactorizedService(inj, backend="numpy")
+    inj.disarm()
+    feats = ["w0", "w1", "x", "y"]
+    t = svc2.cofactors("_audit", vorder, feats)
+    svc2.run()
+    _tight(
+        t.result().matrix(),
+        _fresh_matrix(12, feats, appended=[d] * n_appends),
+    )
+    assert inj.store.cache_info()["pending_rows"] == 0

@@ -1,0 +1,485 @@
+"""Concurrent service runtime: threads, deadlines, backpressure, shutdown.
+
+The invariants this layer is held to:
+
+* **No wedged tickets** — whatever interleaving of submissions, worker
+  cycles, background folds, shutdown, and direct store mutation runs,
+  every ticket ever admitted ends resolved or failed with a typed error.
+* **Threaded ≡ sequential** — every result a threaded run produces is
+  explainable by SOME serial drain schedule: each read matches (at
+  1e-12) the oracle computed from one of the catalog states the store
+  passes through, and the terminal store state equals the sequential
+  oracle exactly.
+* **Exact accounting survives concurrency** — per-tenant counters still
+  sum to store totals to the unit after threaded runs.
+
+The stress tests run N tenant threads (train / score / cofactors /
+append through the service) against a mutator thread doing direct
+``put`` / ``add_fd`` / ``drop_fd`` on the shared store — the
+catalog-mutation-during-traversal race the two-lock scheme exists for.
+All appends push the SAME fixed delta, so the catalog state space is
+exactly (appends-so-far, dim-variant) and every intermediate state has a
+precomputable oracle.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.factorize import cofactors_factorized
+from repro.core.relation import Relation
+from repro.core.store import Store
+from repro.core.variable_order import VariableOrder
+from repro.serve import (
+    FactorizedService,
+    RuntimeConfig,
+    ServiceOverloaded,
+    ServiceStopped,
+    ServiceTimeout,
+)
+
+DOMAIN = 6
+FEATSETS = [("w0", "x", "y"), ("w1", "x", "y"), ("x", "y")]
+SCORE_FS = ("x", "y")  # theta = [intercept, x-coef, -1 on label]
+THETA = np.array([0.1, 0.5, -1.0])
+
+
+def _relations(seed, dim0_variant=False):
+    """Fact(c0, c1, x, y) ⋈ Dim_i(c_i, …, w_i).  Dim0 carries a
+    *determined* key ``d0 = c0 % 3`` (unique c0 keys), so ``c0 → d0`` is
+    a real FD the mutator thread can add/drop.  ``dim0_variant`` swaps
+    Dim0's payload — the mutator's ``put`` alternates the two."""
+    rng = np.random.default_rng(seed)
+    n = 240
+    keys = {
+        f"c{i}": rng.integers(0, DOMAIN, n).astype(np.int32)
+        for i in range(2)
+    }
+    x = rng.normal(0, 2.0, n)
+    y = 0.5 * x + rng.normal(0, 0.5, n)
+    rels = [
+        Relation.from_columns(
+            "Fact", keys, {"x": x, "y": y}, {f"c{i}": DOMAIN for i in range(2)}
+        )
+    ]
+    c = np.arange(DOMAIN, dtype=np.int32)
+    w0 = rng.normal(0, 1.0, DOMAIN)
+    if dim0_variant:
+        w0 = w0 + 10.0  # decisively different payload
+    rels.append(
+        Relation.from_columns(
+            "Dim0",
+            {"c0": c, "d0": (c % 3).astype(np.int32)},
+            {"w0": w0},
+            {"c0": DOMAIN, "d0": 3},
+        )
+    )
+    rels.append(
+        Relation.from_columns(
+            "Dim1",
+            {"c1": c.copy()},
+            {"w1": rng.normal(0, 1.0, DOMAIN)},
+            {"c1": DOMAIN},
+        )
+    )
+    return rels
+
+
+def _vorder():
+    node = VariableOrder(
+        "x", [VariableOrder("y", [VariableOrder.leaf("Fact")])]
+    )
+    w1 = VariableOrder("w1", [VariableOrder.leaf("Dim1")])
+    node = VariableOrder("c1", [w1, node])
+    d0 = VariableOrder(
+        "d0", [VariableOrder("w0", [VariableOrder.leaf("Dim0")])]
+    )
+    node = VariableOrder("c0", [d0, node])
+    return VariableOrder.intercept([node])
+
+
+def _fixed_delta(seed=77, n_rows=20):
+    rng = np.random.default_rng(seed)
+    return Relation.from_columns(
+        "delta",
+        {
+            f"c{i}": rng.integers(0, DOMAIN, n_rows).astype(np.int32)
+            for i in range(2)
+        },
+        {"x": rng.normal(0, 2.0, n_rows), "y": rng.normal(0, 1.0, n_rows)},
+    )
+
+
+def _oracles(seed, max_appends):
+    """oracle[(k, variant)][featset] = cofactor matrix of the catalog
+    after k appends of the fixed delta with Dim0 in the given variant —
+    the full state space a run can observe."""
+    vorder = _vorder()
+    delta = _fixed_delta()
+    out = {}
+    for variant in (False, True):
+        rels = _relations(seed, dim0_variant=variant)
+        store = Store(rels)
+        for k in range(max_appends + 1):
+            if k:
+                store.append("Fact", delta)
+            store.flush()
+            out[(k, variant)] = {
+                fs: cofactors_factorized(
+                    store, vorder, list(fs), backend="numpy",
+                    use_view_cache=False,
+                ).matrix()
+                for fs in FEATSETS
+            }
+    return out
+
+
+def _matches(mat, oracle_mat):
+    scale = max(1.0, float(np.abs(oracle_mat).max()))
+    return np.allclose(mat, oracle_mat, rtol=1e-12, atol=1e-12 * scale)
+
+
+def _assert_explainable(kind, fs, value, oracles):
+    """A threaded result must equal SOME reachable catalog state's
+    oracle at 1e-12 (linearizability against the state-space oracle)."""
+    cands = [o[fs] for o in oracles.values()]
+    if kind == "score":
+        ok = any(
+            np.isclose(
+                value.sse, float(THETA @ m @ THETA),
+                rtol=1e-12, atol=1e-9,
+            )
+            for m in cands
+        )
+    else:  # cofactors
+        ok = any(_matches(value.matrix(), m) for m in cands)
+    assert ok, f"{kind} result over {fs} matches no reachable state"
+
+
+def _run_threaded(seed, n_tenants, ops_per_tenant, mutator_flips, window):
+    """One threaded stress run; returns (store, outcomes, service info)."""
+    rels = _relations(seed)
+    store = Store(rels)
+    store.add_fd("c0", "d0")
+    vorder = _vorder()
+    delta = _fixed_delta()
+    svc = FactorizedService(store, backend="numpy", window=window)
+    svc.start(RuntimeConfig(poll_interval=0.002, fold_interval=0.004))
+    outcomes = []  # (kind, featset, ticket)
+    out_lock = threading.Lock()
+    dim0_orig = _relations(seed)[1]
+    dim0_alt = _relations(seed, dim0_variant=True)[1]
+
+    def tenant(tid):
+        rng = np.random.default_rng(1000 + tid)
+        mine = []
+        for i in range(ops_per_tenant):
+            roll = rng.integers(0, 5)
+            if roll == 0:
+                t = svc.append(f"t{tid}", "Fact", delta)
+                mine.append(("append", None, t))
+            elif roll == 1:
+                t = svc.score(
+                    f"t{tid}", vorder, ["x"], label="y", theta=THETA
+                )
+                mine.append(("score", SCORE_FS, t))
+            elif roll == 2:
+                t = svc.train(f"t{tid}", vorder, ["x"], "y")
+                mine.append(("train", None, t))
+            else:
+                fs = FEATSETS[int(rng.integers(0, len(FEATSETS)))]
+                t = svc.cofactors(f"t{tid}", vorder, list(fs))
+                mine.append(("cofactors", fs, t))
+            if i % 2:
+                time.sleep(0.001)
+        with out_lock:
+            outcomes.extend(mine)
+
+    def mutator():
+        for i in range(mutator_flips):
+            store.put(dim0_alt if i % 2 == 0 else dim0_orig)
+            store.drop_fd("c0", "d0")
+            time.sleep(0.002)
+            store.add_fd("c0", "d0")
+        if mutator_flips % 2:  # always end on the original payload
+            store.put(dim0_orig)
+
+    threads = [
+        threading.Thread(target=tenant, args=(tid,))
+        for tid in range(n_tenants)
+    ] + [threading.Thread(target=mutator)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    svc.stop(drain=True, timeout=30)
+    info = svc.cache_info()
+    return store, outcomes, info
+
+
+def _check_run(seed, store, outcomes, info):
+    n_appends = sum(1 for kind, _, _ in outcomes if kind == "append")
+    oracles = _oracles(seed, n_appends)
+    for kind, fs, ticket in outcomes:
+        assert ticket.done, "wedged ticket after stop()"
+        value = ticket.result()  # raises if any request failed
+        if kind == "append":
+            continue
+        if kind == "train":  # solved against SOME consistent snapshot
+            assert np.isfinite(value.theta).all()
+            continue
+        _assert_explainable(kind, fs, value, oracles)
+    # terminal state ≡ the sequential oracle (same ops in ANY serial
+    # order land here: appends commute, mutator ended on the original)
+    store.flush()
+    final = cofactors_factorized(
+        store, _vorder(), list(FEATSETS[0]), backend="numpy",
+        use_view_cache=False,
+    ).matrix()
+    expect = oracles[(n_appends, False)][FEATSETS[0]]
+    assert _matches(final, expect)
+    assert store.cache_info()["pending_rows"] == 0
+    # exact accounting survived the threading.  (vc_bytes is NOT summed
+    # here: the mutator's direct put() invalidates covering entries
+    # outside any request bracket, legitimately dropping store-level
+    # bytes below the sum of per-tenant contributions.)
+    tenants = info["tenants"].values()
+    for field in ("passes", "node_visits"):
+        assert sum(t[field] for t in tenants) == info[field]
+    assert sum(t["vc_hits"] for t in tenants) == info["view_cache_hits"]
+    assert sum(t["vc_misses"] for t in tenants) == info["view_cache_misses"]
+
+
+# ---------------------------------------------------------------------------
+# threaded ≡ sequential stress
+# ---------------------------------------------------------------------------
+
+def test_threaded_stress_matches_sequential_oracle():
+    seed = 5
+    store, outcomes, info = _run_threaded(
+        seed, n_tenants=4, ops_per_tenant=6, mutator_flips=6, window=3
+    )
+    _check_run(seed, store, outcomes, info)
+
+
+def test_threaded_stress_unwindowed():
+    seed = 11
+    store, outcomes, info = _run_threaded(
+        seed, n_tenants=3, ops_per_tenant=5, mutator_flips=4, window=None
+    )
+    _check_run(seed, store, outcomes, info)
+
+
+def test_hypothesis_schedule_variant():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(
+        max_examples=5,
+        deadline=None,
+        suppress_health_check=list(HealthCheck),
+    )
+    @given(seed=st.integers(min_value=0, max_value=10**6))
+    def inner(seed):
+        store, outcomes, info = _run_threaded(
+            seed % 97, n_tenants=3, ops_per_tenant=4,
+            mutator_flips=seed % 5, window=2,
+        )
+        _check_run(seed % 97, store, outcomes, info)
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# tickets: timeout, deadlines
+# ---------------------------------------------------------------------------
+
+def test_result_timeout_raises_typed_error():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    t = svc.cofactors("a", _vorder(), ["x", "y"])
+    with pytest.raises(ServiceTimeout):
+        t.result(timeout=0.05)
+    svc.drain()
+    assert t.result(timeout=0.05).count > 0
+
+
+def test_sync_result_without_timeout_still_raises_runtimeerror():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    t = svc.cofactors("a", _vorder(), ["x", "y"])
+    with pytest.raises(RuntimeError, match="not served yet"):
+        t.result()
+
+
+def test_deadline_expiry_fails_one_ticket_not_its_window():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    vorder = _vorder()
+    doomed = svc.cofactors("a", vorder, ["x", "y"], deadline=0.001)
+    healthy = svc.cofactors("b", vorder, ["w0", "x", "y"])
+    time.sleep(0.01)
+    svc.drain()
+    assert healthy.done and doomed.done
+    with pytest.raises(ServiceTimeout):
+        doomed.result()
+    assert healthy.result().count > 0
+    info = svc.cache_info()
+    assert info["tenants"]["a"]["failures"] == 1
+    assert info["tenants"]["b"]["failures"] == 0
+
+
+def test_default_deadline_applies_to_unmarked_requests():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy", default_deadline=0.001)
+    t = svc.cofactors("a", _vorder(), ["x", "y"])
+    time.sleep(0.01)
+    svc.drain()
+    with pytest.raises(ServiceTimeout):
+        t.result()
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_raises_at_submit():
+    store = Store(_relations(0))
+    svc = FactorizedService(
+        store, backend="numpy", max_queue=2, backpressure="reject"
+    )
+    vorder = _vorder()
+    svc.cofactors("a", vorder, ["x", "y"])
+    svc.cofactors("a", vorder, ["x", "y"])
+    with pytest.raises(ServiceOverloaded):
+        svc.cofactors("a", vorder, ["x", "y"])
+    assert svc.run() == 2
+
+
+def test_backpressure_shed_oldest_fails_oldest_read():
+    store = Store(_relations(0))
+    svc = FactorizedService(
+        store, backend="numpy", max_queue=2, backpressure="shed_oldest"
+    )
+    vorder = _vorder()
+    t1 = svc.cofactors("a", vorder, ["x", "y"])
+    t2 = svc.cofactors("b", vorder, ["x", "y"])
+    t3 = svc.cofactors("c", vorder, ["w0", "x", "y"])  # sheds t1
+    assert t1.done
+    with pytest.raises(ServiceOverloaded):
+        t1.result()
+    svc.run()
+    assert t2.result().count > 0 and t3.result().count > 0
+    info = svc.cache_info()
+    assert info["shed"] == 1
+    assert info["tenants"]["a"]["failures"] == 1
+
+
+def test_backpressure_block_times_out_without_a_drainer():
+    store = Store(_relations(0))
+    svc = FactorizedService(
+        store, backend="numpy", max_queue=1, backpressure="block",
+        admission_timeout=0.05,
+    )
+    svc.cofactors("a", _vorder(), ["x", "y"])
+    with pytest.raises(ServiceOverloaded):
+        svc.cofactors("a", _vorder(), ["x", "y"])
+
+
+def test_backpressure_block_admits_under_runtime():
+    store = Store(_relations(0))
+    svc = FactorizedService(
+        store, backend="numpy", max_queue=1, backpressure="block",
+        admission_timeout=10.0,
+    )
+    svc.start(RuntimeConfig(poll_interval=0.002))
+    vorder = _vorder()
+    tickets = [svc.cofactors("a", vorder, ["x", "y"]) for _ in range(6)]
+    for t in tickets:
+        assert t.result(timeout=10).count > 0
+    svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# runtime lifecycle
+# ---------------------------------------------------------------------------
+
+def test_stop_drains_and_resolves_everything():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy", window=1)
+    svc.start(RuntimeConfig(poll_interval=0.002, fold_interval=0.004))
+    vorder = _vorder()
+    tickets = [svc.cofactors("a", vorder, ["x", "y"]) for _ in range(8)]
+    tickets.append(svc.append("w", "Fact", _fixed_delta()))
+    svc.stop(drain=True, timeout=30)
+    assert all(t.done for t in tickets)
+    for t in tickets:
+        t.result()  # none failed: drain served them all
+    with pytest.raises(ServiceStopped):
+        svc.cofactors("a", vorder, ["x", "y"])
+
+
+def test_stop_without_drain_fails_pending_with_service_stopped():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    vorder = _vorder()
+    tickets = [svc.cofactors("a", vorder, ["x", "y"]) for _ in range(3)]
+    svc.stop(drain=False)  # never started: queue is untouched
+    for t in tickets:
+        assert t.done
+        with pytest.raises(ServiceStopped):
+            t.result()
+    info = svc.cache_info()
+    assert info["tenants"]["a"]["failures"] == 3
+
+
+def test_restart_after_stop_serves_again():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    svc.start()
+    svc.stop()
+    svc.start(RuntimeConfig(poll_interval=0.002))
+    t = svc.cofactors("a", _vorder(), ["x", "y"])
+    assert t.result(timeout=10).count > 0
+    svc.stop()
+
+
+def test_background_fold_thread_services_delta_debt():
+    store = Store(_relations(0))  # lazy maintenance by default
+    # seed the caches so the append leaves real fold debt; the seeding
+    # read is not a service request, so zero counters before auditing
+    store.cofactors(_vorder(), ["x", "y"], backend="numpy")
+    store.reset_counters()
+    svc = FactorizedService(store, backend="numpy", flush_policy="never")
+    svc.start(RuntimeConfig(poll_interval=0.002, fold_interval=0.004))
+    t = svc.append("w", "Fact", _fixed_delta())
+    t.result(timeout=10)
+    assert svc.fold_debt_rows() > 0 or store.cache_info()["drains"] > 0
+    deadline = time.monotonic() + 10
+    while svc.fold_debt_rows() > 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    svc.stop()
+    assert svc.fold_debt_rows() == 0  # the fold thread paid the debt
+    assert store.cache_info()["drains"] >= 1
+    # fold cost was charged to the writer, so sums still audit
+    info = svc.cache_info()
+    tenants = info["tenants"].values()
+    assert sum(t["node_visits"] for t in tenants) == info["node_visits"]
+
+
+def test_worker_survives_poisoned_cycle():
+    store = Store(_relations(0))
+    svc = FactorizedService(store, backend="numpy")
+    svc.start(RuntimeConfig(poll_interval=0.002))
+    bad_vorder = VariableOrder.intercept(
+        [VariableOrder("zz", [VariableOrder.leaf("Nope")])]
+    )
+    bad = svc.cofactors("a", bad_vorder, ["zz"])
+    with pytest.raises(Exception):
+        bad.result(timeout=10)
+    good = svc.cofactors("a", _vorder(), ["x", "y"])
+    assert good.result(timeout=10).count > 0  # worker thread survived
+    svc.stop()
