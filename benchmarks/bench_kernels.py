@@ -39,7 +39,7 @@ def run(gram_shapes=((4096, 16), (65536, 16), (65536, 64)),
     for m, k, g in seg_shapes:
         x = jax.random.normal(key, (m, k), jnp.float32)
         seg = jax.random.randint(key, (m,), 0, g)
-        sg = jax.jit(lambda x, s: ref.segment_gram_ref(x, s, g))
+        sg = jax.jit(lambda x, s, g=g: ref.segment_gram_ref(x, s, g))
         t = timeit(lambda: jax.block_until_ready(sg(x, seg)), repeats=5)
         flops = 2.0 * m * k * k
         rows.append(

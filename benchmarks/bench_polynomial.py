@@ -28,14 +28,14 @@ def run(degrees=(1, 2, 3), scale=(48, 12, 24)) -> list:
     for d in degrees:
         monos = expand_monomials(bundle.features, d)
         t_fact = timeit(
-            lambda: polynomial_cofactors(
+            lambda d=d: polynomial_cofactors(
                 bundle.store, bundle.vorder, bundle.features, bundle.label,
                 degree=d,
             ),
             repeats=3,
         )
 
-        def flat_pass():
+        def flat_pass(monos=monos):
             # flat equivalent: expand the materialized join to monomial
             # features, then one Gram over the expanded design matrix.
             cols_exp = [np.ones(z.shape[0])]

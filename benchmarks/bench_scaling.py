@@ -30,7 +30,7 @@ def run(scale=(96, 24, 48), partitions=(1, 2, 4, 8, 16)) -> list:
     base = None
     for parts in partitions:
         t = timeit(
-            lambda: partitioned_cofactors_host(z, cols, parts), repeats=3
+            lambda parts=parts: partitioned_cofactors_host(z, cols, parts), repeats=3
         )
         full = partitioned_cofactors_host(z, cols, parts).matrix()
         ref = partitioned_cofactors_host(z, cols, 1).matrix()

@@ -379,7 +379,7 @@ def _fit_irls(
     grad = _grad_theta(design, grad_eta, oid) + pen @ theta
     converged = False
     it = 0
-    for it in range(1, cfg.max_iter + 1):
+    for it in range(1, cfg.max_iter + 1):  # noqa: B007 — `it` is read after the loop (iterations=it)
         if np.abs(grad).max() / m < cfg.tol:
             converged = True
             break

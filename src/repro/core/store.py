@@ -246,6 +246,11 @@ class Store:
         # deterministically (repro.serve.faults.FaultInjector).  None in
         # production.
         self.fault_hook: Optional[Callable[[str, str], None]] = None
+        # observability seam twin to fault_hook: when set, called as
+        # hook("Store._relations", "write") at guarded-state touch points so
+        # the lockset sanitizer (repro.analysis.sanitizer) can audit which
+        # locks actually protect each access.  None in production.
+        self.access_hook: Optional[Callable[[str, str], None]] = None
         # persistent cross-batch per-node view cache (see module docstring);
         # view_cache_bytes=0 disables it (the cold-baseline escape hatch).
         self.view_cache = ViewCache(max_bytes=view_cache_bytes)
@@ -285,6 +290,14 @@ class Store:
         for rel in relations or ():
             self.put(rel)
 
+    def _access(self, field: str, kind: str) -> None:
+        """Fire the ``access_hook`` seam (no-op when uninstalled): reports a
+        ``read``/``write`` of guarded shared state under whatever locks the
+        calling thread currently holds, for the lockset sanitizer."""
+        hook = self.access_hook
+        if hook is not None:
+            hook(field, kind)
+
     # -- attribute dictionaries (append-only, store-global) --------------------
     def _dict_for(self, attr: str) -> _AttrDict:
         d = self._dicts.get(attr)
@@ -323,6 +336,11 @@ class Store:
         if ids is None:
             col = self._relations[rel_name].column(attr)
             ids = self._dict_for(attr).extend_encode(col)
+            self._access("Store._enc_cols", "write")
+            # Deliberate lock-free memo fill: racing threads compute the
+            # same ids (append-only dictionaries) and a dict put is atomic
+            # under the GIL, so last-writer-wins is correct.
+            # lockcheck: idempotent GIL-atomic memo fill
             self._enc_cols[key] = ids
         return ids
 
@@ -333,20 +351,24 @@ class Store:
     def _register_vorder(self, sig: tuple, vorder: "VariableOrder") -> None:
         """Remember a variable order by signature so ``append`` can rebuild
         delta engines for view-cache entries created outside
-        :meth:`cofactors` / :meth:`cat_cofactors`."""
-        self._vorders.setdefault(sig, vorder)
+        :meth:`cofactors` / :meth:`cat_cofactors`.  Engines call this from
+        snapshot reads too, so the registry insert takes the mutate lock."""
+        with self._mutate_lock:
+            self._access("Store._vorders", "write")
+            self._vorders.setdefault(sig, vorder)
 
     def reset_counters(self) -> None:
         """Zero every cumulative counter (unified + categorical + view
         cache) — benches and tests measure deltas from a known origin
-        instead of depending on call order."""
-        self.passes = 0
-        self.node_visits = 0
-        self.cat_passes = 0
-        self.cat_node_visits = 0
-        self.view_cache.hits = 0
-        self.view_cache.misses = 0
-        self.view_cache.evictions = 0
+        instead of depending on call order.  Taken under the mutate lock so
+        a reset never lands mid-fold and splits one maintenance pass's
+        counters across epochs."""
+        with self._mutate_lock:
+            self.passes = 0
+            self.node_visits = 0
+            self.cat_passes = 0
+            self.cat_node_visits = 0
+            self.view_cache.reset_counters()
 
     # -- catalog -------------------------------------------------------------
     @_locked
@@ -361,6 +383,8 @@ class Store:
         *replaced*, never mutated — a :class:`StoreSnapshot` taken before
         the call keeps reading the old maps, unblocked and uncorrupted.
         """
+        self._access("Store._relations", "write")
+        self._access("Store._fds", "write")
         old = self._relations.get(rel.name)
         old_relations = self._relations
         touched = set(rel.keys) | set(old.keys if old else ())
@@ -476,6 +500,7 @@ class Store:
                 "relation contains both attributes as keys)"
             )
         fd = FunctionalDependency(lhs, rhs, mapping, "declared")
+        self._access("Store._fds", "write")
         self._fds = {**self._fds, (lhs, rhs): fd}
         self._bump_fds()
         self._invalidate_fd_entries()
@@ -531,6 +556,7 @@ class Store:
 
     @_locked
     def drop_fd(self, lhs: str, rhs: str) -> None:
+        self._access("Store._fds", "write")
         if (lhs, rhs) in self._fds:
             self._fds = {
                 k: v for k, v in self._fds.items() if k != (lhs, rhs)
@@ -557,7 +583,9 @@ class Store:
         plan = self._red_cache.get(key)
         if plan is None:
             plan = reduction_plan(self._fds, list(cat), domains)
-            self._red_cache[key] = plan
+            with self._mutate_lock:
+                self._access("Store._red_cache", "write")
+                self._red_cache[key] = plan
         return plan
 
     def _plan_fd_updates(
@@ -637,6 +665,8 @@ class Store:
         and every FD-reduced cache entry built under it is invalidated;
         new lhs ids with consistent rhs values extend the FD mappings.
         """
+        self._access("Store._relations", "write")
+        self._access("Store._delta_log", "write")
         if name not in self._relations:
             raise KeyError(f"append target {name!r} not in catalog")
         base = self._relations[name]
@@ -985,7 +1015,9 @@ class Store:
             raise ValueError(f"column {col} not found in any relation")
         allv = np.concatenate(chunks)
         out = (float(allv.sum()), float(np.abs(allv).max()), len(allv))
-        self._moments[col] = out
+        with self._mutate_lock:
+            self._access("Store._moments", "write")
+            self._moments[col] = out
         return out
 
     def _delta_cofactors(
@@ -1123,6 +1155,7 @@ class Store:
         ``Cofactors.rescale``."""
         from .factorize import FactorizedEngine
 
+        self._access("Store._cofactor_cache", "write")
         self.flush(vorder.relations())
         sig = vorder.signature()
         key = (sig, tuple(features), backend)
@@ -1172,6 +1205,7 @@ class Store:
         Returns a ``repro.core.categorical.CatCofactors``; do not mutate."""
         from .categorical import cat_cofactors_factorized
 
+        self._access("Store._cat_cache", "write")
         self.flush(vorder.relations())
         sig = vorder.signature()
         red = self.fd_reduction(cat) if reduce_fds else None
@@ -1195,8 +1229,14 @@ class Store:
         )
         return cof
 
+    @_locked
     def cache_info(self) -> Dict[str, int]:
+        # Under the mutate lock so the report is one consistent cut: entry
+        # counts, counters and delta-log debt all from the same instant,
+        # never straddling a fold.
         vc = self.view_cache
+        self._access("Store._cofactor_cache", "read")
+        self._access("Store._cat_cache", "read")
         info = {
             "entries": len(self._cofactor_cache),
             "cat_entries": len(self._cat_cache),
@@ -1396,6 +1436,7 @@ class StoreSnapshot:
             # version ⇒ same data) and owns exclusively afterwards.
             col = self._relations[rel_name].column(attr)
             ids = self._store._dict_for(attr).extend_encode(col)
+            # lockcheck: idempotent memo fill on the aliased encodings map
             self._enc_cols[key] = ids
         return ids
 
@@ -1411,6 +1452,11 @@ class StoreSnapshot:
             raise ValueError(f"column {col} not found in any relation")
         allv = np.concatenate(chunks)
         out = (float(allv.sum()), float(np.abs(allv).max()), len(allv))
+        # Lock-free fill of the map shared with the parent: a concurrent
+        # parent append either swaps the map (this write lands in the
+        # orphaned copy, lost) or folds this value forward with the delta
+        # rows (correct) — lost-or-correct, never wrong.
+        # lockcheck: idempotent memo fill on the aliased moments map
         self._moments[col] = out
         return out
 

@@ -138,9 +138,27 @@ class ViewCache:
         #: ``_rel_versions`` — when set, validity is the watermark rule
         #: (see module docstring) instead of exact version equality.
         self.watermarks: Optional[Dict[str, int]] = None
+        #: sanitizer seam (see ``Store.access_hook``): when set, called as
+        #: hook("ViewCache._entries", kind) on entry-map touches.
+        self.access_hook = None
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._mu:
+            return len(self._entries)
+
+    def _access(self, field: str, kind: str) -> None:
+        hook = self.access_hook
+        if hook is not None:
+            hook(field, kind)
+
+    def reset_counters(self) -> None:
+        """Zero the hit/miss/eviction counters under the cache lock — the
+        store's ``reset_counters`` must not race a concurrent fold's
+        ``note_hit``/``note_miss`` increments."""
+        with self._mu:
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
 
     def _valid(self, entry: _Entry, version: int) -> bool:
         wm = self.watermarks
@@ -154,6 +172,7 @@ class ViewCache:
         against invalidation-rule bugs, as in the store's cofactor
         caches)."""
         with self._mu:
+            self._access("ViewCache._entries", "read")
             entry = self._entries.get(key)
             if entry is None:
                 return None
@@ -176,6 +195,7 @@ class ViewCache:
         if nbytes > self.max_bytes:
             return  # single oversized view: never worth the whole budget
         with self._mu:
+            self._access("ViewCache._entries", "write")
             self.discard(key)
             # a higher-degree view subsumes the lower-degree variants —
             # drop them so the budget isn't spent twice on the same subtree

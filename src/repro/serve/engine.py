@@ -122,7 +122,7 @@ class Engine:
             logits, cache1 = self._prefill_one(self.params, batch)
             # place the prefilled cache lines into this slot
             self.cache = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                lambda full, one, slot=slot: full.at[:, slot].set(one[:, 0]),
                 self.cache,
                 cache1,
             )
@@ -173,7 +173,7 @@ class Engine:
             keep[group] = True
             keep_dev = jnp.asarray(keep)
 
-            def merge(new, old):
+            def merge(new, old, keep_dev=keep_dev):
                 mask = keep_dev.reshape(
                     (1, self.scfg.slots) + (1,) * (new.ndim - 2)
                 )

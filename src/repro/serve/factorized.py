@@ -78,7 +78,7 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -356,6 +356,9 @@ class FactorizedService:
         self._retries = 0  # transient-fault requeues (service-wide)
         self._shed = 0  # tickets failed by shed_oldest backpressure
         self._fold_failures = 0  # idle-window folds that raised
+        # sanitizer seam (see Store.access_hook): when set, called as
+        # hook("FactorizedService._reads", kind) at queue/stats touches.
+        self.access_hook: Optional[Callable[[str, str], None]] = None
 
     # -- request submission ----------------------------------------------------
     def cofactors(
@@ -458,6 +461,7 @@ class FactorizedService:
         the merged ``Relation``.  Visible to reads from the next cycle."""
         with self._lock:
             self._admit()
+            self._access("FactorizedService._writes", "write")
             ticket = Ticket()
             ticket._blocking = self._runtime is not None
             self._writes.append(
@@ -484,6 +488,7 @@ class FactorizedService:
         )
         with self._lock:
             self._admit()
+            self._access("FactorizedService._reads", "write")
             ticket = Ticket()
             ticket._blocking = self._runtime is not None
             self._reads.append(
@@ -525,6 +530,7 @@ class FactorizedService:
                         f"admission queue full ({self.max_queue}) with "
                         "writes only — refusing to shed"
                     )
+                self._access("FactorizedService._reads", "write")
                 victim = self._reads.popleft()
                 victim.ticket._fail(
                     ServiceOverloaded("shed under backpressure")
@@ -551,16 +557,27 @@ class FactorizedService:
                 )
 
     def _notify(self) -> None:
+        # lockcheck: lock-free pointer read of _runtime is the design —
+        # stop() nulls it under the lock, a stale non-None wakes an already
+        # stopping runtime harmlessly.
         rt = self._runtime
         if rt is not None:
             rt.notify()
 
+    def _access(self, field: str, kind: str) -> None:
+        """Sanitizer seam twin of ``Store._access`` (no-op uninstalled)."""
+        hook = self.access_hook
+        if hook is not None:
+            hook(field, kind)
+
     def _next_seq(self) -> int:
+        self._access("FactorizedService._seq", "write")
         self._seq += 1
         return self._seq
 
     def _stats(self, tenant: str) -> TenantStats:
         with self._stats_lock:
+            self._access("FactorizedService._tenants", "write")
             st = self._tenants.get(tenant)
             if st is None:
                 st = self._tenants[tenant] = TenantStats()
@@ -581,6 +598,8 @@ class FactorizedService:
         expired: List[_Read] = []
         reads: List[_Read] = []
         with self._lock:
+            self._access("FactorizedService._reads", "write")
+            self._access("FactorizedService._writes", "write")
             take = len(self._reads) if self.window is None else self.window
             deferred: List[_Read] = []
             while self._reads and len(reads) < take:
@@ -627,6 +646,7 @@ class FactorizedService:
             self._apply_write(w)
             done += 1
         if writes:
+            self._access("FactorizedService._snapshot", "write")
             self._snapshot = self.store.snapshot()
         with self._lock:
             idle = not self._reads
@@ -700,10 +720,15 @@ class FactorizedService:
             self._not_full.notify_all()
         if rt is not None:
             rt.stop(drain=drain, timeout=timeout)
-            for err in rt.errors:
-                self._quarantined.append(
-                    {"kind": "runtime", "error": repr(err)}
-                )
+            if rt.errors:
+                # Under the cycle lock like every other quarantine write: a
+                # drain cycle the runtime failed to join could still be
+                # appending bisection results.
+                with self._cycle_lock:
+                    for err in rt.errors:
+                        self._quarantined.append(
+                            {"kind": "runtime", "error": repr(err)}
+                        )
         elif drain:
             self.run()
         self._fail_pending(
@@ -719,6 +744,8 @@ class FactorizedService:
         lock so it cannot race an in-flight cycle's window."""
         with self._cycle_lock:
             with self._lock:
+                self._access("FactorizedService._reads", "write")
+                self._access("FactorizedService._writes", "write")
                 items = list(self._reads) + list(self._writes)
                 self._reads.clear()
                 self._writes.clear()
@@ -741,6 +768,7 @@ class FactorizedService:
         vc = store.view_cache
         before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
         tenants = [r.tenant for r in batch]
+        self._access("FactorizedService._snapshot", "read")
         try:
             merged = merge_batches(parts)
             first = batch[0]
@@ -840,7 +868,10 @@ class FactorizedService:
         if not callable(flush):
             self._writers_since_flush.clear()
             return {"relations": 0, "rows": 0, "appends": 0}
-        payers = list(self._writers_since_flush) or sorted(self._tenants)
+        payers = list(self._writers_since_flush)
+        if not payers:
+            with self._stats_lock:  # _tenants is stats-lock state
+                payers = sorted(self._tenants)
         vc = store.view_cache
         before = (store.passes, store.node_visits, vc.hits, vc.misses, vc.bytes)
         try:
@@ -969,6 +1000,7 @@ class FactorizedService:
             info["coalesced_batches"] = self._batches
             info["coalesced_requests"] = self._coalesced_requests
             with self._lock:
+                self._access("FactorizedService._reads", "read")
                 info["queued_reads"] = len(self._reads)
                 info["queued_writes"] = len(self._writes)
             info["running"] = self.running

@@ -1,0 +1,337 @@
+"""Concurrency contract checker + lockset sanitizer, against planted defects.
+
+Static side: each fixture module plants exactly one class of violation —
+lock-order inversion (lexical and via call-edge inference), unguarded
+writes, in-place COW mutation, wait-while-holding, non-reentrant
+re-acquisition, frozen-field rebinding — and the checker must flag it,
+while a contract-respecting module stays clean.  The CLI's ratchet
+baseline must pass old violations and fail new ones.
+
+Dynamic side: a standalone ``LockSanitizer`` must report the planted
+empty-lockset interleaving, runtime order inversions, and
+wait-while-holding — and stay silent for consistently-locked access.
+"""
+
+import threading
+
+import pytest
+
+from repro.analysis import cli, cow, lockcheck
+from repro.analysis.sanitizer import (
+    LockSanitizer,
+    SanitizedCondition,
+    SanitizedLock,
+)
+
+# ---------------------------------------------------------------------------
+# fixtures: one planted defect each (class/attr names match the declared
+# contracts, so the default contract set applies)
+# ---------------------------------------------------------------------------
+
+FIXTURE_LOCK_ORDER = '''
+class FactorizedService:
+    def bad(self):
+        with self._stats_lock:   # leaf lock first ...
+            with self._lock:     # ... then the queue lock: inversion
+                self._seq += 1
+'''
+
+FIXTURE_LOCK_ORDER_VIA_CALL = '''
+class ViewCache:
+    def bad(self, store, delta):
+        with self._mu:
+            store.append("Fact", delta)  # acquires Store._mutate_lock
+'''
+
+FIXTURE_UNGUARDED_WRITE = '''
+class Store:
+    def bad(self):
+        self._relations = {}  # catalog swap without the mutate lock
+'''
+
+FIXTURE_COW_MUTATION = '''
+class Store:
+    def bad(self, rel):
+        with self._mutate_lock:
+            self._relations[rel.name] = rel  # in-place: snapshots see it
+            self._fds.update({})             # ditto
+'''
+
+FIXTURE_WAIT_HOLDING = '''
+class FactorizedService:
+    def bad(self):
+        with self._cycle_lock:
+            with self._lock:
+                self._not_full.wait(0.1)  # cycle lock stays held
+'''
+
+FIXTURE_SELF_DEADLOCK = '''
+class FactorizedService:
+    def bad(self):
+        with self._lock:
+            with self._lock:  # plain Lock: guaranteed deadlock
+                pass
+'''
+
+FIXTURE_FROZEN_FIELD = '''
+def retune(policy):
+    policy.backoff = 2.0  # RetryPolicy is replace-only
+'''
+
+FIXTURE_CLEAN = '''
+class FactorizedService:
+    def good(self):
+        with self._cycle_lock:
+            with self._lock:
+                self._seq += 1
+                self._not_full.notify_all()
+            with self._stats_lock:
+                self._tenants["a"] = 1
+
+
+class Store:
+    def good(self, rel):
+        with self._mutate_lock:
+            self._relations = {**self._relations, rel.name: rel}
+            self.view_cache.invalidate("x")
+'''
+
+PLANTED = [
+    ("lock-order", FIXTURE_LOCK_ORDER),
+    ("lock-order", FIXTURE_LOCK_ORDER_VIA_CALL),
+    ("guarded-by", FIXTURE_UNGUARDED_WRITE),
+    ("cow-mutation", FIXTURE_COW_MUTATION),
+    ("condition-wait", FIXTURE_WAIT_HOLDING),
+    ("self-deadlock", FIXTURE_SELF_DEADLOCK),
+    ("frozen-field", FIXTURE_FROZEN_FIELD),
+]
+
+
+# ---------------------------------------------------------------------------
+# static checker
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule,src", PLANTED)
+def test_planted_defect_is_caught(rule, src):
+    findings = lockcheck.check_source(src) + cow.check_source(src)
+    assert any(f.rule == rule for f in findings), (
+        rule, [f.render() for f in findings])
+
+
+def test_clean_module_has_no_findings():
+    findings = (lockcheck.check_source(FIXTURE_CLEAN)
+                + cow.check_source(FIXTURE_CLEAN))
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_suppression_comment_silences_finding():
+    src = FIXTURE_UNGUARDED_WRITE.replace(
+        "self._relations = {}",
+        "self._relations = {}  # lockcheck: test-only suppression")
+    assert lockcheck.check_source(src) == []
+
+
+def test_cow_mutation_flagged_even_under_lock():
+    """The COW lint is orthogonal to locking: holding the mutate lock does
+    not make an in-place edit of an aliased snapshot map safe."""
+    findings = lockcheck.check_source(FIXTURE_COW_MUTATION)
+    assert not findings  # guarded-by is satisfied (lock held) ...
+    findings = cow.check_source(FIXTURE_COW_MUTATION)
+    assert {f.detail for f in findings} == {
+        "_relations|setitem", "_fds|update"}  # ... but COW is not
+
+
+def test_fingerprint_is_line_number_stable():
+    shifted = "\n\n\n" + FIXTURE_UNGUARDED_WRITE
+    a = lockcheck.check_source(FIXTURE_UNGUARDED_WRITE)
+    b = lockcheck.check_source(shifted)
+    assert [f.fingerprint for f in a] == [f.fingerprint for f in b]
+    assert a[0].line != b[0].line
+
+
+# ---------------------------------------------------------------------------
+# CLI + ratchet baseline
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(src)
+    return p
+
+
+@pytest.mark.parametrize("rule,src", PLANTED)
+def test_cli_exits_nonzero_on_planted_fixture(tmp_path, rule, src):
+    p = _write(tmp_path, "fixture.py", src)
+    assert cli.main([str(p)]) == 1
+
+
+def test_cli_exits_zero_on_clean_module(tmp_path):
+    p = _write(tmp_path, "clean.py", FIXTURE_CLEAN)
+    assert cli.main([str(p)]) == 0
+
+
+def test_cli_exits_zero_on_repo_with_committed_baseline():
+    # The shipped configuration: src/repro is clean against the committed
+    # ratchet file.
+    import pathlib
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    assert cli.main([str(repo / "src" / "repro"), "--baseline",
+                     str(repo / "analysis_baseline.json")]) == 0
+
+
+def test_baseline_ratchet_old_passes_new_fails(tmp_path):
+    fixtures = tmp_path / "pkg"
+    fixtures.mkdir()
+    _write(fixtures, "legacy.py", FIXTURE_UNGUARDED_WRITE)
+    baseline = tmp_path / "baseline.json"
+    # Ratchet the legacy debt ...
+    assert cli.main([str(fixtures), "--write-baseline", str(baseline)]) == 0
+    # ... the old violation no longer fails the build ...
+    assert cli.main([str(fixtures), "--baseline", str(baseline)]) == 0
+    # ... but a NEW violation in another file does ...
+    _write(fixtures, "fresh.py", FIXTURE_COW_MUTATION)
+    assert cli.main([str(fixtures), "--baseline", str(baseline)]) == 1
+    # ... and fixing it goes back to green without touching the baseline.
+    (fixtures / "fresh.py").unlink()
+    assert cli.main([str(fixtures), "--baseline", str(baseline)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# dynamic sanitizer (standalone: real threads, wrapped locks)
+# ---------------------------------------------------------------------------
+
+def _locks(san):
+    a = SanitizedLock(san, "Store._mutate_lock", threading.RLock())
+    b = SanitizedLock(san, "ViewCache._mu", threading.RLock())
+    return a, b
+
+
+def test_sanitizer_reports_empty_lockset_interleaving():
+    san = LockSanitizer()
+    lock_a, lock_b = _locks(san)
+    field = "FactorizedService._seq"  # declared policy: full
+
+    # t1 must stay alive until t2 has accessed: a joined thread's ident can
+    # be reused, which would make the two accesses look single-threaded.
+    first_done = threading.Event()
+    second_done = threading.Event()
+
+    def first():
+        with lock_a:
+            san._access(field, "write")
+        first_done.set()
+        second_done.wait(5)
+
+    def second():
+        first_done.wait(5)
+        with lock_b:
+            san._access(field, "write")
+        second_done.set()
+
+    t1 = threading.Thread(target=first)
+    t2 = threading.Thread(target=second)
+    t1.start(); t2.start()
+    t2.join(); t1.join()
+    assert [r.field for r in san.empty_locksets] == [field]
+    with pytest.raises(AssertionError):
+        san.assert_clean()
+
+
+def test_sanitizer_consistent_lock_keeps_lockset():
+    san = LockSanitizer()
+    lock_a, _ = _locks(san)
+    field = "FactorizedService._seq"
+
+    def worker():
+        with lock_a:
+            san._access(field, "write")
+
+    for _ in range(2):
+        t = threading.Thread(target=worker)
+        t.start(); t.join()
+    assert san.empty_locksets == []
+    san.assert_clean()
+
+
+def test_sanitizer_memo_policy_fields_are_exempt():
+    san = LockSanitizer()
+    field = "Store._enc_cols"  # declared policy: memo (idempotent fills)
+
+    def worker():
+        san._access(field, "write")  # no lock at all
+
+    for _ in range(2):
+        t = threading.Thread(target=worker)
+        t.start(); t.join()
+    san.assert_clean()
+
+
+def test_sanitizer_runtime_order_assertion():
+    san = LockSanitizer()
+    mutate, vc_mu = _locks(san)
+    with vc_mu:          # ViewCache._mu first ...
+        with mutate:     # ... then Store._mutate_lock: declared inversion
+            pass
+    assert len(san.order_violations) == 1
+    v = san.order_violations[0]
+    assert v.acquired == "Store._mutate_lock"
+    assert "ViewCache._mu" in v.held
+
+
+def test_sanitizer_allows_declared_nesting_and_reentrancy():
+    san = LockSanitizer()
+    mutate, vc_mu = _locks(san)
+    with mutate:
+        with mutate:      # RLock re-entry is fine
+            with vc_mu:   # declared edge mutate -> vc
+                pass
+    san.assert_clean()
+    assert san.acquisitions["Store._mutate_lock"] == 2
+
+
+def test_sanitized_condition_flags_wait_while_holding():
+    san = LockSanitizer()
+    cycle = SanitizedLock(
+        san, "FactorizedService._cycle_lock", threading.RLock())
+    queue = SanitizedLock(san, "FactorizedService._lock", threading.Lock())
+    cond = SanitizedCondition(san, "FactorizedService._not_full", queue)
+
+    with cycle:
+        with cond:                 # acquires the wrapped queue lock
+            cond.wait(timeout=0.01)  # cycle lock still held -> violation
+    assert len(san.wait_violations) == 1
+    assert san.wait_violations[0].held == (
+        "FactorizedService._cycle_lock",)
+
+    # waiting with only the condition's own lock held is clean
+    san2 = LockSanitizer()
+    queue2 = SanitizedLock(san2, "FactorizedService._lock", threading.Lock())
+    cond2 = SanitizedCondition(san2, "FactorizedService._not_full", queue2)
+    with cond2:
+        cond2.wait(timeout=0.01)
+    san2.assert_clean()
+
+
+def test_sanitized_condition_notify_roundtrip():
+    """wait/notify across threads works through the wrapper (the portable
+    Condition fallbacks route through SanitizedLock.acquire/release)."""
+    san = LockSanitizer()
+    queue = SanitizedLock(san, "FactorizedService._lock", threading.Lock())
+    cond = SanitizedCondition(san, "FactorizedService._not_full", queue)
+    ready = []
+
+    def waiter():
+        with cond:
+            while not ready:
+                cond.wait(timeout=1.0)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cond:
+        ready.append(1)
+        cond.notify_all()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    san.assert_clean()
+    # bookkeeping survived the wait's release/re-acquire cycle
+    assert san._held.stack == []

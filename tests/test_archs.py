@@ -116,7 +116,7 @@ def test_microbatched_grads_match_full_batch(name, key):
 def test_input_specs_cover_all_cells():
     """Every runnable (arch × shape) cell must produce well-formed specs."""
     n = 0
-    for name, cfg in ARCHS.items():
+    for cfg in ARCHS.values():
         for shape in SHAPES.values():
             if shape.name in cfg.skip_shapes:
                 continue

@@ -32,7 +32,7 @@ CONT = ["x", "y"]
 
 def _delta_for(rel: Relation, rng, n_rows: int, grow: bool = False) -> Relation:
     keys = {}
-    for i, (a, col) in enumerate(rel.keys.items()):
+    for i, (a, _col) in enumerate(rel.keys.items()):
         dom = int(rel.domains[a])
         ids = rng.integers(0, dom, n_rows).astype(np.int32)
         if grow and i == 0 and n_rows:
@@ -227,7 +227,7 @@ def test_lazy_equals_eager_interleavings_deterministic():
         cont = b.features + [b.label]
         rng = np.random.default_rng(seed)
         _assert_modes_agree(lazy, eager, b.vorder, cont, cat)
-        for op in range(5):
+        for _op in range(5):
             _apply_everywhere([lazy, eager], int(rng.integers(0, 30)), rng)
             _assert_modes_agree(lazy, eager, b.vorder, cont, cat)
 

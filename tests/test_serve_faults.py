@@ -148,7 +148,9 @@ def test_poisoned_request_isolated_by_bisection():
     good = [svc.cofactors(f"g{i}", vorder, fs) for i, fs in enumerate(good_fs)]
     bad = svc.cofactors("evil", vorder, ["no_such_feature", "x"])
     svc.run()
-    with pytest.raises(Exception):
+    # noqa-reason: the engine's raise type for a bad feature list is an
+    # implementation detail; the test asserts propagation + isolation
+    with pytest.raises(Exception):  # noqa: B017
         bad.result()
     for t, fs in zip(good, good_fs):
         _tight(t.result().matrix(), _fresh_matrix(4, fs))

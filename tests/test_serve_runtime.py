@@ -158,14 +158,21 @@ def _assert_explainable(kind, fs, value, oracles):
     assert ok, f"{kind} result over {fs} matches no reachable state"
 
 
-def _run_threaded(seed, n_tenants, ops_per_tenant, mutator_flips, window):
-    """One threaded stress run; returns (store, outcomes, service info)."""
+def _run_threaded(seed, n_tenants, ops_per_tenant, mutator_flips, window,
+                  sanitizer=None):
+    """One threaded stress run; returns (store, outcomes, service info).
+
+    ``sanitizer`` (a ``repro.analysis.LockSanitizer``) is installed after
+    construction and before any thread starts, so every lock the run takes
+    is a wrapped, order-checked one."""
     rels = _relations(seed)
     store = Store(rels)
     store.add_fd("c0", "d0")
     vorder = _vorder()
     delta = _fixed_delta()
     svc = FactorizedService(store, backend="numpy", window=window)
+    if sanitizer is not None:
+        sanitizer.install(service=svc)
     svc.start(RuntimeConfig(poll_interval=0.002, fold_interval=0.004))
     outcomes = []  # (kind, featset, ticket)
     out_lock = threading.Lock()
@@ -478,8 +485,49 @@ def test_worker_survives_poisoned_cycle():
         [VariableOrder("zz", [VariableOrder.leaf("Nope")])]
     )
     bad = svc.cofactors("a", bad_vorder, ["zz"])
-    with pytest.raises(Exception):
+    # noqa-reason: any propagated error proves the poisoned cycle failed
+    # the request instead of wedging the worker; the type is incidental
+    with pytest.raises(Exception):  # noqa: B017
         bad.result(timeout=10)
     good = svc.cofactors("a", _vorder(), ["x", "y"])
     assert good.result(timeout=10).count > 0  # worker thread survived
     svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# lockset-sanitized stress (nightly `sanitize` leg; repro.analysis.sanitizer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.sanitize
+def test_threaded_stress_sanitized_windowed():
+    from repro.analysis import LockSanitizer
+
+    seed = 5
+    san = LockSanitizer()
+    store, outcomes, info = _run_threaded(
+        seed, n_tenants=4, ops_per_tenant=6, mutator_flips=6, window=3,
+        sanitizer=san,
+    )
+    _check_run(seed, store, outcomes, info)  # sanitizer must not perturb
+    san.assert_clean()  # no empty locksets, no order/wait violations
+    # the run actually went through the wrapped locks and the probes
+    assert san.acquisitions.get("Store._mutate_lock", 0) > 0
+    assert san.acquisitions.get("FactorizedService._cycle_lock", 0) > 0
+    assert san.acquisitions.get("FactorizedService._lock", 0) > 0
+    assert san.accesses > 0
+
+
+@pytest.mark.sanitize
+def test_threaded_stress_sanitized_unwindowed():
+    from repro.analysis import LockSanitizer
+
+    seed = 11
+    san = LockSanitizer()
+    store, outcomes, info = _run_threaded(
+        seed, n_tenants=3, ops_per_tenant=5, mutator_flips=4, window=None,
+        sanitizer=san,
+    )
+    _check_run(seed, store, outcomes, info)
+    san.assert_clean()
+    writes = san.field_stats().get("FactorizedService._reads", (0, 0))[1]
+    assert writes > 0  # queue probes fired under the wrapped queue lock

@@ -38,7 +38,7 @@ def _delta_for(rel: Relation, rng, n_rows: int, grow: bool = False) -> Relation:
     """Random delta with the same attribute sets as ``rel``; ``grow=True``
     pushes one key column past the current domain (unseen category ids)."""
     keys = {}
-    for i, (a, col) in enumerate(rel.keys.items()):
+    for i, (a, _col) in enumerate(rel.keys.items()):
         dom = int(rel.domains[a])
         ids = rng.integers(0, dom, n_rows).astype(np.int32)
         if grow and i == 0 and n_rows:
@@ -197,7 +197,7 @@ def test_put_invalidates_covering_subtrees_only():
     b.store.put(b.store.get("Dim0"))
     after = len(b.store.view_cache)
     assert 0 < after < before
-    for key, entry in b.store.view_cache.items():
+    for _key, entry in b.store.view_cache.items():
         assert "Dim0" not in entry.relations
     out = cat_cofactors_factorized(b.store, b.vorder, CONT, cat)
     ref = cat_cofactors_factorized(
@@ -324,7 +324,7 @@ def test_cached_equals_uncached_interleavings_deterministic():
         cont = b.features + [b.label]
         rng = np.random.default_rng(seed)
         _assert_cached_equals_uncached(b.store, b.vorder, cont, cat)
-        for op in range(5):
+        for _op in range(5):
             _apply_op(b.store, int(rng.integers(0, 30)), rng)
             _assert_cached_equals_uncached(b.store, b.vorder, cont, cat)
 
