@@ -18,6 +18,8 @@ One module per paper table/figure (+ substrate benches):
                                  plus degraded-mode throughput retention
                                  under injected faults (fault-rate sweep)
   polynomial_extension         — §6 outlook (beyond-paper degree-d)
+  traversal_nodes / _end_to_end — fused vs unfused traversal nodes with
+                                 roofline-audited bandwidth fractions
   kernel_hotspots              — hot-aggregate arithmetic intensity
   lm_smoke_steps               — assigned-arch step timings (smoke, CPU)
 
@@ -54,6 +56,7 @@ SUITES = [
     ("view_cache", "view cache cold/warm/append", "bench_view_cache"),
     ("serve", "multi-tenant serve coalescing", "bench_serve"),
     ("polynomial", "polynomial extension", "bench_polynomial"),
+    ("traversal", "fused traversal nodes (roofline)", "bench_traversal"),
     ("kernels", "kernel hotspots", "bench_kernels"),
     ("lm", "lm smoke steps", "bench_lm"),
 ]

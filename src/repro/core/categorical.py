@@ -343,6 +343,7 @@ def cat_cofactors_factorized(
     stats: Optional[Dict[str, int]] = None,
     overrides: Optional[Dict[str, Relation]] = None,
     use_view_cache: Optional[bool] = None,
+    use_node_kernels: Optional[bool] = None,
 ) -> CatCofactors:
     """Categorical cofactors over the **factorized** join — ONE fused pass.
 
@@ -379,6 +380,7 @@ def cat_cofactors_factorized(
         backend=backend,
         overrides=overrides,
         use_view_cache=use_view_cache,
+        use_node_kernels=use_node_kernels,
     )
     queries = [AggregateQuery("base", (), 2)]
     queries += [AggregateQuery(f"g:{c}", (c,), 1) for c in cat]

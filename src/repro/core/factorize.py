@@ -74,9 +74,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kernel_ops
 from .api import StoreReads
 from .relation import Relation, group_key, join_keys, sort_merge_join
 from .variable_order import INTERCEPT, VariableOrder, validate
@@ -415,6 +417,7 @@ class FactorizedEngine:
         group_by: Sequence[str] = (),
         overrides: Optional[Dict[str, Relation]] = None,
         use_view_cache: Optional[bool] = None,
+        use_node_kernels: Optional[bool] = None,
     ) -> None:
         self.store = store
         # lazy-maintenance read barrier: fold the pending-delta log of the
@@ -444,6 +447,23 @@ class FactorizedEngine:
         self.xp = jnp if backend == "jax" else np
         self.dtype = dtype or (jnp.float32 if backend == "jax" else np.float64)
         self.scale = scale
+        # fused per-node kernels (repro.kernels.segment_view): extend-with-
+        # feature + GROUP BY collapse into ONE dispatch per node, grouping
+        # runs device-side, and all blocks of a plain regroup share one
+        # segment-reduce call.  Default: on for the jax backend (Pallas on
+        # TPU, the jitted XLA fusion elsewhere); the numpy oracle backend
+        # never uses them.  Bit-compatible grouping (same ids, same group
+        # order) keeps fused and unfused views interchangeable in the
+        # shared cache.
+        if use_node_kernels is None:
+            use_node_kernels = backend == "jax"
+        self.use_node_kernels = bool(use_node_kernels) and backend == "jax"
+        # device-resident grouping only where the device sort wins (it
+        # loses to host np.unique on the XLA CPU backend); tests flip this
+        # attribute to exercise the device path anywhere.
+        self.device_grouping = (
+            self.use_node_kernels and kernel_ops.fast_device_grouping()
+        )
         self.group_by = list(group_by)
         # delta mode: relations replaced by their append delta — the engine
         # evaluates the join with ``name`` swapped for ``overrides[name]``
@@ -752,12 +772,35 @@ class FactorizedEngine:
                             f"attributes {extra} survive to the intercept — "
                             "variable order misses nodes for them"
                         )
-                else:
-                    if node.name in self.features and degree >= 1:
-                        view = self._extend_with_feature(
-                            view, node.name, degree
+                    # canonical key layout: a multi-child intercept leaves
+                    # the root view in JOIN order (first-seen keys).  Every
+                    # other keyed view comes out of _group_rows in sorted-
+                    # key canonical order — regroup here too, so cached
+                    # views keep one layout and a delta fold (_merge_views,
+                    # which regroups over sorted keys) preserves it exactly.
+                    if keep and len(child_views) > 1:
+                        view = self._group_rows(
+                            view, sorted(view.keys), degree
                         )
-                    view = self._aggregate_out(view, node.name, keep, degree)
+                else:
+                    if (
+                        self.use_node_kernels
+                        and node.name in self.features
+                        and degree >= 1
+                        and view.num_rows > 0
+                    ):
+                        # fused node: extend + GROUP BY in one kernel pass
+                        view = self._extend_and_group(
+                            view, node.name, keep, degree
+                        )
+                    else:
+                        if node.name in self.features and degree >= 1:
+                            view = self._extend_with_feature(
+                                view, node.name, degree
+                            )
+                        view = self._aggregate_out(
+                            view, node.name, keep, degree
+                        )
             self._vc_put(node, keep, degree, view)
         cache[memo_key] = view
         return view
@@ -964,8 +1007,8 @@ class FactorizedEngine:
         feats = v1.feats + v2.feats if degree >= 1 else []
         return _View(keys=keys, c=c, l=l, q=q, feats=feats, degree=degree)
 
-    def _extend_with_feature(self, view: _View, attr: str, degree: int) -> _View:
-        xp, dt = self.xp, self.dtype
+    def _feature_values(self, view: _View, attr: str):
+        """Per-row (scaled) feature values for ``attr``, in backend dtype."""
         if attr not in view.keys:
             raise AssertionError(f"feature {attr} not present below its node")
         vals = self.attr_values[attr].astype(np.float64)[
@@ -973,7 +1016,11 @@ class FactorizedEngine:
         ]
         if self.scale is not None:
             vals = self.scale.transform(attr, vals)
-        x = xp.asarray(vals, dtype=dt)
+        return self.xp.asarray(vals, dtype=self.dtype)
+
+    def _extend_with_feature(self, view: _View, attr: str, degree: int) -> _View:
+        xp = self.xp
+        x = self._feature_values(view, attr)
         c, l = view.c, view.l
         l_new = xp.concatenate([(x * c)[:, None], l], axis=1)
         q_new = None
@@ -1008,33 +1055,88 @@ class FactorizedEngine:
         remaining = sorted(set(view.keys) - drop)
         return self._group_rows(view, remaining, degree)
 
+    def _extend_and_group(
+        self, view: _View, attr: str, keep: FrozenSet[str], degree: int
+    ) -> _View:
+        """The fused node: :meth:`_extend_with_feature` +
+        :meth:`_aggregate_out` in ONE ``segment_view`` kernel dispatch —
+        the extended ``[N, k+1, k+1]`` tensor never materializes in HBM.
+        Grouping is bit-compatible with the host path (same segment ids,
+        same sorted group order), so the resulting view is interchangeable
+        with the unfused one, cache entries included."""
+        x = self._feature_values(view, attr)
+        drop = set() if attr in keep else {attr}
+        remaining = sorted(set(view.keys) - drop)
+        seg, num, keys = self._group_ids(view, remaining)
+        c, l, q = kernel_ops.segment_view(
+            view.c,
+            x,
+            view.l,
+            view.q if degree == 2 else None,
+            seg,
+            num,
+            degree=degree,
+        )
+        return _View(
+            keys=keys,
+            c=c,
+            l=l,
+            q=q,
+            feats=[attr] + view.feats,
+            degree=degree,
+        )
+
+    def _group_ids(
+        self, view: _View, remaining: Sequence[str]
+    ) -> Tuple[np.ndarray, int, Dict[str, np.ndarray]]:
+        """Segment ids + surviving key columns for GROUP BY ``remaining``.
+
+        Group numbering is canonical — ascending packed-key order over the
+        (sorted) ``remaining`` attributes — whichever path computes it: the
+        host ``np.unique`` or the device sort (``kernel_ops.
+        group_ids_device``), which is bit-compatible and skips the per-node
+        host round-trip of the row ids."""
+        n = view.num_rows
+        if not remaining:
+            return np.zeros((n,), dtype=np.int32), 1, {}
+        doms = [self.domains[a] for a in remaining]
+        # group_key, not composite_key: a view keyed by many wide
+        # attributes (fact tables with ≫8 categorical keys) overflows
+        # the strict mixed-radix product, and a GROUP BY only needs
+        # within-call injectivity.
+        key = group_key([view.keys[a] for a in remaining], doms)
+        if self.device_grouping and n > 0:
+            seg, num, first = kernel_ops.group_ids_device(key)
+        else:
+            uniq, first, inv = np.unique(
+                key, return_index=True, return_inverse=True
+            )
+            seg = inv.astype(np.int32)
+            num = len(uniq)
+        keys = {a: view.keys[a][first] for a in remaining}
+        return seg, num, keys
+
     def _group_rows(
         self, view: _View, remaining: Sequence[str], degree: int
     ) -> _View:
         """GROUP BY ``remaining`` over a view's rows (segment-sum of every
         block) — the aggregation core shared by :meth:`_aggregate_out` and
         the delta-fold :meth:`_merge_views`."""
-        n = view.num_rows
-        if remaining:
-            doms = [self.domains[a] for a in remaining]
-            # group_key, not composite_key: a view keyed by many wide
-            # attributes (fact tables with ≫8 categorical keys) overflows
-            # the strict mixed-radix product, and a GROUP BY only needs
-            # within-call injectivity.
-            key = group_key([view.keys[a] for a in remaining], doms)
-            uniq, first, inv = np.unique(
-                key, return_index=True, return_inverse=True
+        seg, num, keys = self._group_ids(view, remaining)
+        if self.use_node_kernels and view.num_rows > 0:
+            # one multi-block kernel call instead of a scatter per block
+            c, l, q = kernel_ops.segment_blocks(
+                view.c,
+                view.l if degree >= 1 else None,
+                view.q if degree == 2 else None,
+                seg,
+                num,
+                degree=degree,
             )
-            seg = inv.astype(np.int32)
-            num = len(uniq)
-            keys = {a: view.keys[a][first] for a in remaining}
         else:
-            seg = np.zeros((n,), dtype=np.int32)
-            num = 1
-            keys = {}
-        c = self._segment_sum(view.c, seg, num)
-        l = self._segment_sum(view.l, seg, num) if degree >= 1 else None
-        q = self._segment_sum(view.q, seg, num) if degree == 2 else None
+            c = self._segment_sum(view.c, seg, num)
+            l = self._segment_sum(view.l, seg, num) if degree >= 1 else None
+            q = self._segment_sum(view.q, seg, num) if degree == 2 else None
         return _View(
             keys=keys, c=c, l=l, q=q, feats=view.feats, degree=degree
         )
@@ -1085,7 +1187,11 @@ class FactorizedEngine:
     def _merge_views(self, a: _View, b: _View, degree: int) -> _View:
         """Union of two keyed views over disjoint row sets: concatenate
         rows, then re-group over the full key set (duplicated key combos
-        sum — Prop. 4.1)."""
+        sum — Prop. 4.1).  Regrouping runs over ``sorted(keys)`` — the SAME
+        canonical order every keyed view is built with (``_group_rows``
+        sorts; multi-child intercept views are canonicalized in
+        ``_execute``) — so folding a delta into a cached view preserves its
+        key layout exactly: same key-dict order, same row order."""
         if list(a.feats) != list(b.feats) or set(a.keys) != set(b.keys):
             raise AssertionError(
                 f"cannot merge views: feats {a.feats} vs {b.feats}, "
@@ -1110,8 +1216,12 @@ class FactorizedEngine:
 
     def _segment_sum(self, data, seg, num: int):
         if self.backend == "jax":
-            out = jnp.zeros((num,) + data.shape[1:], dtype=data.dtype)
-            return out.at[jnp.asarray(seg)].add(data)
+            # jax.ops.segment_sum over zeros().at[seg].add(data): one fewer
+            # allocation + scatter dispatch per block (the non-kernel
+            # fallback; use_node_kernels batches all blocks in one call).
+            return jax.ops.segment_sum(
+                jnp.asarray(data), jnp.asarray(seg), num_segments=num
+            )
         out = np.zeros((num,) + data.shape[1:], dtype=data.dtype)
         np.add.at(out, seg, data)
         return out
@@ -1125,6 +1235,7 @@ def cofactors_factorized(
     dtype=None,
     scale=None,
     use_view_cache: Optional[bool] = None,
+    use_node_kernels: Optional[bool] = None,
 ) -> Cofactors:
     """Convenience wrapper: cofactors over the factorized join (paper §4.3)."""
     return FactorizedEngine(
@@ -1135,6 +1246,7 @@ def cofactors_factorized(
         dtype=dtype,
         scale=scale,
         use_view_cache=use_view_cache,
+        use_node_kernels=use_node_kernels,
     ).cofactors()
 
 
@@ -1146,6 +1258,7 @@ def grouped_cofactors_factorized(
     backend: str = "jax",
     dtype=None,
     scale=None,
+    use_node_kernels: Optional[bool] = None,
 ) -> GroupedView:
     """Convenience wrapper: GROUP BY ``group_by`` cofactors over the
     factorized join — the building block of the categorical algebra."""
@@ -1157,4 +1270,5 @@ def grouped_cofactors_factorized(
         dtype=dtype,
         scale=scale,
         group_by=group_by,
+        use_node_kernels=use_node_kernels,
     ).grouped_cofactors()

@@ -55,6 +55,9 @@ class RegressionConfig:
     use_cache: bool = False  # warm-retrain path via sufficient_stats
     categorical: Tuple[str, ...] = ()  # subset of features, sparse blocks
     use_fds: bool = True  # FD-reduced categorical solve
+    # fused per-node traversal kernels (repro.kernels.segment_view);
+    # None = engine default (on for the jax backend, off for numpy)
+    use_node_kernels: Optional[bool] = None
 
     def gd(self) -> GDConfig:
         return GDConfig(
@@ -234,7 +237,12 @@ def linear_regression(
             ).rescale(factors)
         else:
             cof = cofactors_factorized(
-                store, vorder, cols, backend=cfg.backend, scale=factors
+                store,
+                vorder,
+                cols,
+                backend=cfg.backend,
+                scale=factors,
+                use_node_kernels=cfg.use_node_kernels,
             )
         cof_matrix = cof.matrix()
         t2 = time.perf_counter()
@@ -319,7 +327,12 @@ def _linear_regression_categorical(
             )
         else:
             cof = cat_cofactors_factorized(
-                store, vorder, cont, run_cat, backend=cfg.backend
+                store,
+                vorder,
+                cont,
+                run_cat,
+                backend=cfg.backend,
+                use_node_kernels=cfg.use_node_kernels,
             )
     else:
         cof = cat_cofactors_materialized(

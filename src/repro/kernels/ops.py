@@ -8,6 +8,8 @@ methodology).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,11 +23,21 @@ from .segment_gram import (
     multi_segment_gram_kernel_call,
     segment_gram_kernel_call,
 )
+from .segment_view import (
+    DEFAULT_BM as SV_BM,
+    segment_reduce_kernel_call,
+    segment_view1_kernel_call,
+    segment_view_kernel_call,
+)
 
 __all__ = [
     "gram",
     "segment_gram",
     "multi_segment_gram",
+    "segment_view",
+    "segment_blocks",
+    "group_ids_device",
+    "fast_device_grouping",
     "moments",
     "flash_attention",
     "on_tpu",
@@ -158,6 +170,242 @@ def multi_segment_gram(
         xp, segp, total, n_seg, bm=bm, interpret=interpret
     )
     return [out[offs[i] : offs[i + 1]] for i in range(n_seg)]
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _sv_xla_deg1(c, x, l, seg, num_groups: int):
+    ext = jnp.concatenate([c[:, None], (x * c)[:, None], l], axis=1)
+    return jax.ops.segment_sum(ext, seg, num_segments=num_groups)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _sv_xla_deg2(c, x, l, q, seg, num_groups: int):
+    # compact payload: the packed [k+2, k+2] matrix is symmetric with
+    # duplicated borders, so only the 3 + 2k + k² distinct sums go through
+    # the row-sized assemble + scatter; the packed form is rebuilt from
+    # the [G]-sized sums afterwards (G ≪ N — negligible traffic).
+    n, k = l.shape
+    xc = x * c
+    xl = x[:, None] * l
+    payload = jnp.concatenate(
+        [
+            c[:, None],
+            xc[:, None],
+            (x * xc)[:, None],
+            l,
+            xl,
+            q.reshape(n, k * k),
+        ],
+        axis=1,
+    )
+    s = jax.ops.segment_sum(payload, seg, num_segments=num_groups)
+    sc, sxc, sx2c = s[:, :1], s[:, 1:2], s[:, 2:3]
+    sl = s[:, 3 : 3 + k]
+    sxl = s[:, 3 + k : 3 + 2 * k]
+    sq = s[:, 3 + 2 * k :].reshape(num_groups, k, k)
+    row0 = jnp.concatenate([sc, sxc, sl], axis=1)
+    row1 = jnp.concatenate([sxc, sx2c, sxl], axis=1)
+    rest = jnp.concatenate([sl[:, :, None], sxl[:, :, None], sq], axis=2)
+    return jnp.concatenate(
+        [row0[:, None, :], row1[:, None, :], rest], axis=1
+    )
+
+
+def _sv_packed(c, x, l, q, seg, gcount, degree, impl, bm, interpret):
+    """One chunk of the fused extend-and-group, in the packed layout of
+    ``segment_view_kernel_call``; ``seg`` ids ≥ ``gcount`` contribute
+    nothing (scatter drop / zero one-hot row)."""
+    if impl == "xla":
+        if degree == 1:
+            return _sv_xla_deg1(c, x, l, seg, gcount)
+        return _sv_xla_deg2(c, x, l, q, seg, gcount)
+    m, k = l.shape
+    # Pallas BlockSpecs reject zero-width blocks: pad k=0 views with one
+    # zero feature column (Gram-neutral) and slice the packed result back.
+    ke = max(k, 1)
+    bmv = bm or min(SV_BM, _round_up(max(m, 1), 8))
+    mp = _round_up(max(m, 1), bmv)
+    cp = jnp.zeros((mp, 1), c.dtype).at[:m, 0].set(c)
+    xv = jnp.zeros((mp, 1), x.dtype).at[:m, 0].set(x)
+    lp = jnp.zeros((mp, ke), l.dtype).at[:m, :k].set(l)
+    segp = jnp.full((mp, 1), gcount, jnp.int32).at[:m, 0].set(seg)
+    if degree == 1:
+        out = segment_view1_kernel_call(
+            cp, xv, lp, segp, gcount, bm=bmv, interpret=interpret
+        )
+        return out[:, : k + 2]
+    qp = jnp.zeros((mp, ke * ke), q.dtype).at[:m, : k * k].set(
+        q.reshape(m, k * k)
+    )
+    out = segment_view_kernel_call(
+        cp, xv, lp, qp, segp, gcount, bm=bmv, interpret=interpret
+    )
+    return out[:, : k + 2, : k + 2]
+
+
+def segment_view(
+    c: jnp.ndarray,
+    x: jnp.ndarray,
+    l: jnp.ndarray,
+    q: jnp.ndarray | None,
+    seg: jnp.ndarray,
+    num_groups: int,
+    *,
+    degree: int = 2,
+    bm: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+    impl: str | None = None,
+):
+    """Fused traversal node: extend a view's blocks with feature ``x`` AND
+    GROUP BY in one pass — ``(c [M], l [M, k], q [M, k, k])`` plus seg ids
+    become ``(c' [G], l' [G, k+1], q' [G, k+1, k+1])`` with the feature
+    prepended, and the extended ``[M, k+1, k+1]`` tensor never hits HBM.
+
+    ``impl='pallas'`` is the TPU kernel (default on TPU; interpret mode
+    elsewhere is for validation only).  ``impl='xla'`` (default off-TPU) is
+    the same one-dispatch fusion expressed as a jitted assemble +
+    ``jax.ops.segment_sum`` — the honest compiled fallback this container
+    benchmarks.  If the packed ``[G, k+2, k+2]`` accumulator exceeds
+    ``vmem_budget`` groups are processed in chunks with ids rebased per
+    chunk, exactly like ``segment_gram``.  Returns blocks in ``c``'s dtype.
+    """
+    if degree not in (1, 2):
+        raise ValueError(f"segment_view needs degree 1 or 2, got {degree}")
+    if impl is None:
+        impl = "pallas" if on_tpu() else "xla"
+    if interpret is None:
+        interpret = not on_tpu()
+    budget = min(vmem_budget or VMEM_ACC_BYTES, VMEM_ACC_BYTES)
+    c, x, l = jnp.asarray(c), jnp.asarray(x), jnp.asarray(l)
+    q = jnp.asarray(q) if degree == 2 else None
+    k = l.shape[1]
+    width = (k + 2) * (k + 2) if degree == 2 else (k + 2)
+    seg = jnp.asarray(seg).astype(jnp.int32)
+    # -1 leaves room for the +1 out-of-chunk pad group in the chunked path
+    g_chunk = max(1, min(num_groups, budget // max(width * 4, 1) - 1))
+    if g_chunk >= num_groups:
+        packed = _sv_packed(
+            c, x, l, q, seg, num_groups, degree, impl, bm, interpret
+        )
+    else:
+        outs = []
+        for g0 in range(0, num_groups, g_chunk):
+            gn = min(g_chunk, num_groups - g0)
+            rebased = seg - g0
+            rebased = jnp.where((rebased >= 0) & (rebased < gn), rebased, gn)
+            out = _sv_packed(
+                c, x, l, q, rebased, gn + 1, degree, impl, bm, interpret
+            )
+            outs.append(out[:gn])
+        packed = jnp.concatenate(outs, axis=0)
+    packed = packed.astype(c.dtype)
+    if degree == 2:
+        return packed[:, 0, 0], packed[:, 1:, 0], packed[:, 1:, 1:]
+    return packed[:, 0], packed[:, 1:], None
+
+
+def segment_blocks(
+    c: jnp.ndarray,
+    l: jnp.ndarray | None,
+    q: jnp.ndarray | None,
+    seg: jnp.ndarray,
+    num_groups: int,
+    *,
+    degree: int = 2,
+    bm: int | None = None,
+    interpret: bool | None = None,
+    vmem_budget: int | None = None,
+    impl: str | None = None,
+):
+    """Segment-reduce ALL of a view's blocks in one call: c [M] (+ l [M, k]
+    + q [M, k, k] per ``degree``) packed side by side through a single
+    kernel dispatch instead of one scatter per block.  Same impl/chunking
+    contract as :func:`segment_view`; returns ``(c', l', q')`` with Nones
+    past ``degree``, in ``c``'s dtype."""
+    if impl is None:
+        impl = "pallas" if on_tpu() else "xla"
+    if interpret is None:
+        interpret = not on_tpu()
+    budget = min(vmem_budget or VMEM_ACC_BYTES, VMEM_ACC_BYTES)
+    c = jnp.asarray(c)
+    m = c.shape[0]
+    k = l.shape[1] if degree >= 1 else 0
+    parts = [c[:, None]]
+    if degree >= 1:
+        parts.append(jnp.asarray(l))
+    if degree == 2:
+        parts.append(jnp.asarray(q).reshape(m, k * k))
+    data = jnp.concatenate(parts, axis=1)
+    w = data.shape[1]
+    seg = jnp.asarray(seg).astype(jnp.int32)
+    g_chunk = max(1, min(num_groups, budget // max(w * 4, 1) - 1))
+
+    def reduce_chunk(ids, gcount):
+        if impl == "xla":
+            return jax.ops.segment_sum(data, ids, num_segments=gcount)
+        bmv = bm or min(SV_BM, _round_up(max(m, 1), 8))
+        mp = _round_up(max(m, 1), bmv)
+        dp = jnp.zeros((mp, w), data.dtype).at[:m].set(data)
+        segp = jnp.full((mp, 1), gcount, jnp.int32).at[:m, 0].set(ids)
+        return segment_reduce_kernel_call(
+            dp, segp, gcount, bm=bmv, interpret=interpret
+        )
+
+    if g_chunk >= num_groups:
+        out = reduce_chunk(seg, num_groups)
+    else:
+        outs = []
+        for g0 in range(0, num_groups, g_chunk):
+            gn = min(g_chunk, num_groups - g0)
+            rebased = seg - g0
+            rebased = jnp.where((rebased >= 0) & (rebased < gn), rebased, gn)
+            outs.append(reduce_chunk(rebased, gn + 1)[:gn])
+        out = jnp.concatenate(outs, axis=0)
+    out = out.astype(c.dtype)
+    c_new = out[:, 0]
+    l_new = out[:, 1 : 1 + k] if degree >= 1 else None
+    q_new = (
+        out[:, 1 + k :].reshape(num_groups, k, k) if degree == 2 else None
+    )
+    return c_new, l_new, q_new
+
+
+def fast_device_grouping() -> bool:
+    """Whether :func:`group_ids_device` beats host ``np.unique`` here.
+    XLA's CPU sort is single-threaded and measurably slower than numpy's —
+    the device path pays off only where the sort actually runs on an
+    accelerator (and the ids would otherwise round-trip to the host)."""
+    return jax.default_backend() != "cpu"
+
+
+@jax.jit
+def _group_ids_jit(key):
+    order = jnp.argsort(key, stable=True)
+    sk = jnp.take(key, order)
+    start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sk[1:] != sk[:-1]]
+    )
+    gid = jnp.cumsum(start.astype(jnp.int32)) - 1
+    inv = jnp.zeros_like(gid).at[order].set(gid)
+    return order, start, inv
+
+
+def group_ids_device(key) -> tuple:
+    """Device-resident GROUP BY ids: stable sort + adjacent-difference run
+    detection instead of host ``np.unique``.  Returns ``(seg, num_groups,
+    first)`` bit-compatible with ``np.unique(key, return_index=True,
+    return_inverse=True)`` — groups numbered in ascending key order, and
+    ``first`` (host int array) the first occurrence of each group, ready to
+    gather host key columns.  ``seg`` stays on device, feeding
+    :func:`segment_view` / :func:`segment_blocks` without a host round-trip
+    of the per-row ids."""
+    key = jnp.asarray(key)
+    if key.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32), 0, np.zeros((0,), np.int64)
+    order, start, inv = _group_ids_jit(key)
+    first = np.asarray(order)[np.asarray(start)].astype(np.int64)
+    return inv, int(first.shape[0]), first
 
 
 def flash_attention(

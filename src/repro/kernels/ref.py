@@ -6,10 +6,19 @@ compiled on TPU) match these to float tolerance.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gram_ref", "segment_gram_ref", "moments_ref", "flash_ref"]
+__all__ = [
+    "gram_ref",
+    "segment_gram_ref",
+    "segment_view_ref",
+    "segment_blocks_ref",
+    "moments_ref",
+    "flash_ref",
+]
 
 
 def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
@@ -26,6 +35,47 @@ def segment_gram_ref(
     outer = x32[:, :, None] * x32[:, None, :]
     out = jnp.zeros((num_groups,) + outer.shape[1:], dtype=jnp.float32)
     return out.at[seg].add(outer, mode="drop")
+
+
+def segment_view_ref(c, x, l, q, seg, num_groups: int, degree: int = 2):
+    """Unfused oracle for the fused extend-and-group node: materialize the
+    extended blocks (exactly ``FactorizedEngine._extend_with_feature``), then
+    scatter-add each per segment.  Returns ``(c_new [G], l_new [G, k+1],
+    q_new [G, k+1, k+1] | None)`` in the inputs' dtype."""
+    c, x, l = jnp.asarray(c), jnp.asarray(x), jnp.asarray(l)
+    l_ext = jnp.concatenate([(x * c)[:, None], l], axis=1)
+    zeros = functools.partial(jnp.zeros, dtype=c.dtype)
+    c_new = zeros((num_groups,)).at[seg].add(c, mode="drop")
+    l_new = zeros((num_groups,) + l_ext.shape[1:]).at[seg].add(
+        l_ext, mode="drop"
+    )
+    if degree != 2:
+        return c_new, l_new, None
+    q = jnp.asarray(q)
+    xl = x[:, None] * l
+    top = jnp.concatenate([(x * x * c)[:, None, None], xl[:, None, :]], axis=2)
+    bot = jnp.concatenate([xl[:, :, None], q], axis=2)
+    q_ext = jnp.concatenate([top, bot], axis=1)
+    q_new = zeros((num_groups,) + q_ext.shape[1:]).at[seg].add(
+        q_ext, mode="drop"
+    )
+    return c_new, l_new, q_new
+
+
+def segment_blocks_ref(c, l, q, seg, num_groups: int, degree: int = 2):
+    """Per-block scatter-add oracle for the multi-block segment reduce:
+    ``(Σc, Σl, Σq)`` per group, Nones past ``degree``."""
+    c = jnp.asarray(c)
+    zeros = functools.partial(jnp.zeros, dtype=c.dtype)
+    c_new = zeros((num_groups,)).at[seg].add(c, mode="drop")
+    l_new = q_new = None
+    if degree >= 1:
+        l = jnp.asarray(l)
+        l_new = zeros((num_groups,) + l.shape[1:]).at[seg].add(l, mode="drop")
+    if degree == 2:
+        q = jnp.asarray(q)
+        q_new = zeros((num_groups,) + q.shape[1:]).at[seg].add(q, mode="drop")
+    return c_new, l_new, q_new
 
 
 def moments_ref(x: jnp.ndarray):

@@ -1,0 +1,243 @@
+"""Fused traversal-node kernels: extend-with-feature + GROUP BY in ONE pass.
+
+The factorized engine's per-node hot loop (``_extend_with_feature`` followed
+by ``_aggregate_out`` in ``repro.core.factorize``) used to cost 3+ dispatches
+and an ``[N, k+1, k+1]`` HBM intermediate: materialize the extended quad
+tensor ``[[x²c, (x·l)ᵀ], [x·l, q]]``, then scatter-add each of the c/l/q
+blocks separately.  These kernels fuse the whole node: each row's extended
+cofactor matrix is assembled **in registers/VMEM** and accumulated straight
+into the ``[num_groups, k+2, k+2]`` output via the one-hot matmul trick of
+``segment_gram`` — the extended tensor never touches HBM.
+
+Packed layout (degree 2).  For a view row with blocks (c, l[k], q[k, k]) and
+feature value x, the bordered (k+2)×(k+2) matrix
+
+    E = | c    x·c   lᵀ     |
+        | x·c  x²·c  (x·l)ᵀ |
+        | l    x·l   q      |
+
+segment-sums to exactly the extend-then-group result: the new view's blocks
+are slices of ``out = Σ_{seg(m)=g} E_m``::
+
+    c_new = out[:, 0, 0]      l_new = out[:, 1:, 0]      q_new = out[:, 1:, 1:]
+
+(degree 1 drops the quad rows: E = [c, x·c, lᵀ] of width k+2 and
+``l_new = out[:, 1:]``).  ``segment_reduce_kernel_call`` is the plain
+multi-block companion: one kernel call segment-reduces an arbitrary
+``[M, W]`` payload (the wrapper packs c|l|q side by side), replacing one
+scatter dispatch per block at non-feature nodes and delta folds.
+
+Grid/VMEM design mirrors ``segment_gram``: rows stream in ``[bm]`` blocks
+along a 1-D grid, the ``[G, ...]`` accumulator stays VMEM-resident across
+grid steps (wrapper chunks groups against ``vmem_budget`` otherwise), and
+padding rows carry the out-of-range segment id ``G`` so their one-hot row is
+all zeros — no masking branch in the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "segment_reduce_kernel_call",
+    "segment_view1_kernel_call",
+    "segment_view_kernel_call",
+]
+
+DEFAULT_BM = 256
+VMEM_ACC_BYTES = 8 * 1024 * 1024
+
+
+def _onehot(seg, num_groups: int):
+    bm = seg.shape[0]
+    return (
+        seg == jax.lax.broadcasted_iota(jnp.int32, (bm, num_groups), 1)
+    ).astype(jnp.float32)
+
+
+def _segment_view_kernel(
+    c_ref, x_ref, l_ref, q_ref, seg_ref, out_ref, *, num_groups: int
+):
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = c_ref[...].astype(jnp.float32)  # [bm, 1]
+    x = x_ref[...].astype(jnp.float32)  # [bm, 1]
+    l = l_ref[...].astype(jnp.float32)  # [bm, k]
+    q = q_ref[...].astype(jnp.float32)  # [bm, k*k]
+    bm, k = l.shape
+    xc = x * c
+    xl = x * l
+    # assemble the bordered (k+2)x(k+2) row matrices entirely on-chip
+    row0 = jnp.concatenate([c, xc, l], axis=1)  # [bm, k+2]
+    row1 = jnp.concatenate([xc, x * xc, xl], axis=1)  # [bm, k+2]
+    rest = jnp.concatenate(
+        [l[:, :, None], xl[:, :, None], q.reshape(bm, k, k)], axis=2
+    )  # [bm, k, k+2]
+    ext = jnp.concatenate(
+        [row0[:, None, :], row1[:, None, :], rest], axis=1
+    ).reshape(bm, (k + 2) * (k + 2))
+    acc = jax.lax.dot_general(
+        _onehot(seg_ref[...], num_groups),
+        ext,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += acc.reshape(num_groups, k + 2, k + 2)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "bm", "interpret"))
+def segment_view_kernel_call(
+    c: jnp.ndarray,
+    x: jnp.ndarray,
+    l: jnp.ndarray,
+    q: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw pallas_call on padded inputs: c/x [M, 1], l [M, K] (K ≥ 1),
+    q [M, K·K] row-major, seg [M, 1] int32 with padding rows set to
+    ``num_groups``; M % bm == 0.  Returns fp32 [num_groups, K+2, K+2] in the
+    packed layout above.  Use ``ops.segment_view`` generally."""
+    m, k = l.shape
+    assert m % bm == 0, (m, bm)
+    assert c.shape == (m, 1) and x.shape == (m, 1), (c.shape, x.shape)
+    assert q.shape == (m, k * k), (q.shape, k)
+    assert seg.shape == (m, 1), seg.shape
+    w = (k + 2) * (k + 2)
+    assert num_groups * w * 4 <= VMEM_ACC_BYTES, (
+        f"accumulator {num_groups}x{k + 2}x{k + 2} exceeds VMEM budget — "
+        "chunk groups in the wrapper"
+    )
+    nm = m // bm
+    kernel = functools.partial(_segment_view_kernel, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, k), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, k * k), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_groups, k + 2, k + 2), lambda mm: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, k + 2, k + 2), jnp.float32),
+        interpret=interpret,
+    )(c, x, l, q, seg)
+
+
+def _segment_view1_kernel(
+    c_ref, x_ref, l_ref, seg_ref, out_ref, *, num_groups: int
+):
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = c_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    l = l_ref[...].astype(jnp.float32)
+    ext = jnp.concatenate([c, x * c, l], axis=1)  # [bm, k+2] = [c, x·c, l]
+    out_ref[...] += jax.lax.dot_general(
+        _onehot(seg_ref[...], num_groups),
+        ext,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "bm", "interpret"))
+def segment_view1_kernel_call(
+    c: jnp.ndarray,
+    x: jnp.ndarray,
+    l: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Degree-1 variant: packed [num_groups, K+2] rows [c, x·c, l]."""
+    m, k = l.shape
+    assert m % bm == 0, (m, bm)
+    assert c.shape == (m, 1) and x.shape == (m, 1), (c.shape, x.shape)
+    assert seg.shape == (m, 1), seg.shape
+    assert num_groups * (k + 2) * 4 <= VMEM_ACC_BYTES, (
+        f"accumulator {num_groups}x{k + 2} exceeds VMEM budget — "
+        "chunk groups in the wrapper"
+    )
+    nm = m // bm
+    kernel = functools.partial(_segment_view1_kernel, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, k), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_groups, k + 2), lambda mm: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, k + 2), jnp.float32),
+        interpret=interpret,
+    )(c, x, l, seg)
+
+
+def _segment_reduce_kernel(data_ref, seg_ref, out_ref, *, num_groups: int):
+    m = pl.program_id(0)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        _onehot(seg_ref[...], num_groups),
+        data_ref[...].astype(jnp.float32),  # [bm, w] — packed c|l|q payload
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "bm", "interpret"))
+def segment_reduce_kernel_call(
+    data: jnp.ndarray,
+    seg: jnp.ndarray,
+    num_groups: int,
+    bm: int = DEFAULT_BM,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Multi-block segment reduce: data [M, W] (all of a view's c/l/q blocks
+    packed side by side by the wrapper), seg [M, 1] int32 with padding rows
+    set to ``num_groups``; M % bm == 0.  Returns fp32 [num_groups, W] — ONE
+    kernel call in place of one scatter dispatch per block.  Use
+    ``ops.segment_blocks`` generally."""
+    m, w = data.shape
+    assert m % bm == 0, (m, bm)
+    assert seg.shape == (m, 1), seg.shape
+    assert num_groups * w * 4 <= VMEM_ACC_BYTES, (
+        f"accumulator {num_groups}x{w} exceeds VMEM budget — "
+        "chunk groups in the wrapper"
+    )
+    nm = m // bm
+    kernel = functools.partial(_segment_reduce_kernel, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda mm: (mm, 0)),
+            pl.BlockSpec((bm, 1), lambda mm: (mm, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_groups, w), lambda mm: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, w), jnp.float32),
+        interpret=interpret,
+    )(data, seg)

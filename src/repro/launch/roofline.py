@@ -31,9 +31,11 @@ from .mesh import HW
 
 __all__ = [
     "RooflineTerms",
+    "TraversalNodeTerms",
     "collective_bytes",
     "roofline_terms",
     "model_flops",
+    "traversal_node_terms",
 ]
 
 _DTYPE_BYTES = {
@@ -183,6 +185,129 @@ class RooflineTerms:
             "roofline_fraction": self.roofline_fraction,
             "per_device_hbm_peak": self.per_device_hbm_peak,
         }
+
+
+@dataclasses.dataclass
+class TraversalNodeTerms:
+    """Analytic bytes/FLOPs for ONE factorized-traversal feature node —
+    the fused ``segment_view`` pass vs the unfused extend-then-group pair
+    (``repro.core.factorize``).  Shapes: ``n_rows`` view rows with blocks
+    (c [N], l [N, k], q [N, k, k]), reduced to ``num_groups`` groups at
+    ``degree`` ∈ {1, 2}; ``dtype_bytes`` per element, int32 segment ids.
+
+    The fused kernel reads each input block once and writes only the
+    ``[G, k+2, k+2]`` packed output — the extended ``[N, k+1, k+1]``
+    tensor never round-trips through memory.  The unfused path writes it
+    (extend) and reads it back (group), which is where the predicted
+    speedup (a pure byte ratio — both paths are bandwidth-bound, the
+    FLOP/byte intensity is far below any machine balance point) comes
+    from.  ``achieved_fraction(seconds)`` turns a measured node time into
+    the fraction of the HBM bandwidth bound the §Roofline table reports.
+    """
+
+    n_rows: int
+    k: int
+    num_groups: int
+    degree: int = 2
+    dtype_bytes: int = 4
+
+    def _block_elems(self, k: int) -> int:
+        """Elements per row of (c, l[, q]) blocks with k features."""
+        return 1 + k + (k * k if self.degree == 2 else 0)
+
+    @property
+    def packed_width(self) -> int:
+        w = self.k + 2
+        return w * w if self.degree == 2 else w
+
+    @property
+    def bytes_in(self) -> float:
+        """Input blocks + feature column + int32 segment ids."""
+        n, b = self.n_rows, self.dtype_bytes
+        return n * (self._block_elems(self.k) + 1) * b + n * 4
+
+    @property
+    def bytes_fused(self) -> float:
+        return self.bytes_in + self.num_groups * self.packed_width * self.dtype_bytes
+
+    @property
+    def bytes_unfused(self) -> float:
+        """Extend writes the [N, k+1(, k+1)] blocks, group reads them back
+        and writes the grouped result — two extra N-sized round-trips."""
+        n, b = self.n_rows, self.dtype_bytes
+        ext = self._block_elems(self.k + 1)
+        return (
+            self.bytes_in
+            + 2.0 * n * ext * b  # write + re-read of the extended blocks
+            + n * b  # re-read of c by the group stage
+            + self.num_groups * ext * b
+        )
+
+    @property
+    def flops_fused(self) -> float:
+        """Assembly muls (x·c, x²·c, x·l) + one add per packed cell."""
+        n = self.n_rows
+        muls = n * (self.k + 2) if self.degree == 2 else n * 1
+        return muls + n * self.packed_width
+
+    @property
+    def arith_intensity(self) -> float:
+        return self.flops_fused / self.bytes_fused if self.bytes_fused else 0.0
+
+    @property
+    def t_memory_fused(self) -> float:
+        return self.bytes_fused / HW.hbm_bw
+
+    @property
+    def t_memory_unfused(self) -> float:
+        return self.bytes_unfused / HW.hbm_bw
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Bandwidth-bound fused-over-unfused node throughput ratio."""
+        return self.bytes_unfused / self.bytes_fused if self.bytes_fused else 0.0
+
+    def achieved_gbs(self, seconds: float) -> float:
+        return self.bytes_fused / seconds / 1e9 if seconds > 0 else 0.0
+
+    def achieved_fraction(self, seconds: float) -> float:
+        """Measured node time → fraction of the HBM bandwidth bound."""
+        return self.t_memory_fused / seconds if seconds > 0 else 0.0
+
+    def to_json(self) -> Dict:
+        return {
+            "n_rows": self.n_rows,
+            "k": self.k,
+            "num_groups": self.num_groups,
+            "degree": self.degree,
+            "dtype_bytes": self.dtype_bytes,
+            "bytes_fused": self.bytes_fused,
+            "bytes_unfused": self.bytes_unfused,
+            "flops_fused": self.flops_fused,
+            "arith_intensity": self.arith_intensity,
+            "t_memory_fused": self.t_memory_fused,
+            "predicted_speedup": self.predicted_speedup,
+        }
+
+
+def traversal_node_terms(
+    n_rows: int,
+    k: int,
+    num_groups: int,
+    degree: int = 2,
+    dtype_bytes: int = 4,
+) -> TraversalNodeTerms:
+    """Per-node traversal accounting for the §Roofline audit: bytes/FLOPs
+    of one fused extend-and-group node from its view shape and degree."""
+    if degree not in (1, 2):
+        raise ValueError(f"degree must be 1 or 2, got {degree}")
+    return TraversalNodeTerms(
+        n_rows=int(n_rows),
+        k=int(k),
+        num_groups=int(num_groups),
+        degree=int(degree),
+        dtype_bytes=int(dtype_bytes),
+    )
 
 
 def model_flops(cfg, shape) -> float:

@@ -334,3 +334,12 @@ def test_compare_micro_timings_stay_quiet(tmp_path):
     _write_artifact(str(tmp_path / "base"), summary, {"k": base})
     _write_artifact(str(tmp_path / "new"), summary, {"k": new})
     assert compare_dirs(str(tmp_path / "base"), str(tmp_path / "new")) == 0
+
+
+def test_traversal_suite_registered():
+    """bench_traversal rides smoke + nightly through the SUITES registry;
+    its node_fusion_speedup field is auto-gated by compare.py's _speedup
+    suffix rule."""
+    suites = run_mod.default_suites(only=["traversal"])
+    assert [name for name, _ in suites] == ["fused traversal nodes (roofline)"]
+    assert "traversal" in run_mod.suite_names()

@@ -223,3 +223,189 @@ def test_multi_segment_gram_vmem_fallback_matches_fused():
 def test_multi_segment_gram_empty_columns():
     x = rand((10, 2), jnp.float32)
     assert ops.multi_segment_gram(x, jnp.zeros((10, 0), jnp.int32), []) == []
+
+
+# ---------------------------------------------------------------------------
+# fused traversal node: segment_view / segment_blocks
+# ---------------------------------------------------------------------------
+
+def _sv_inputs(m, k, g, dtype=jnp.float32, key=KEY):
+    ks = jax.random.split(key, 4)
+    c = rand((m,), dtype, ks[0])
+    x = rand((m,), dtype, ks[1])
+    l = rand((m, k), dtype, ks[2])
+    q = rand((m, k, k), dtype, ks[3])
+    seg = jax.random.randint(KEY, (m,), 0, g)
+    return c, x, l, q, seg
+
+
+def _assert_view_eq(got, expect, rtol=1e-5, atol=1e-4):
+    for a, b in zip(got, expect):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=rtol, atol=atol
+            )
+
+
+@pytest.mark.parametrize("m,g", [(5, 1), (64, 4), (200, 17), (1000, 3)])
+@pytest.mark.parametrize("k", [1, 4])
+@pytest.mark.parametrize("degree", [1, 2])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_segment_view_sweep(m, g, k, degree, impl):
+    """One fused dispatch == materialized extend + per-block scatter."""
+    c, x, l, q, seg = _sv_inputs(m, k, g)
+    got = ops.segment_view(
+        c, x, l, q if degree == 2 else None, seg, g, degree=degree, impl=impl
+    )
+    expect = ref.segment_view_ref(c, x, l, q, seg, g, degree=degree)
+    _assert_view_eq(got, expect)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_segment_view_k0_padding(impl):
+    """Views with no features yet (k=0): the Pallas path pads a zero
+    feature column — the slice back must be exact."""
+    m, g = 37, 5
+    c, x, _, _, seg = _sv_inputs(m, 1, g)
+    l = jnp.zeros((m, 0), jnp.float32)
+    q = jnp.zeros((m, 0, 0), jnp.float32)
+    got = ops.segment_view(c, x, l, q, seg, g, degree=2, impl=impl)
+    expect = ref.segment_view_ref(c, x, l, q, seg, g, degree=2)
+    _assert_view_eq(got, expect)
+    assert got[1].shape == (g, 1) and got[2].shape == (g, 1, 1)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("budget", [100, 400, 1000])
+def test_segment_view_forced_chunking(impl, budget):
+    """A tiny vmem_budget drives the rebased-id group-chunking branch —
+    same numbers as the one-shot path and the oracle (mirrors
+    test_segment_gram_forced_chunking_matches_unchunked)."""
+    m, k, g = 157, 3, 11  # (k+2)^2*4 = 100 B/group: budget 100 -> chunked
+    c, x, l, q, seg = _sv_inputs(m, k, g)
+    chunked = ops.segment_view(
+        c, x, l, q, seg, g, degree=2, impl=impl, vmem_budget=budget
+    )
+    one_shot = ops.segment_view(c, x, l, q, seg, g, degree=2, impl=impl)
+    _assert_view_eq(chunked, one_shot, rtol=1e-6, atol=1e-6)
+    _assert_view_eq(chunked, ref.segment_view_ref(c, x, l, q, seg, g))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_segment_view_empty_segments(impl):
+    """Groups with no rows must come out exactly zero (not NaN/garbage),
+    and out-of-range ids must drop."""
+    m, k, g = 40, 2, 8
+    c, x, l, q, _ = _sv_inputs(m, k, g)
+    seg = jnp.where(jnp.arange(m) % 2 == 0, 1, 6)  # only groups 1 and 6
+    got = ops.segment_view(c, x, l, q, seg, g, degree=2, impl=impl)
+    expect = ref.segment_view_ref(c, x, l, q, seg, g, degree=2)
+    _assert_view_eq(got, expect)
+    empty = [i for i in range(g) if i not in (1, 6)]
+    assert np.all(np.asarray(got[0])[empty] == 0.0)
+    assert np.all(np.asarray(got[2])[empty] == 0.0)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("degree", [1, 2])
+def test_segment_view_single_group(impl, degree):
+    """num_groups=1 (aggregating an attribute fully out) — the packed
+    matrix collapses to the global extended cofactor block."""
+    m, k = 63, 3
+    c, x, l, q, _ = _sv_inputs(m, k, 4)
+    seg = jnp.zeros((m,), jnp.int32)
+    got = ops.segment_view(
+        c, x, l, q if degree == 2 else None, seg, 1, degree=degree, impl=impl
+    )
+    expect = ref.segment_view_ref(c, x, l, q, seg, 1, degree=degree)
+    _assert_view_eq(got, expect)
+
+
+def test_segment_view_zero_rows():
+    c = jnp.zeros((0,), jnp.float32)
+    l = jnp.zeros((0, 2), jnp.float32)
+    q = jnp.zeros((0, 2, 2), jnp.float32)
+    seg = jnp.zeros((0,), jnp.int32)
+    got = ops.segment_view(c, c, l, q, seg, 3, degree=2, impl="xla")
+    assert got[0].shape == (3,) and np.all(np.asarray(got[0]) == 0.0)
+
+
+def test_segment_view_fp64_xla():
+    """Under x64 the fused XLA path accumulates in fp64 and matches the
+    fp64 oracle bit-for-bit-scale (1e-15 rel), preserving the numpy-oracle
+    comparisons the engine's property tests rely on."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(3)
+        m, k, g = 200, 3, 7
+        c = jnp.asarray(rng.standard_normal(m))
+        x = jnp.asarray(rng.standard_normal(m))
+        l = jnp.asarray(rng.standard_normal((m, k)))
+        q = jnp.asarray(rng.standard_normal((m, k, k)))
+        seg = jnp.asarray(rng.integers(0, g, m).astype(np.int32))
+        assert c.dtype == jnp.float64
+        got = ops.segment_view(c, x, l, q, seg, g, degree=2, impl="xla")
+        expect = ref.segment_view_ref(c, x, l, q, seg, g, degree=2)
+        assert got[0].dtype == jnp.float64
+        _assert_view_eq(got, expect, rtol=1e-13, atol=1e-13)
+
+
+def test_segment_view_rejects_bad_degree():
+    c, x, l, q, seg = _sv_inputs(8, 2, 2)
+    with pytest.raises(ValueError):
+        ops.segment_view(c, x, l, q, seg, 2, degree=3)
+
+
+@pytest.mark.parametrize("m,g", [(5, 1), (200, 17)])
+@pytest.mark.parametrize("degree", [0, 1, 2])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_segment_blocks_sweep(m, g, degree, impl):
+    """One multi-block reduce == one scatter per block."""
+    k = 3
+    c, _, l, q, seg = _sv_inputs(m, k, g)
+    got = ops.segment_blocks(
+        c,
+        l if degree >= 1 else None,
+        q if degree == 2 else None,
+        seg,
+        g,
+        degree=degree,
+        impl=impl,
+    )
+    expect = ref.segment_blocks_ref(c, l, q, seg, g, degree=degree)
+    _assert_view_eq(got, expect)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_segment_blocks_forced_chunking(impl):
+    m, k, g = 91, 2, 9
+    c, _, l, q, seg = _sv_inputs(m, k, g)
+    chunked = ops.segment_blocks(
+        c, l, q, seg, g, degree=2, impl=impl, vmem_budget=80
+    )
+    one_shot = ops.segment_blocks(c, l, q, seg, g, degree=2, impl=impl)
+    _assert_view_eq(chunked, one_shot, rtol=1e-6, atol=1e-6)
+    _assert_view_eq(chunked, ref.segment_blocks_ref(c, l, q, seg, g))
+
+
+def test_group_ids_device_matches_np_unique():
+    """The device sort-based grouping is bit-compatible with the host
+    np.unique path: same segment ids, same group numbering (ascending key
+    order), same first-occurrence gather indices."""
+    rng = np.random.default_rng(7)
+    for n, dom in [(1, 1), (37, 5), (500, 40), (64, 64)]:
+        key = rng.integers(0, dom, n).astype(np.int64)
+        uniq, first, inv = np.unique(key, return_index=True, return_inverse=True)
+        seg, num, dfirst = ops.group_ids_device(key)
+        assert num == len(uniq)
+        np.testing.assert_array_equal(np.asarray(seg), inv.astype(np.int32))
+        np.testing.assert_array_equal(key[dfirst], uniq)
+        # ties resolve to identical gather targets: same key values
+        np.testing.assert_array_equal(key[dfirst], key[first])
+
+
+def test_group_ids_device_empty():
+    seg, num, first = ops.group_ids_device(np.zeros((0,), np.int64))
+    assert num == 0 and seg.shape == (0,) and first.shape == (0,)

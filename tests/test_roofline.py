@@ -84,3 +84,48 @@ def test_hw_constants_match_assignment():
     assert HW.peak_flops_bf16 == 197e12
     assert HW.hbm_bw == 819e9
     assert HW.ici_bw == 50e9
+
+
+def test_traversal_node_terms_math():
+    from repro.launch.roofline import traversal_node_terms
+
+    n, k, g, b = 1000, 4, 32, 4
+    t = traversal_node_terms(n, k, g, degree=2, dtype_bytes=b)
+    blk = 1 + k + k * k  # c + l + q elements per row
+    ext = 1 + (k + 1) + (k + 1) * (k + 1)
+    assert t.packed_width == (k + 2) * (k + 2)
+    assert t.bytes_in == n * (blk + 1) * b + n * 4
+    assert t.bytes_fused == t.bytes_in + g * (k + 2) * (k + 2) * b
+    # the unfused path round-trips the extended [N, k+1, k+1] blocks
+    assert t.bytes_unfused == t.bytes_in + 2 * n * ext * b + n * b + g * ext * b
+    assert t.flops_fused == n * (k + 2) + n * t.packed_width
+    # the whole point: fusion wins on bytes, and the node is memory-bound
+    assert t.predicted_speedup > 1.5
+    assert t.arith_intensity < 2.0  # FLOPs/byte far under machine balance
+
+
+def test_traversal_node_terms_degree1():
+    from repro.launch.roofline import traversal_node_terms
+
+    t = traversal_node_terms(500, 3, 10, degree=1)
+    assert t.packed_width == 5
+    assert t.predicted_speedup > 1.0
+    import pytest as _pytest
+
+    with _pytest.raises(ValueError):
+        traversal_node_terms(10, 2, 2, degree=3)
+
+
+def test_traversal_node_terms_achieved():
+    from repro.launch.roofline import traversal_node_terms
+
+    t = traversal_node_terms(65536, 4, 256)
+    # at exactly the memory-bound time, the achieved fraction is 1.0 and
+    # achieved bandwidth equals the HBM figure
+    sec = t.t_memory_fused
+    np.testing.assert_allclose(t.achieved_fraction(sec), 1.0)
+    np.testing.assert_allclose(t.achieved_gbs(sec) * 1e9, HW.hbm_bw)
+    assert t.achieved_fraction(0.0) == 0.0
+    j = t.to_json()
+    assert j["predicted_speedup"] == t.predicted_speedup
+    assert j["n_rows"] == 65536
